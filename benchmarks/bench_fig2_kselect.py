@@ -1,0 +1,32 @@
+"""Fig 2: recall@10 and QPS vs per-layer filter size k.
+
+(a) sweep k(layer1) at fixed k(layer0)=16;
+(b) sweep k(layer0) at fixed k(layer1)=8.
+Also runs the automated knee-finding (core/kselect.select_schedule) and
+reports the schedule it picks — the paper picked (16, 8, 3...).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, load_bench_db
+from repro.core.kselect import select_schedule, sweep_k0, sweep_k1
+
+
+def main(n_points: int = 50_000, n_queries: int = 100):
+    cfg, x, g, pca, x_low, q, gt = load_bench_db(n_points, n_queries)
+    rows = []
+    for p in sweep_k1(g, x_low, pca, q, gt, k0=16):
+        rows.append((f"fig2a/k1={p.k1}", 1e6 / p.qps_hbm,
+                     f"recall={p.recall:.3f};qps_ddr4={p.qps_ddr4:.0f};"
+                     f"qps_hbm={p.qps_hbm:.0f}"))
+    for p in sweep_k0(g, x_low, pca, q, gt, k1=8):
+        rows.append((f"fig2b/k0={p.k0}", 1e6 / p.qps_hbm,
+                     f"recall={p.recall:.3f};qps_ddr4={p.qps_ddr4:.0f};"
+                     f"qps_hbm={p.qps_hbm:.0f}"))
+    sched, _ = select_schedule(g, x_low, pca, q, gt)
+    rows.append(("fig2/selected_schedule", 0.0,
+                 f"k={'-'.join(map(str, sched))};paper=16-8-3-3-3-3"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

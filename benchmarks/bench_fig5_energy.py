@@ -1,0 +1,36 @@
+"""Fig 5: normalized single-query energy (vs HNSW-Std), with the
+DRAM-vs-core breakdown. Paper claims: DRAM 82-87% (DDR4) / 63-72% (HBM)
+of total; pHNSW saves up to 57.4% vs HNSW-Std; pHNSW vs pHNSW-Sep ~ -11%
+(same bytes, lower latency -> less idle energy)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, load_bench_db
+from repro.core.cost_model import table3, hw_variant_stats
+from repro.core.search_ref import run_queries
+
+
+def main(n_points: int = 50_000, n_queries: int = 200):
+    cfg, x, g, pca, x_low, q, gt = load_bench_db(n_points, n_queries)
+    _, st_h = run_queries(g, q, gt, algo="hnsw", hw_mode=True)
+    _, st_p = run_queries(g, q, gt, algo="phnsw", x_low=x_low, pca=pca)
+    _, st_s = run_queries(g, q, gt, algo="phnsw", x_low=x_low, pca=pca,
+                          layout="separate")
+    t3 = table3(hw_variant_stats(st_h, st_p, st_s), n_queries=len(q),
+                dim=x.shape[1], d_low=x_low.shape[1])
+    rows = []
+    for dram in ("DDR4", "HBM"):
+        base = t3["HNSW-Std"][dram].energy_uj
+        for variant in ("HNSW-Std", "pHNSW-Sep", "pHNSW"):
+            c = t3[variant][dram]
+            rows.append((f"fig5/{variant}/{dram}", c.total_ns / 1e3,
+                         f"energy_uj={c.energy_uj:.3f};"
+                         f"norm={c.energy_uj / base:.3f};"
+                         f"dram_share={c.dram_energy_share:.2f}"))
+    saved = 1 - t3["pHNSW"]["DDR4"].energy_uj / t3["HNSW-Std"]["DDR4"].energy_uj
+    rows.append(("fig5/savings_ddr4", 0.0,
+                 f"saved={saved:.1%};paper=57.4%max"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

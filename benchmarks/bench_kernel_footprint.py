@@ -1,0 +1,65 @@
+"""Per-kernel cost table (the JAX analogue of the paper's Fig 4 area
+breakdown — RTL area is not reproducible; the comparable artifact is
+each kernel's VMEM block footprint, FLOPs, and measured wall time in
+interpret/ref mode on this host)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+    B, M, dl, K, D = 64, 32, 15, 16, 128
+    x = jnp.asarray(rng.standard_normal((B, M, dl)), jnp.float32)
+    qv = jnp.asarray(rng.standard_normal((B, dl)), jnp.float32)
+    us = _time(ops.dist_l, x, qv)
+    vmem = (8 * M * dl + 8 * dl + 8 * M) * 4
+    rows.append(("kernels/dist_l", us,
+                 f"vmem_block_bytes={vmem};flops={2 * B * M * dl * 3}"))
+    d = ops.dist_l(x, qv)
+    us = _time(lambda dd: ops.ksort_l(dd, K), d)
+    rows.append(("kernels/ksort_l", us,
+                 f"vmem_block_bytes={8 * M * M * 4};cmp_matrix={M}x{M}"))
+    xh = jnp.asarray(rng.standard_normal((B, K, D)), jnp.float32)
+    qh = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    us = _time(ops.dist_h, xh, qh)
+    rows.append(("kernels/dist_h", us,
+                 f"vmem_block_bytes={(8 * K * D + 8 * D) * 4};"
+                 f"flops={2 * B * K * D * 3}"))
+    us = _time(lambda a, b: ops.fused_filter(a, b, K), x, qv)
+    rows.append(("kernels/fused_filter", us,
+                 f"hbm_saved_per_call_bytes={2 * B * M * 4}"))
+    Bq, H, S, hd = 1, 4, 512, 64
+    qa = jnp.asarray(rng.standard_normal((Bq, H, S, hd)), jnp.bfloat16)
+    us = _time(lambda a: ops.flash_attention(a, a, a, causal=True), qa)
+    rows.append(("kernels/flash_attention", us,
+                 f"flops={4 * Bq * H * S * S * hd // 2};bq=128;bk=128"))
+    qd = jnp.asarray(rng.standard_normal((Bq, H, hd)), jnp.bfloat16)
+    kd = jnp.asarray(rng.standard_normal((Bq, H, 4096, hd)), jnp.bfloat16)
+    ln = jnp.full((Bq,), 4096, jnp.int32)
+    us = _time(lambda a, b, c: ops.decode_attention(a, b, b, c), qd, kd, ln)
+    rows.append(("kernels/decode_attention", us,
+                 f"cache_bytes_read={2 * Bq * H * 4096 * hd * 2}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Shared benchmark fixtures: the cached SIFT-like graph + queries."""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+DATA_DIR = ROOT / "experiments" / "data"
+
+
+def load_bench_db(n_points: int = 50_000, n_queries: int = 200):
+    """(cfg, x, graph, pca, x_low, queries, ground_truth) — cached."""
+    from repro.configs.sift1m_phnsw import SMALL
+    from repro.core.graph import cached_graph
+    from repro.core.pca import fit_pca
+    from repro.data.vectors import (brute_force_topk, make_queries,
+                                    make_sift_like)
+
+    cfg = SMALL if n_points == SMALL.n_points else \
+        SMALL.__class__(**{**SMALL.__dict__, "n_points": n_points,
+                           "name": f"sift{n_points // 1000}k"})
+    x = make_sift_like(cfg.n_points)
+    g = cached_graph(x, cfg, DATA_DIR)
+    pca = fit_pca(x, cfg.d_low)
+    x_low = pca.transform(x).astype(np.float32)
+    qf = DATA_DIR / f"queries_{cfg.name}.npz"
+    if qf.exists():
+        z = np.load(qf)
+        q, gt = z["q"][:n_queries], z["gt"][:n_queries]
+    else:
+        q = make_queries(x, n_queries)
+        gt = brute_force_topk(x, q, cfg.recall_at)
+        DATA_DIR.mkdir(parents=True, exist_ok=True)
+        np.savez(qf, q=q, gt=gt)
+    return cfg, x, g, pca, x_low, q, gt
+
+
+def emit(rows):
+    """Print the required ``name,us_per_call,derived`` CSV rows."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    return rows

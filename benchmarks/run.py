@@ -1,0 +1,67 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (plus a roofline summary appendix
+when dry-run artifacts exist).
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller database (8k points) for quick runs")
+    ap.add_argument("--n-points", type=int, default=None)
+    args = ap.parse_args()
+    n_points = args.n_points or (8_000 if args.fast else 50_000)
+    n_queries = 64 if args.fast else 200
+
+    from benchmarks import (bench_fig2_kselect, bench_fig5_energy,
+                            bench_kernel_footprint, bench_pq_ablation,
+                            bench_table3_qps)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod, kwargs in (
+        (bench_table3_qps, dict(n_points=n_points, n_queries=n_queries)),
+        (bench_fig2_kselect, dict(n_points=n_points,
+                                  n_queries=min(n_queries, 100))),
+        (bench_fig5_energy, dict(n_points=n_points, n_queries=n_queries)),
+        (bench_kernel_footprint, {}),
+        (bench_pq_ablation, dict(n_points=n_points,
+                                 n_queries=min(n_queries, 64))),
+    ):
+        try:
+            mod.main(**kwargs)
+        except Exception:
+            print(f"# {mod.__name__} FAILED", file=sys.stderr)
+            traceback.print_exc()
+            raise
+    # roofline appendix (if the dry-run has been run)
+    try:
+        from repro.launch.roofline import load_all
+        rows = load_all("pod16x16")
+        if rows:
+            for r in rows:
+                step_s = max(r["compute_s"], r["memory_s"],
+                             r["collective_s"])
+                print(f"roofline/{r['arch']}/{r['shape']},"
+                      f"{step_s * 1e6:.1f},"
+                      f"bottleneck={r['bottleneck']};"
+                      f"roofline_frac={r['roofline_fraction']};"
+                      f"useful_flops={r['useful_flops_ratio']}")
+    except Exception:
+        pass
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

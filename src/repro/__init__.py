@@ -1,0 +1,4 @@
+"""repro: pHNSW (PCA-filtered HNSW ANN search) algorithm--hardware
+co-design, reproduced and extended as a multi-pod JAX framework."""
+
+__version__ = "0.1.0"

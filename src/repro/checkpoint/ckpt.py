@@ -1,0 +1,126 @@
+"""Checkpointing: atomic, sharded, async — the restart half of fault
+tolerance.
+
+Format: one directory per step, one .npy per pytree leaf (path-encoded
+file names) + a manifest.json with step/config/tree structure. Writes go
+to ``<dir>.tmp`` and are renamed only after fsync — a killed job can
+never leave a half-written "latest" checkpoint. ``CheckpointManager``
+saves on a background thread (training continues while the previous
+step's arrays stream to disk) and keeps the last ``keep`` checkpoints.
+
+On restore, leaves are ``device_put`` against the CURRENT mesh's
+shardings — restoring onto a different mesh shape (elastic downscale
+after a failure, or scale-up) is the same code path; see
+``distributed/fault.py::remesh``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save_checkpoint(ckpt_dir: Path, step: int, tree: Any,
+                    extra: Optional[Dict] = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat, _ = _flatten(tree)
+    names = {}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(leaf)
+        np.save(tmp / f"leaf_{i:05d}.npy", arr)
+        names[key] = {"file": f"leaf_{i:05d}.npy", "dtype": str(arr.dtype),
+                      "shape": list(arr.shape)}
+    manifest = {"step": step, "leaves": names, "extra": extra or {}}
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(ckpt_dir: Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+             if (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: Path, step: int, like: Any,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; if ``shardings`` given,
+    leaves are device_put with them (any mesh shape)."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat_like, treedef = _flatten(like)
+    sh_flat = None
+    if shardings is not None:
+        sh_flat, _ = _flatten(shardings)
+    leaves = {}
+    for key, meta in manifest["leaves"].items():
+        arr = np.load(d / meta["file"])
+        if sh_flat is not None and key in sh_flat:
+            leaves[key] = jax.device_put(arr, sh_flat[key])
+        else:
+            leaves[key] = jax.numpy.asarray(arr)
+    ordered = [leaves[k] for k in flat_like.keys()]
+    # tree_unflatten needs the ORIGINAL leaf order, not sorted:
+    flat_paths = [k for k in flat_like.keys()]
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaves[k] for k in flat_paths])
+
+
+class CheckpointManager:
+    """Async checkpointing with retention."""
+
+    def __init__(self, ckpt_dir: Path, keep: int = 3):
+        self.dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save_async(self, step: int, tree: Any, extra=None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot off-device
+
+        def work():
+            save_checkpoint(self.dir, step, host_tree, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.dir.glob("step_*"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)

@@ -1,0 +1,135 @@
+"""Distributed pHNSW: database sharded across the mesh (the paper's
+Section VI future work — "partitioning the billion-scale database into
+smaller parts while preserving efficient coordination" — built here as a
+first-class feature).
+
+Scheme (scale-out ANN as deployed in practice):
+  * the dataset is partitioned into P shards along the ``model`` axis;
+    each shard gets its own independently-built HNSW graph (host-side,
+    embarrassingly parallel at build time);
+  * queries are sharded along the ``data`` (+``pod``) axes and
+    REPLICATED along ``model``;
+  * every device runs the fixed-shape batched pHNSW search
+    (search_jax) over its local shard — identical compiled program, no
+    cross-device traffic during traversal;
+  * per-shard top-ef results are all-gathered over ``model`` and merged
+    with one kSort.L pass (global index = shard offset + local index).
+
+Collective cost per query batch: one all-gather of [P, B_local, ef]
+(dist, idx) pairs — a few KB; the traversal itself is communication-free.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import PHNSWConfig
+from repro.core.graph import build_hnsw
+from repro.core.pca import PCA, fit_pca
+from repro.core.search_jax import (PackedDB, PackedLayer, build_packed,
+                                   _search_batched_impl)
+from repro.kernels import ops
+
+
+@dataclass
+class ShardedDB:
+    """Stacked per-shard databases: every leaf has leading dim P."""
+    adj: List[jax.Array]          # per layer: [P, N, M_l]
+    packed_low: List[jax.Array]   # per layer: [P, N, M_l, dl]
+    low: jax.Array                # [P, N, dl]
+    high: jax.Array               # [P, N, D]
+    entries: jax.Array            # [P] int32
+    offsets: jax.Array            # [P] int32 global-id offset per shard
+    cfg: PHNSWConfig
+
+
+def build_sharded(x: np.ndarray, cfg: PHNSWConfig, pca: PCA,
+                  n_shards: int, *, seed: int = 0) -> ShardedDB:
+    n = len(x)
+    per = n // n_shards
+    dbs = []
+    offsets = []
+    for s in range(n_shards):
+        xs = x[s * per:(s + 1) * per]
+        g = build_hnsw(xs, cfg, seed=seed + s)
+        xl = pca.transform(xs).astype(np.float32)
+        dbs.append(build_packed(g, xl))
+        offsets.append(s * per)
+    stack = lambda xs: jnp.stack(xs)
+    n_layers = len(dbs[0].layers)
+    return ShardedDB(
+        adj=[stack([db.layers[l].adj for db in dbs])
+             for l in range(n_layers)],
+        packed_low=[stack([db.layers[l].packed_low for db in dbs])
+                    for l in range(n_layers)],
+        low=stack([db.low for db in dbs]),
+        high=stack([db.high for db in dbs]),
+        entries=jnp.asarray([db.entry for db in dbs], jnp.int32),
+        offsets=jnp.asarray(offsets, jnp.int32),
+        cfg=cfg,
+    )
+
+
+def distributed_search(mesh: Mesh, sdb: ShardedDB, queries, q_low,
+                       *, ef0: int = 0, k_schedule=None):
+    """queries: [B, D] global. Returns (dists [B, ef0], GLOBAL idx)."""
+    cfg = sdb.cfg
+    ef0 = ef0 or cfg.ef0
+    ks = k_schedule or cfg.k_schedule
+    b_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    m_ax = "model"
+
+    def local_search(adj, packed_low, low, high, entry, offset, q, ql):
+        # leaves arrive with the leading shard dim = 1: squeeze it
+        layers = [PackedLayer(adj=a[0], packed_low=p[0])
+                  for a, p in zip(adj, packed_low)]
+        db = PackedDB(layers=layers, low=low[0], high=high[0],
+                      entry=0, cfg=cfg)
+        # entry point is data-dependent per shard: emulate db.entry by
+        # seeding the search with the shard's entry id
+        fd, fi = _search_with_entry(db, q, ql, entry[0], ef0, ks)
+        fi = jnp.where(fi >= 0, fi + offset[0], -1)
+        # merge across shards: all-gather the per-shard top-ef
+        fd_all = jax.lax.all_gather(fd, m_ax, axis=0)      # [P, B, ef]
+        fi_all = jax.lax.all_gather(fi, m_ax, axis=0)
+        Pn, B, E = fd_all.shape
+        fd_c = jnp.moveaxis(fd_all, 0, 1).reshape(B, Pn * E)
+        fi_c = jnp.moveaxis(fi_all, 0, 1).reshape(B, Pn * E)
+        vals, sel = ops.ksort_l(fd_c, ef0)
+        return vals, jnp.take_along_axis(fi_c, sel, axis=1)
+
+    n_l = len(sdb.adj)
+    in_specs = (
+        [P(m_ax, None, None)] * n_l,          # adj
+        [P(m_ax, None, None, None)] * n_l,    # packed_low
+        P(m_ax, None, None), P(m_ax, None, None),
+        P(m_ax), P(m_ax),
+        P(b_ax, None), P(b_ax, None),
+    )
+    out_specs = (P(b_ax, None), P(b_ax, None))
+    fn = shard_map(local_search, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return fn(sdb.adj, sdb.packed_low, sdb.low, sdb.high, sdb.entries,
+              sdb.offsets, queries, q_low)
+
+
+def _search_with_entry(db: PackedDB, queries, q_low, entry, ef0, ks):
+    from repro.core.search_jax import search_layer_batched
+    cfg = db.cfg
+    B = queries.shape[0]
+    k_of = lambda l: ks[min(l, len(ks) - 1)]
+    ep = jnp.full((B, 1), entry, jnp.int32)
+    ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), queries)
+    for layer in range(len(db.layers) - 1, 0, -1):
+        ep_d, ep = search_layer_batched(
+            db, layer, queries, q_low, ep_d, ep,
+            ef=cfg.ef_for_layer(layer), k=k_of(layer))
+    return search_layer_batched(db, 0, queries, q_low, ep_d, ep,
+                                ef=ef0, k=k_of(0))

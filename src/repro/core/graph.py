@@ -1,0 +1,193 @@
+"""HNSW graph construction (paper's C phase; host-side, numpy).
+
+Standard Malkov-Yashunin insertion: geometric level assignment
+(mL = 1/ln(M)), greedy descent through upper layers, ef_construction beam
+search + closest-M neighbor selection with degree-bounded bidirectional
+linking. Construction is host-side (inherently sequential, done once);
+the S phase is what pHNSW accelerates.
+
+Adjacency is stored as fixed-degree arrays ([N, M_l] int32, -1 padded) —
+the regular layout both the cost model (layout (3)) and the fixed-shape
+JAX search build on.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs.base import PHNSWConfig
+
+
+@dataclass
+class HNSWGraph:
+    cfg: PHNSWConfig
+    x: np.ndarray                  # [N, D] high-dim data
+    levels: np.ndarray             # [N] max layer of each point
+    layers: List[np.ndarray]       # adjacency per layer [N, M_l], -1 pad
+    entry: int
+
+    @property
+    def n(self) -> int:
+        return len(self.x)
+
+    def degree(self, layer: int) -> int:
+        return self.layers[layer].shape[1]
+
+    def stats(self) -> dict:
+        return {
+            "n": self.n,
+            "levels_max": int(self.levels.max()),
+            "layer_sizes": [int((self.levels >= l).sum())
+                            for l in range(len(self.layers))],
+            "mean_degree0": float((self.layers[0] >= 0).sum(1).mean()),
+        }
+
+
+def _search_layer_build(x, adj, q, eps, ef):
+    """Beam search in one layer during construction. Returns list of
+    (dist, idx), ascending, len <= ef."""
+    visited = set(eps)
+    cand = [(float(np.sum((x[e] - q) ** 2)), e) for e in eps]
+    heapq.heapify(cand)                          # min-heap on dist
+    best = [(-d, e) for d, e in cand]            # max-heap (neg dist)
+    heapq.heapify(best)
+    while cand:
+        d_c, c = heapq.heappop(cand)
+        d_f = -best[0][0]
+        if d_c > d_f and len(best) >= ef:
+            break
+        neigh = adj[c]
+        neigh = neigh[neigh >= 0]
+        new = [int(e) for e in neigh if e not in visited]
+        if not new:
+            continue
+        visited.update(new)
+        ds = np.sum((x[new] - q) ** 2, axis=1)
+        for d_e, e in zip(ds, new):
+            d_f = -best[0][0]
+            if d_e < d_f or len(best) < ef:
+                heapq.heappush(cand, (float(d_e), e))
+                heapq.heappush(best, (-float(d_e), e))
+                if len(best) > ef:
+                    heapq.heappop(best)
+    out = sorted([(-d, e) for d, e in best])
+    return out
+
+
+def _select_heuristic(x, cand, m):
+    """Malkov-Yashunin Algorithm 4: keep a candidate only if it is closer
+    to the query point than to every already-selected neighbor (diversity
+    pruning). cand: ascending [(dist_to_new, idx)]."""
+    selected: list = []
+    for d_e, e in cand:
+        ok = True
+        for s in selected:
+            if float(np.sum((x[e] - x[s]) ** 2)) < d_e:
+                ok = False
+                break
+        if ok:
+            selected.append(e)
+            if len(selected) >= m:
+                break
+    # backfill with nearest rejected if underfull
+    if len(selected) < m:
+        chosen = set(selected)
+        for _, e in cand:
+            if e not in chosen:
+                selected.append(e)
+                chosen.add(e)
+                if len(selected) >= m:
+                    break
+    return selected
+
+
+def build_hnsw(x: np.ndarray, cfg: PHNSWConfig, *, seed: int = 0,
+               verbose: bool = False) -> HNSWGraph:
+    n, dim = x.shape
+    rng = np.random.default_rng(seed)
+    mL = 1.0 / math.log(cfg.M)
+    levels = np.minimum(
+        (-np.log(rng.uniform(1e-12, 1.0, size=n)) * mL).astype(np.int64),
+        cfg.n_layers - 1)
+    n_layers = int(levels.max()) + 1
+    adj = [np.full((n, cfg.degree(l)), -1, np.int32)
+           for l in range(n_layers)]
+
+    def connect(i, j, layer):
+        """Add j to i's neighbor list; when overfull, re-select the list
+        with the diversity heuristic (hnswlib behavior — plain
+        furthest-eviction strands nodes and breaks graph connectivity)."""
+        row = adj[layer][i]
+        free = np.where(row < 0)[0]
+        if len(free):
+            row[free[0]] = j
+            return
+        cand_ids = np.append(row, j)
+        ds = np.sum((x[cand_ids] - x[i]) ** 2, axis=1)
+        order = np.argsort(ds)
+        cand = [(float(ds[o]), int(cand_ids[o])) for o in order]
+        sel = _select_heuristic(x, cand, len(row))
+        row[:] = -1
+        row[:len(sel)] = sel
+
+    entry = 0
+    top = int(levels[0])
+    order = np.arange(n)
+    for count, i in enumerate(order):
+        if verbose and count and count % 10000 == 0:
+            print(f"  insert {count}/{n}", flush=True)
+        if count == 0:
+            continue
+        l_i = int(levels[i])
+        q = x[i]
+        eps = [entry]
+        # greedy descent through layers above l_i
+        for l in range(top, l_i, -1):
+            if l >= n_layers:
+                continue
+            res = _search_layer_build(x, adj[l], q, eps, ef=1)
+            eps = [res[0][1]]
+        # insert at layers min(top, l_i)..0
+        for l in range(min(top, l_i), -1, -1):
+            res = _search_layer_build(x, adj[l], q, eps,
+                                      ef=cfg.ef_construction)
+            m_l = cfg.degree(l)
+            neigh = _select_heuristic(x, res, m_l)
+            adj[l][i, :len(neigh)] = neigh
+            for e in neigh:
+                connect(e, i, l)
+            eps = [e for _, e in res]
+        if l_i > top:
+            entry = int(i)
+            top = l_i
+    # pad adjacency list count up to cfg.n_layers for uniform access
+    while len(adj) < cfg.n_layers:
+        adj.append(np.full((n, cfg.M), -1, np.int32))
+    return HNSWGraph(cfg=cfg, x=x, levels=levels, layers=adj, entry=entry)
+
+
+# --------------------------- disk cache -------------------------------------
+
+def cached_graph(x: np.ndarray, cfg: PHNSWConfig, cache_dir: Path,
+                 *, seed: int = 0, verbose: bool = False) -> HNSWGraph:
+    cache_dir = Path(cache_dir)
+    key = f"hnsw_{cfg.name}_{len(x)}_{x.shape[1]}_M{cfg.M}" \
+          f"_efc{cfg.ef_construction}_s{seed}"
+    f = cache_dir / f"{key}.npz"
+    if f.exists():
+        z = np.load(f)
+        n_layers = int(z["n_layers"])
+        return HNSWGraph(cfg=cfg, x=x, levels=z["levels"],
+                         layers=[z[f"adj{l}"] for l in range(n_layers)],
+                         entry=int(z["entry"]))
+    g = build_hnsw(x, cfg, seed=seed, verbose=verbose)
+    cache_dir.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(
+        f, levels=g.levels, entry=g.entry, n_layers=len(g.layers),
+        **{f"adj{l}": a for l, a in enumerate(g.layers)})
+    return g

@@ -1,0 +1,49 @@
+"""PCA transform for pHNSW Step 1 (paper Fig. 1(c)): project the database
+from dim -> d_low, preserving maximum variance.
+
+Fit is exact (eigendecomposition of the covariance; numpy, done once at
+index-build time on the host). Transform is a jnp matmul so it can run
+sharded on the mesh. The transform keeps distances approximately:
+||P(x) - P(q)||^2 <= ||x - q||^2 (orthonormal rows), so low-dim distances
+underestimate true distances — the property the filter relies on."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclass
+class PCA:
+    mean: np.ndarray        # [D]
+    components: np.ndarray  # [D, d_low]  (orthonormal columns)
+    explained: np.ndarray   # [d_low] fraction of variance per component
+
+    @property
+    def d_low(self) -> int:
+        return self.components.shape[1]
+
+    def transform(self, x):
+        return (x - self.mean) @ self.components
+
+    def transform_jnp(self, x):
+        return (x - jnp.asarray(self.mean)) @ jnp.asarray(self.components)
+
+    def inverse(self, z):
+        return z @ self.components.T + self.mean
+
+
+def fit_pca(x: np.ndarray, d_low: int) -> PCA:
+    """x: [N, D] float; exact PCA via covariance eigendecomposition."""
+    x = np.asarray(x, np.float64)
+    mean = x.mean(axis=0)
+    xc = x - mean
+    cov = xc.T @ xc / max(len(x) - 1, 1)
+    w, v = np.linalg.eigh(cov)            # ascending
+    order = np.argsort(w)[::-1][:d_low]
+    comps = v[:, order]
+    explained = w[order] / max(w.sum(), 1e-12)
+    return PCA(mean.astype(np.float32), comps.astype(np.float32),
+               explained.astype(np.float32))

@@ -1,0 +1,94 @@
+"""Product quantization — the alternative filter from Flash [15]
+(related work): instead of PCA's dense low-dim projection, split the
+vector into M subspaces and code each with an 8-bit codebook.
+
+Used by the filter ablation (benchmarks/bench_pq_ablation.py): at a
+matched byte budget per vector, does the paper's PCA filter or a PQ
+filter rank candidates better? PQ codes are 4 bits/dim-equivalent
+smaller but quantize distances; PCA keeps exact arithmetic in a smaller
+space. The paper chose PCA and back-projection; Flash chose PQ + SIMD —
+this benchmark quantifies the recall trade at equal memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass
+class PQCodebook:
+    centroids: np.ndarray      # [M, 256, dsub]
+
+    @property
+    def n_sub(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def dsub(self) -> int:
+        return self.centroids.shape[2]
+
+    @property
+    def bytes_per_vec(self) -> int:
+        return self.n_sub            # one uint8 code per subspace
+
+
+def train_pq(x: np.ndarray, n_sub: int, *, iters: int = 8,
+             seed: int = 0) -> PQCodebook:
+    """Lloyd k-means (k=256) per subspace."""
+    n, d = x.shape
+    assert d % n_sub == 0, (d, n_sub)
+    dsub = d // n_sub
+    rng = np.random.default_rng(seed)
+    cents = np.empty((n_sub, 256, dsub), np.float32)
+    for m in range(n_sub):
+        xs = x[:, m * dsub:(m + 1) * dsub].astype(np.float32)
+        c = xs[rng.choice(n, 256, replace=False)].copy()
+        for _ in range(iters):
+            d2 = ((xs[:, None, :] - c[None]) ** 2).sum(-1) \
+                if n <= 20000 else None
+            if d2 is None:
+                # blockwise assignment for larger n
+                assign = np.empty(n, np.int64)
+                for i in range(0, n, 8192):
+                    blk = xs[i:i + 8192]
+                    d2b = ((blk[:, None, :] - c[None]) ** 2).sum(-1)
+                    assign[i:i + 8192] = d2b.argmin(1)
+            else:
+                assign = d2.argmin(1)
+            for k in range(256):
+                sel = assign == k
+                if sel.any():
+                    c[k] = xs[sel].mean(0)
+        cents[m] = c
+    return PQCodebook(centroids=cents)
+
+
+def encode_pq(cb: PQCodebook, x: np.ndarray) -> np.ndarray:
+    """x: [N, D] -> codes [N, M] uint8."""
+    n, d = x.shape
+    dsub = cb.dsub
+    codes = np.empty((n, cb.n_sub), np.uint8)
+    for m in range(cb.n_sub):
+        xs = x[:, m * dsub:(m + 1) * dsub].astype(np.float32)
+        for i in range(0, n, 8192):
+            blk = xs[i:i + 8192]
+            d2 = ((blk[:, None, :] - cb.centroids[m][None]) ** 2).sum(-1)
+            codes[i:i + 8192, m] = d2.argmin(1).astype(np.uint8)
+    return codes
+
+
+def adc_table(cb: PQCodebook, q: np.ndarray) -> np.ndarray:
+    """Asymmetric distance tables for one query: [M, 256]."""
+    dsub = cb.dsub
+    tabs = np.empty((cb.n_sub, 256), np.float32)
+    for m in range(cb.n_sub):
+        qs = q[m * dsub:(m + 1) * dsub].astype(np.float32)
+        tabs[m] = ((cb.centroids[m] - qs[None]) ** 2).sum(-1)
+    return tabs
+
+
+def adc_distances(tabs: np.ndarray, codes: np.ndarray) -> np.ndarray:
+    """codes: [N, M] -> approximate squared distances [N]."""
+    return tabs[np.arange(tabs.shape[0])[None, :], codes].sum(1)

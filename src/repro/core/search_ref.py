@@ -1,0 +1,273 @@
+"""Reference (host, numpy) search implementations with instrumentation.
+
+Three searchers over the same HNSW graph:
+  * ``search_hnsw``   — standard HNSW (paper baseline [2]): all neighbor
+    distances in HIGH-dim space; per expansion the neighbor index list is
+    one sequential burst, then M irregular high-dim vector fetches.
+  * ``search_phnsw``  — Algorithm 1: neighbor distances in LOW-dim space,
+    top-k filter (kSort.L), only k candidates re-ranked in high-dim.
+    ``layout="packed"`` = paper layout (3): indices + low-dim vectors
+    inline -> ONE sequential burst per expansion. ``layout="separate"`` =
+    pKNN layout (4): index burst + M irregular low-dim fetches.
+
+Every searcher fills a ``SearchStats`` with algorithmic counts and DRAM
+access events; ``core/cost_model.py`` turns those into QPS / energy for
+the pHNSW processor configurations of Table III / Fig 5.
+
+Interpretation note on Algorithm 1 (documented deviation): the paper
+carries ``C_pca`` across iterations as the filter threshold heap (lines
+5, 20, 24) but does not pin its capacity; we bound it at k (matching the
+fixed-size kSort.L register file) and use its max as ``f_pca``. Ties in
+the filter are broken by index, making the top-k deterministic.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field, asdict
+from typing import List, Literal, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import PHNSWConfig
+from repro.core.graph import HNSWGraph
+from repro.core.pca import PCA
+
+IDX_BYTES = 4
+F32 = 4
+
+
+@dataclass
+class SearchStats:
+    """Algorithmic + memory-event counters for ONE query."""
+    expansions: int = 0          # node expansions (step-2 loops)
+    dist_high: int = 0           # high-dim distance computations
+    dist_low: int = 0            # low-dim distance computations
+    ksort_calls: int = 0         # kSort.L invocations
+    minh_calls: int = 0          # Min.H invocations
+    visit_checks: int = 0        # Visit&Raw SPM reads
+    f_updates: int = 0           # F-list inserts (RMF on eviction)
+    evictions: int = 0
+    seq_bursts: int = 0          # sequential DRAM bursts
+    seq_bytes: int = 0
+    rand_accesses: int = 0       # irregular DRAM accesses
+    rand_bytes: int = 0
+
+    def add(self, other: "SearchStats"):
+        for k, v in asdict(other).items():
+            setattr(self, k, getattr(self, k) + v)
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def _d2(a, b):
+    d = a - b
+    return float(np.dot(d, d))
+
+
+def _d2_rows(x, q):
+    d = x - q
+    return np.einsum("ij,ij->i", d, d)
+
+
+# ---------------------------------------------------------------------------
+# standard HNSW layer search (baseline [2] / HNSW-Std hardware variant)
+# ---------------------------------------------------------------------------
+
+def _hnsw_layer(g: HNSWGraph, q: np.ndarray, eps: List[int], ef: int,
+                layer: int, st: SearchStats,
+                hw_mode: bool = False) -> List[Tuple[float, int]]:
+    """hw_mode=True models the HNSW-Std accelerator baseline ([5],[6] as
+    characterized in Section IV-B2): the DMA fetches high-dim data for
+    ALL M neighbors of the expanded node before the visited check (the
+    V-list lives with the raw data in SPM), so fetch/distance counts are
+    per-neighbor, not per-unvisited-neighbor. The traversal itself is
+    identical."""
+    adj = g.layers[layer]
+    dim = g.x.shape[1]
+    visited = set(eps)
+    cand = []
+    best = []
+    for e in eps:
+        d = _d2(g.x[e], q)
+        st.dist_high += 1
+        st.rand_accesses += 1
+        st.rand_bytes += dim * F32
+        heapq.heappush(cand, (d, e))
+        heapq.heappush(best, (-d, e))
+    while cand:
+        d_c, c = heapq.heappop(cand)
+        d_f = -best[0][0]
+        if d_c > d_f and len(best) >= ef:
+            break
+        st.expansions += 1
+        neigh = adj[c]
+        neigh = neigh[neigh >= 0]
+        # one sequential burst for the index list
+        st.seq_bursts += 1
+        st.seq_bytes += adj.shape[1] * IDX_BYTES
+        new = [int(e) for e in neigh if e not in visited]
+        st.visit_checks += len(neigh)
+        visited.update(new)
+        # irregular fetches + high-dim distances: all M neighbors in
+        # hw_mode, unvisited only in software mode
+        n_fetch = len(neigh) if hw_mode else len(new)
+        st.rand_accesses += n_fetch
+        st.rand_bytes += n_fetch * dim * F32
+        st.dist_high += n_fetch
+        if not new:
+            continue
+        ds = _d2_rows(g.x[new], q)
+        for d_e, e in zip(ds, new):
+            d_f = -best[0][0]
+            if d_e < d_f or len(best) < ef:
+                heapq.heappush(cand, (float(d_e), e))
+                heapq.heappush(best, (-float(d_e), e))
+                st.f_updates += 1
+                if len(best) > ef:
+                    heapq.heappop(best)
+                    st.evictions += 1
+    return sorted([(-d, e) for d, e in best])
+
+
+def search_hnsw(g: HNSWGraph, q: np.ndarray, *, ef0: Optional[int] = None,
+                hw_mode: bool = False) -> Tuple[np.ndarray, SearchStats]:
+    cfg = g.cfg
+    st = SearchStats()
+    ep = [g.entry]
+    top = int(g.levels.max())
+    for layer in range(top, 0, -1):
+        res = _hnsw_layer(g, q, ep, cfg.ef_for_layer(layer), layer, st,
+                          hw_mode)
+        ep = [res[0][1]]
+    res = _hnsw_layer(g, q, ep, ef0 or cfg.ef0, 0, st, hw_mode)
+    return np.array([e for _, e in res], np.int64), st
+
+
+# ---------------------------------------------------------------------------
+# pHNSW Algorithm 1
+# ---------------------------------------------------------------------------
+
+def _phnsw_layer(g: HNSWGraph, x_low: np.ndarray, q: np.ndarray,
+                 q_pca: np.ndarray, eps: List[int], ef: int, k: int,
+                 layer: int, st: SearchStats,
+                 layout: Literal["packed", "separate"]) -> List[Tuple[float, int]]:
+    adj = g.layers[layer]
+    M = adj.shape[1]
+    dim = g.x.shape[1]
+    d_low = x_low.shape[1]
+    visited = set(eps)
+    C: List[Tuple[float, int]] = []      # candidate min-heap (high-dim dist)
+    F: List[Tuple[float, int]] = []      # final max-heap (neg high-dim dist)
+    C_pca: List[Tuple[float, int]] = []  # filter-threshold max-heap (neg low-dim)
+    for e in eps:
+        d = _d2(g.x[e], q)
+        st.dist_high += 1
+        st.rand_accesses += 1
+        st.rand_bytes += dim * F32
+        dl = _d2(x_low[e], q_pca)
+        st.dist_low += 1
+        heapq.heappush(C, (d, e))
+        heapq.heappush(F, (-d, e))
+        heapq.heappush(C_pca, (-dl, e))
+    while C:
+        d_c, c = heapq.heappop(C)
+        d_f = -F[0][0]
+        if d_c > d_f and len(F) >= ef:
+            break                                     # lines 7-8
+        st.expansions += 1
+        neigh = adj[c]
+        neigh = neigh[neigh >= 0]
+        if layout == "packed":
+            # layout (3): indices + low-dim raw data in ONE burst
+            st.seq_bursts += 1
+            st.seq_bytes += M * (IDX_BYTES + d_low * F32)
+        else:
+            # layout (4): index burst + M irregular low-dim fetches
+            st.seq_bursts += 1
+            st.seq_bytes += M * IDX_BYTES
+            st.rand_accesses += len(neigh)
+            st.rand_bytes += len(neigh) * d_low * F32
+        if len(neigh) == 0:
+            continue
+        # ---- step 2: low-dim distances + top-k filter (lines 10-13) ----
+        nl = [int(e) for e in neigh]
+        dls = _d2_rows(x_low[nl], q_pca)
+        st.dist_low += len(nl)
+        # threshold is only meaningful once the k-bounded heap is full
+        f_pca = -C_pca[0][0] if len(C_pca) >= k else np.inf
+        keep = [(float(d), e) for d, e in zip(dls, nl) if d < f_pca]
+        st.ksort_calls += 1                           # kSort.L, 7 cycles
+        keep.sort()                                   # deterministic top-k
+        topk = keep[:k]
+        # ---- step 3: high-dim re-rank of the k survivors (lines 15-23) --
+        for dl_m, m in topk:
+            st.visit_checks += 1
+            if m in visited:
+                continue
+            visited.add(m)
+            st.rand_accesses += 1                     # high-dim fetch
+            st.rand_bytes += dim * F32
+            d_m = _d2(g.x[m], q)
+            st.dist_high += 1
+            st.minh_calls += 1
+            d_f = -F[0][0] if F else np.inf
+            if d_m < d_f or len(F) < ef:
+                heapq.heappush(C, (d_m, m))
+                heapq.heappush(F, (-d_m, m))
+                st.f_updates += 1
+                if len(F) > ef:
+                    heapq.heappop(F)
+                    st.evictions += 1
+                # C_pca_tmp: bounded-k low-dim threshold heap (line 20/24)
+                heapq.heappush(C_pca, (-dl_m, m))
+                if len(C_pca) > k:
+                    heapq.heappop(C_pca)
+    return sorted([(-d, e) for d, e in F])
+
+
+def search_phnsw(g: HNSWGraph, x_low: np.ndarray, pca: PCA, q: np.ndarray,
+                 *, layout: Literal["packed", "separate"] = "packed",
+                 k_schedule: Optional[Tuple[int, ...]] = None,
+                 ef0: Optional[int] = None) -> Tuple[np.ndarray, SearchStats]:
+    cfg = g.cfg
+    st = SearchStats()
+    q_pca = pca.transform(q[None])[0].astype(np.float32)
+    ks = k_schedule or cfg.k_schedule
+    k_of = lambda l: ks[min(l, len(ks) - 1)]
+    ep = [g.entry]
+    top = int(g.levels.max())
+    for layer in range(top, 0, -1):
+        res = _phnsw_layer(g, x_low, q, q_pca, ep, cfg.ef_for_layer(layer),
+                           k_of(layer), layer, st, layout)
+        ep = [res[0][1]]
+    res = _phnsw_layer(g, x_low, q, q_pca, ep, ef0 or cfg.ef0, k_of(0), 0,
+                       st, layout)
+    return np.array([e for _, e in res], np.int64), st
+
+
+# ---------------------------------------------------------------------------
+# batch helpers
+# ---------------------------------------------------------------------------
+
+def recall_at(found: np.ndarray, truth: np.ndarray, at: int) -> float:
+    """found: [k_found] indices; truth: [at] ground-truth indices."""
+    return len(set(found[:at].tolist()) & set(truth[:at].tolist())) / at
+
+
+def run_queries(g: HNSWGraph, queries: np.ndarray, truth: np.ndarray,
+                *, algo: str = "phnsw", x_low=None, pca=None,
+                layout="packed", k_schedule=None, hw_mode: bool = False):
+    """Run all queries; returns (mean recall@cfg.recall_at, total stats)."""
+    cfg = g.cfg
+    tot = SearchStats()
+    recs = []
+    for i, q in enumerate(queries):
+        if algo == "hnsw":
+            found, st = search_hnsw(g, q, hw_mode=hw_mode)
+        else:
+            found, st = search_phnsw(g, x_low, pca, q, layout=layout,
+                                     k_schedule=k_schedule)
+        tot.add(st)
+        recs.append(recall_at(found, truth[i], cfg.recall_at))
+    return float(np.mean(recs)), tot

@@ -1,0 +1,5 @@
+from repro.data.vectors import make_sift_like, brute_force_topk
+from repro.data.tokens import TokenPipeline, synthetic_batch
+
+__all__ = ["make_sift_like", "brute_force_topk", "TokenPipeline",
+           "synthetic_batch"]

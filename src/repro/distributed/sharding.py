@@ -1,0 +1,283 @@
+"""Sharding rules: parameter partition specs (FSDP over ``data`` x tensor
+parallel over ``model``), activation constraints, KV-cache layouts.
+
+The contract with the model zoo is the *leaf name*: ``wq``, ``e_up``,
+``emb``... Each name maps to a base PartitionSpec; stacked-layer leading
+axes (from ``stack_layers``) are detected by rank and get a leading None.
+
+Mesh axes:
+  pod    — DCN axis, pure data parallel across pods (multi-pod mesh only)
+  data   — within-pod FSDP / batch axis
+  model  — tensor / expert parallel axis
+
+Key choices (see EXPERIMENTS.md §Perf for measured effects):
+  * KV projections replicate over ``model`` when kv_heads doesn't divide
+    the axis (GQA head replication) — avoids GSPMD resharding inside
+    attention.
+  * Experts shard over ``model`` (EP) when n_experts divides it, else the
+    per-expert FFN dim is tensor-parallel.
+  * Decode KV caches shard the *sequence* axis over ``model`` (and over
+    ``data`` too when batch < data axis, e.g. long_500k's batch=1):
+    GSPMD turns softmax + PV into the flash-decoding partial-softmax
+    merge automatically.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# activation-constraint context (models call constrain(x, name))
+# --------------------------------------------------------------------------
+
+_ACT_RULES: contextvars.ContextVar[Optional[Dict[str, Any]]] = \
+    contextvars.ContextVar("act_rules", default=None)
+_MESH_CTX: contextvars.ContextVar[Optional[Any]] = \
+    contextvars.ContextVar("mesh_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: Dict[str, Any], mesh=None):
+    tok = _ACT_RULES.set(rules)
+    tok2 = _MESH_CTX.set(mesh)
+    try:
+        yield
+    finally:
+        _ACT_RULES.reset(tok)
+        _MESH_CTX.reset(tok2)
+
+
+def current_mesh():
+    """Mesh made visible to model code during tracing (for explicit
+    shard_map regions, e.g. the MoE dispatch)."""
+    return _MESH_CTX.get()
+
+
+def constrain(x, name: str):
+    rules = _ACT_RULES.get()
+    if rules is None or name not in rules:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules[name])
+
+
+# --------------------------------------------------------------------------
+# mesh helpers
+# --------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh, cfg=None) -> Tuple[str, ...]:
+    ax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if cfg is not None and getattr(cfg, "shard_profile", "tp") == "fsdp":
+        ax = ax + ("model",)    # pure data parallelism across the full mesh
+    return ax
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+def _param_rule_table(cfg, model_size: int) -> Dict[str, P]:
+    hd = cfg.resolved_head_dim
+    kv_tp = (cfg.kv_heads % model_size == 0) if cfg.n_heads else False
+    kv_m = "model" if kv_tp else None
+    moe_ep = cfg.moe is not None and cfg.moe.n_experts % model_size == 0
+    heads_tp = cfg.n_heads % model_size == 0 if cfg.n_heads else False
+    h_m = "model" if heads_tp else None
+    return {
+        # embeddings / head
+        "emb": P("model", None),
+        "lm_head": P(None, "model"),
+        "vis_proj": P(None, "model"),
+        # norms
+        "scale": P(None), "bias": P(None),
+        # attention
+        "wq": P("data", "model"),
+        "wk": P("data", kv_m), "wv": P("data", kv_m),
+        "wo": P("model", "data"),
+        "bq": P("model"), "bk": P(kv_m), "bv": P(kv_m),
+        # dense mlp
+        "w_gate": P("data", "model"), "w_up": P("data", "model"),
+        "w_down": P("model", "data"),
+        "b_up": P("model"), "b_down": P(None),
+        # moe
+        "router": P(None, None),
+        "e_gate": P("model", "data", None) if moe_ep else P(None, "data", "model"),
+        "e_up": P("model", "data", None) if moe_ep else P(None, "data", "model"),
+        "e_down": P("model", None, "data") if moe_ep else P(None, "model", "data"),
+        # rg-lru
+        "rg_in_gate": P("data", "model"), "rg_in_x": P("data", "model"),
+        "rg_conv": P(None, "model"),
+        "rg_wa": P(h_m, None, None), "rg_wx": P(h_m, None, None),
+        "rg_lam": P("model"),
+        "rg_out": P("model", "data"),
+        # rwkv6
+        "w_r": P("data", "model"), "w_k": P("data", "model"),
+        "w_v": P("data", "model"), "w_g": P("data", "model"),
+        "w_o": P("model", "data"),
+        "w0": P("model"), "lw_a": P("data", None), "lw_b": P(None, "model"),
+        "u": P(h_m, None), "mu": P(None, None), "gn_scale": P(None),
+        "c_wk": P("data", "model"), "c_wv": P("model", "data"),
+        "c_wr": P("data", "model"), "c_mu": P(None, None),
+        # retrieval attention (pHNSW): PCA-projection matrix, replicated
+        "rp_proj": P(None, None),
+        # whisper positional tables
+        "pos_enc": P(None, None), "pos_dec": P(None, None),
+    }
+
+
+def param_specs(cfg, abstract_params, mesh: Mesh):
+    """PartitionSpec pytree matching ``abstract_params`` (a ShapeDtypeStruct
+    tree from eval_shape or a real param tree).
+
+    Profiles (cfg.shard_profile):
+      "tp"   — FSDP over ``data`` x tensor parallel over ``model``
+               (the rule table below).
+      "fsdp" — pure FSDP: the dim the tp-table marks as FSDP (or the
+               largest dim if none) shards over ("data", "model")
+               jointly; no tensor parallelism. Per-layer collective
+               traffic becomes the param all-gather instead of the
+               activation all-reduce — the right trade for small
+               d_model (see EXPERIMENTS.md §Perf).
+    """
+    model_size = axis_size(mesh, "model")
+    data_size = axis_size(mesh, "data")
+    table = _param_rule_table(cfg, model_size)
+    profile = getattr(cfg, "shard_profile", "tp")
+
+    def _axis_prod(ax):
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= {"data": data_size, "model": model_size}.get(a, 1)
+            return n
+        return {"data": data_size, "model": model_size}.get(ax, 1)
+
+    def rule(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        if name not in table:
+            raise KeyError(f"no sharding rule for param leaf {path}")
+        spec = table[name]
+        ndim = leaf.ndim
+        base = len(spec)
+        lead = ndim - base            # stacked layer/group axes
+        if lead < 0 or lead > 2:
+            raise ValueError(f"rank mismatch for {name}: {ndim} vs {base}")
+        if profile == "fsdp":
+            # pick the dim to shard over (data, model): prefer the
+            # tp-table's FSDP ("data") dim, else the largest dim
+            body_shape = leaf.shape[lead:]
+            cand = [i for i, ax in enumerate(spec) if ax == "data"]
+            if not cand:
+                cand = [int(max(range(len(body_shape)),
+                                key=lambda i: body_shape[i]))]
+            newspec = [None] * base
+            i = cand[0]
+            if body_shape[i] % (data_size * model_size) == 0:
+                newspec[i] = ("data", "model")
+            elif body_shape[i] % data_size == 0:
+                newspec[i] = "data"
+            spec = P(*newspec)
+        spec = P(*((None,) * lead + tuple(spec)))
+        # drop sharding for dims not divisible by the axis product (GSPMD
+        # would pad; for weights we prefer exact layouts -> replicate)
+        fixed = []
+        for dim, ax in zip(leaf.shape, spec):   # len(spec) == ndim here
+            if ax is None:
+                fixed.append(None)
+                continue
+            fixed.append(ax if dim % _axis_prod(ax) == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def param_shardings(cfg, abstract_params, mesh: Mesh):
+    specs = param_specs(cfg, abstract_params, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# activations / batch / cache
+# --------------------------------------------------------------------------
+
+def act_rules(cfg, mesh: Mesh, global_batch: int) -> Dict[str, NamedSharding]:
+    b_ax = batch_axes(mesh, cfg)
+    b_size = 1
+    for a in b_ax:
+        b_size *= axis_size(mesh, a)
+    while len(b_ax) > 1 and (global_batch % b_size or global_batch < b_size):
+        b_size //= axis_size(mesh, b_ax[-1])
+        b_ax = b_ax[:-1]
+    if global_batch % b_size == 0 and global_batch >= b_size:
+        spec = P(b_ax, None, None)
+    elif global_batch == 1:
+        # batch=1 (long_500k): shard the sequence axis over data instead
+        spec = P(None, b_ax, None)
+    else:
+        spec = P(b_ax[:1], None, None)
+    return {"act_btd": NamedSharding(mesh, spec)}
+
+
+def batch_sharding(cfg, mesh: Mesh, shape, kind: str) -> Dict[str, NamedSharding]:
+    """Shardings for the input batch pytree, keyed like the batch dict."""
+    b_ax = batch_axes(mesh, cfg if kind == "train" else None)
+    ns = lambda *spec: NamedSharding(mesh, P(*spec))
+    b_size = 1
+    for a in b_ax:
+        b_size *= axis_size(mesh, a)
+    while len(b_ax) > 1 and shape.global_batch % b_size:
+        b_size //= axis_size(mesh, b_ax[-1])
+        b_ax = b_ax[:-1]
+    bspec = b_ax if shape.global_batch % b_size == 0 else None
+    out: Dict[str, NamedSharding] = {}
+    if kind == "train":
+        out = {"tokens": ns(bspec, None), "labels": ns(bspec, None)}
+    elif kind == "prefill":
+        out = {"tokens": ns(bspec, None)}
+    else:  # decode
+        out = {"token": ns(bspec, None), "pos": NamedSharding(mesh, P())}
+    if cfg.vis_tokens:
+        out["patches"] = ns(bspec, None, None)
+    if cfg.enc_layers:
+        out["frames"] = ns(bspec, None, None)
+    return out
+
+
+def cache_spec(cfg, mesh: Mesh, batch: int, seq_len: int):
+    """PartitionSpec for KV caches [L, B, T, KV, Hd] (dense/moe/vlm/encdec),
+    flash-decoding style: sequence axis over ``model`` (and ``data`` too
+    when the batch can't use it)."""
+    b_ax = batch_axes(mesh)
+    b_size = 1
+    for a in b_ax:
+        b_size *= axis_size(mesh, a)
+    if batch % b_size == 0:
+        return P(None, b_ax, "model", None, None)
+    # batch=1: sequence over (data, model) jointly
+    seq_ax = tuple(a for a in (*b_ax, "model"))
+    return P(None, None, seq_ax, None, None)
+
+
+def state_spec(cfg, mesh: Mesh, batch: int):
+    """Recurrent-state sharding (rwkv/hybrid): width over ``model``."""
+    b_ax = batch_axes(mesh)
+    b_size = 1
+    for a in b_ax:
+        b_size *= axis_size(mesh, a)
+    bspec = b_ax if batch % b_size == 0 else None
+    return bspec

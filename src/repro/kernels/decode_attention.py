@@ -1,0 +1,96 @@
+"""Decode attention: one query token against a long KV cache, tiled over
+the cache (flash-decoding style single-chip kernel; the cross-chip
+sequence-parallel merge is GSPMD's job, see distributed/sharding.py).
+
+Grid: (B*H, T/bk). The query row loads once per (b, h); KV blocks
+stream through VMEM with online-softmax accumulation in scratch.
+``length`` masks the valid cache prefix (SMEM scalar prefetch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, bk: int, n_batch_heads: int,
+                   heads: int):
+    bh = pl.program_id(0)
+    kv_i = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    b = bh // heads
+    length = len_ref[b]
+    k_pos = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+
+    @pl.when(kv_i * bk < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # [1, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        lg = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * (q.shape[-1] ** -0.5)
+        lg = jnp.where(k_pos < length, lg, NEG_INF)       # [1, bk]
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(lg, axis=-1, keepdims=True))
+        p = jnp.exp(lg - m_new)
+        scale = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * scale + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * scale + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kv_i == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, length, *, bk: int = 512,
+                            interpret: bool = False):
+    """q: [B, H, d]; k, v: [B, H, T, d]; length: [B] int32 -> [B, H, d]."""
+    B, H, d = q.shape
+    T = k.shape[2]
+    bk = min(bk, T)
+    assert T % bk == 0
+    qf = q.reshape(B * H, 1, d)
+    kf = k.reshape(B * H, T, d)
+    vf = v.reshape(B * H, T, d)
+    grid = (B * H, T // bk)
+    kernel = functools.partial(_decode_kernel, bk=bk,
+                               n_batch_heads=B * H, heads=H)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, d), lambda b, j, *_: (b, 0, 0)),
+                pl.BlockSpec((1, bk, d), lambda b, j, *_: (b, j, 0)),
+                pl.BlockSpec((1, bk, d), lambda b, j, *_: (b, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, d), lambda b, j, *_: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, d), q.dtype),
+        interpret=interpret,
+    )(length, qf, kf, vf)
+    return out.reshape(B, H, d)

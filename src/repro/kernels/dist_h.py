@@ -1,0 +1,35 @@
+"""Dist.H — high-dimensional re-rank distances for the k filtered
+candidates (paper step 3). The gather of the k candidates happens on the
+host/XLA side (irregular HBM access is exactly what the algorithm
+bounds to k); the kernel computes the [block_b, K, D] block's distances
+in one VMEM residency.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dist_h_kernel(x_ref, q_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # [bb, K, D]
+    q = q_ref[...].astype(jnp.float32)          # [bb, D]
+    d = x - q[:, None, :]
+    o_ref[...] = jnp.sum(d * d, axis=-1)
+
+
+def dist_h_pallas(x, q, *, block_b: int = 8, interpret: bool = False):
+    """x: [B, K, D]; q: [B, D] -> [B, K] float32."""
+    B, K, D = x.shape
+    assert B % block_b == 0, (B, block_b)
+    return pl.pallas_call(
+        _dist_h_kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, K, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
+        interpret=interpret,
+    )(x, q)

@@ -1,0 +1,40 @@
+"""Dist.L — batched low-dimensional squared distances (paper IV-B3).
+
+The ASIC computes 16 neighbor distances in parallel; on TPU the whole
+neighbor block [block_b, M, dl] sits in VMEM and the VPU evaluates
+|x - q|^2 with a vectorized reduction over dl. One grid step per
+query-block; the packed layout (3) guarantees x rows are contiguous, so
+each block arrives in a single HBM->VMEM DMA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dist_l_kernel(x_ref, q_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # [bb, M, dl]
+    q = q_ref[...].astype(jnp.float32)          # [bb, dl]
+    d = x - q[:, None, :]
+    o_ref[...] = jnp.sum(d * d, axis=-1)
+
+
+def dist_l_pallas(x, q, *, block_b: int = 8, interpret: bool = False):
+    """x: [B, M, dl]; q: [B, dl] -> [B, M] float32. B % block_b == 0."""
+    B, M, dl = x.shape
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        _dist_l_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, M, dl), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, dl), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, M), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.float32),
+        interpret=interpret,
+    )(x, q)

@@ -1,0 +1,110 @@
+"""Flash attention (tiled, online-softmax) for train/prefill on TPU.
+
+Grid: (B*H, Sq/bq, T/bk) with the KV axis innermost ("arbitrary"
+semantics). Running max / sum / accumulator live in VMEM scratch and are
+rescaled per KV block; the output block is written once, on the last KV
+step. Causal + sliding-window masking is applied in-block; fully-masked
+KV blocks are skipped with ``pl.when`` (their DMA still runs — a noted
+TPU trade vs. a ragged grid).
+
+Block sizes default to (128, 128) q x kv tiles with the head dim loaded
+whole — MXU-aligned for head_dim in {64, 128, 256}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, bq: int, bk: int, t_total: int,
+                  s_total: int):
+    kv_i = pl.program_id(2)
+    q_i = pl.program_id(1)
+    nk = pl.num_programs(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions (q aligned to the END of the kv axis)
+    q_pos = q_i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (t_total - s_total)
+    k_pos = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    run = True
+    if causal:   # static skip is impossible; runtime-skip fully-masked blocks
+        run = (kv_i * bk) <= (q_i * bq + bq - 1 + (t_total - s_total))
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                 # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        lg = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * (q.shape[-1] ** -0.5)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window:
+            mask &= (q_pos - k_pos) < window
+        lg = jnp.where(mask, lg, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(lg, axis=-1, keepdims=True))
+        p = jnp.exp(lg - m_new)                          # [bq, bk]
+        scale = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * scale + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * scale + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kv_i == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q: [B, H, S, d]; k, v: [B, H, T, d] -> [B, H, S, d].
+    S % bq == 0, T % bk == 0 (ops.py pads)."""
+    B, H, S, d = q.shape
+    T = k.shape[2]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0
+    qf = q.reshape(B * H, S, d)
+    kf = k.reshape(B * H, T, d)
+    vf = v.reshape(B * H, T, d)
+    grid = (B * H, S // bq, T // bk)
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
+                               bq=bq, bk=bk, t_total=T, s_total=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max  m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running sum  l
+            pltpu.VMEM((bq, d), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, d)

@@ -1,0 +1,55 @@
+"""kSort.L — fully parallel comparison-matrix top-k (paper IV-B3,
+Fig 3(c)).
+
+This is the rare ASIC algorithm that transfers to TPU *verbatim*: the
+hardware compares all pairs simultaneously and derives each element's
+rank by counting '>' entries in its comparison-matrix row (7 cycles vs
+120 for bubble sort). On TPU the [M, M] comparison matrix is one
+broadcast compare on the VPU and the rank is a row-sum — no
+data-dependent control flow, no sorting network. Ties break by index so
+ranks form a permutation; the top-k extraction is a one-hot contraction
+(rank == 0..k-1), which is MXU/VPU-friendly and avoids gathers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ksort_kernel(d_ref, val_ref, idx_ref, *, k: int):
+    d = d_ref[...].astype(jnp.float32)                   # [bb, M]
+    bb, M = d.shape
+    ii = jax.lax.broadcasted_iota(jnp.int32, (M, M), 0)  # row index i
+    jj = jax.lax.broadcasted_iota(jnp.int32, (M, M), 1)  # col index j
+    gt = d[:, :, None] > d[:, None, :]
+    eq = d[:, :, None] == d[:, None, :]
+    cmp = gt | (eq & (ii > jj)[None])
+    rank = jnp.sum(cmp.astype(jnp.int32), axis=-1)       # [bb, M]
+    kk = jax.lax.broadcasted_iota(jnp.int32, (1, M, k), 2)
+    onehot = rank[:, :, None] == kk                      # [bb, M, k]
+    im = jax.lax.broadcasted_iota(jnp.int32, (1, M, k), 1)
+    val_ref[...] = jnp.sum(jnp.where(onehot, d[:, :, None], 0.0), axis=1)
+    idx_ref[...] = jnp.sum(jnp.where(onehot, im, 0), axis=1).astype(jnp.int32)
+
+
+def ksort_l_pallas(d, k: int, *, block_b: int = 8, interpret: bool = False):
+    """d: [B, M] -> (vals [B, k] asc, idx [B, k]). B % block_b == 0."""
+    B, M = d.shape
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+    kernel = lambda dr, vr, ir: _ksort_kernel(dr, vr, ir, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, M), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(d)

@@ -1,0 +1,130 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Padding, block-size selection, and backend dispatch live here: on TPU the
+kernels run compiled; anywhere else they run under ``interpret=True``
+(the kernel body executes in Python on CPU — bit-faithful semantics, no
+performance claim). ``REPRO_FORCE_PALLAS_INTERPRET=1`` forces interpret
+mode for testing.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dist_l import dist_l_pallas
+from repro.kernels.ksort_l import ksort_l_pallas
+from repro.kernels.dist_h import dist_h_pallas
+from repro.kernels.fused_filter import fused_filter_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET"):
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def _use_ref() -> bool:
+    """On non-TPU backends, route to the jnp oracles by default: interpret
+    mode executes the kernel body in Python per grid step (correct but
+    ~100x slower), which would dominate CPU tests/benchmarks. Set
+    REPRO_FORCE_PALLAS_INTERPRET=1 to exercise the Pallas path on CPU
+    (the kernel test suite does)."""
+    if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET"):
+        return False
+    impl = os.environ.get("REPRO_KERNEL_IMPL", "auto")
+    if impl == "ref":
+        return True
+    if impl == "pallas":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def _pad_batch(x, mult: int):
+    B = x.shape[0]
+    pad = (-B) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x, B
+
+
+def _pick_block_b(B: int, M: int, cap_elems: int = 1 << 20) -> int:
+    """Comparison-matrix kernels hold [bb, M, M]; bound VMEM usage."""
+    bb = 8
+    while bb > 1 and bb * M * M > cap_elems:
+        bb //= 2
+    return bb
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def dist_l(x, q, *, block_b: int = 8):
+    """x: [B, M, dl]; q: [B, dl] -> [B, M] f32 squared distances."""
+    if _use_ref():
+        return ref.dist_l_ref(x, q)
+    xp, B = _pad_batch(x, block_b)
+    qp, _ = _pad_batch(q, block_b)
+    return dist_l_pallas(xp, qp, block_b=block_b,
+                         interpret=_interpret())[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def ksort_l(d, k: int):
+    """d: [B, M] -> (vals [B, k] ascending, idx [B, k])."""
+    if _use_ref():
+        return ref.ksort_l_ref(d, k)
+    bb = _pick_block_b(d.shape[0], d.shape[1])
+    dp, B = _pad_batch(d, bb)
+    v, i = ksort_l_pallas(dp, k, block_b=bb, interpret=_interpret())
+    return v[:B], i[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def dist_h(x, q, *, block_b: int = 8):
+    """x: [B, K, D]; q: [B, D] -> [B, K] f32 squared distances."""
+    if _use_ref():
+        return ref.dist_h_ref(x, q)
+    xp, B = _pad_batch(x, block_b)
+    qp, _ = _pad_batch(q, block_b)
+    return dist_h_pallas(xp, qp, block_b=block_b,
+                         interpret=_interpret())[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def fused_filter(x, q, k: int):
+    """pHNSW step 2: x [B, M, dl], q [B, dl] -> top-k (vals, idx)."""
+    if _use_ref():
+        return ref.fused_filter_ref(x, q, k)
+    bb = _pick_block_b(x.shape[0], x.shape[1])
+    xp, B = _pad_batch(x, bb)
+    qp, _ = _pad_batch(q, bb)
+    v, i = fused_filter_pallas(xp, qp, k, block_b=bb,
+                               interpret=_interpret())
+    return v[:B], i[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128):
+    """q: [B, H, S, d]; k, v: [B, H, T, d] -> [B, H, S, d]."""
+    if _use_ref():
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  bq=bq, bk=bk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("bk",))
+def decode_attention(q, k, v, length, *, bk: int = 512):
+    """q: [B, H, d]; k, v: [B, H, T, d]; length [B] -> [B, H, d]."""
+    if _use_ref():
+        return ref.decode_attention_ref(q, k, v, length)
+    return decode_attention_pallas(q, k, v, length, bk=bk,
+                                   interpret=_interpret())
+
+
+# re-export the oracles for tests/benchmarks
+refs = ref

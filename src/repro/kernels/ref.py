@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the definitional semantics; kernels must match it to
+float tolerance under ``interpret=True`` (CPU) and on TPU. Property
+tests in tests/test_kernels.py sweep shapes/dtypes against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# pHNSW kernels
+# ---------------------------------------------------------------------------
+
+def dist_l_ref(x, q):
+    """Low-dim squared distances (paper Dist.L).
+    x: [B, M, dl]; q: [B, dl] -> [B, M] float32."""
+    d = x.astype(jnp.float32) - q.astype(jnp.float32)[:, None, :]
+    return jnp.sum(d * d, axis=-1)
+
+
+def ksort_l_ref(d, k: int, valid=None):
+    """Comparison-matrix top-k (paper kSort.L): rank[i] = #{j : (d_j, j) <
+    (d_i, i)}; the k smallest (dist, index) pairs, ascending.
+    d: [B, M] -> (vals [B, k] f32, idx [B, k] i32). ``valid``: optional
+    [B, M] bool mask; invalid entries sort last."""
+    d = d.astype(jnp.float32)
+    if valid is not None:
+        d = jnp.where(valid, d, jnp.inf)
+    B, M = d.shape
+    lt = d[:, :, None] > d[:, None, :]                        # d_i > d_j
+    eq = d[:, :, None] == d[:, None, :]
+    idx_gt = jnp.arange(M)[:, None] > jnp.arange(M)[None, :]
+    cmp = lt | (eq & idx_gt[None])
+    rank = jnp.sum(cmp, axis=-1).astype(jnp.int32)            # [B, M]
+    onehot = rank[:, :, None] == jnp.arange(k)[None, None, :]  # [B, M, k]
+    vals = jnp.sum(jnp.where(onehot, d[:, :, None], 0.0), axis=1)
+    idx = jnp.sum(jnp.where(onehot, jnp.arange(M)[None, :, None], 0),
+                  axis=1).astype(jnp.int32)
+    return vals, idx
+
+
+def dist_h_ref(x, q):
+    """High-dim re-rank distances (paper Dist.H).
+    x: [B, K, D]; q: [B, D] -> [B, K] float32."""
+    d = x.astype(jnp.float32) - q.astype(jnp.float32)[:, None, :]
+    return jnp.sum(d * d, axis=-1)
+
+
+def fused_filter_ref(x, q, k: int):
+    """Fused Dist.L + kSort.L (one VMEM residency; pHNSW steps 2+filter).
+    x: [B, M, dl]; q: [B, dl] -> (vals [B,k], idx [B,k])."""
+    return ksort_l_ref(dist_l_ref(x, q), k)
+
+
+# ---------------------------------------------------------------------------
+# attention kernels
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal=True, window: int = 0):
+    """q: [B, H, S, d]; k, v: [B, H, T, d] -> [B, H, S, d].
+    Plain softmax attention; H == KV heads (GQA expansion by caller)."""
+    S, T = q.shape[2], k.shape[2]
+    scale = q.shape[-1] ** -0.5
+    lg = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                    preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(S)[:, None] + (T - S)   # aligned at the end
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    lg = jnp.where(mask[None, None], lg, NEG_INF)
+    w = jax.nn.softmax(lg, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w.astype(v.dtype), v)
+
+
+def decode_attention_ref(q, k, v, length):
+    """One-token decode. q: [B, H, d]; k, v: [B, H, T, d];
+    length: [B] int32 (valid prefix) -> [B, H, d]."""
+    scale = q.shape[-1] ** -0.5
+    lg = jnp.einsum("bhd,bhtd->bht", q, k,
+                    preferred_element_type=jnp.float32) * scale
+    T = k.shape[2]
+    mask = jnp.arange(T)[None, :] < length[:, None]           # [B, T]
+    lg = jnp.where(mask[:, None, :], lg, NEG_INF)
+    w = jax.nn.softmax(lg, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", w.astype(v.dtype), v)

@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (device count is now locked at 512) ---
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.launch.hlo_cost import hlo_cost
+
+from repro.configs import (ARCH_IDS, SHAPES, cell_supported, get_config,
+                           get_shape)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+# --------------------------------------------------------------------------
+# HLO collective accounting
+# --------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+def _split_computations(hlo: str):
+    """Map computation name -> text block."""
+    comps = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        # entry: `%name (args...) -> ret {`  or  `ENTRY %name ...{`
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*{", line)
+        if m:
+            if cur_name is not None:
+                comps[cur_name] = cur_lines
+            cur_name, cur_lines = m.group(1), []
+        elif cur_name is not None:
+            cur_lines.append(line)
+            if line.strip() == "}":
+                comps[cur_name] = cur_lines
+                cur_name = None
+    if cur_name is not None:
+        comps[cur_name] = cur_lines
+    return comps
+
+
+def _direct_collective_bytes(lines):
+    per_cat = {c: 0 for c in _COLLECTIVES}
+    for line in lines:
+        s = line.strip()
+        for cat in _COLLECTIVES:
+            # match the op use, e.g. `= bf16[...]{...} all-gather(` and
+            # `all-gather-start(`; skip -done ops (no new data movement)
+            if re.search(rf"\b{cat}(-start)?\(", s):
+                # operand shapes: inside the call parens
+                call = s.split(f"{cat}", 1)[1]
+                shapes = _SHAPE_RE.findall(call)
+                if not shapes:  # fall back to result shape
+                    shapes = _SHAPE_RE.findall(s.split("=")[1])
+                per_cat[cat] += sum(_shape_bytes(d, n) for d, n in shapes)
+                break
+    return per_cat
+
+
+def _trip_count(cond_lines) -> int:
+    """Heuristic scan trip count: the largest s32 constant compared in the
+    while condition."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"s32\[\]\s+constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes(hlo: str):
+    """Per-category collective bytes for one executed step, multiplying
+    collectives inside while (scan) bodies by their trip count."""
+    comps = _split_computations(hlo)
+    # find while ops: body=%X, condition=%Y
+    while_re = re.compile(r"body=%?([\w\.\-]+).*?condition=%?([\w\.\-]+)")
+    memo = {}
+
+    def total(comp_name):
+        if comp_name in memo:
+            return memo[comp_name]
+        lines = comps.get(comp_name, [])
+        per_cat = _direct_collective_bytes(lines)
+        for line in lines:
+            m = while_re.search(line)
+            if m:
+                body, cond = m.group(1), m.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                sub = total(body)
+                for c in _COLLECTIVES:
+                    per_cat[c] += trips * sub[c]
+        memo[comp_name] = per_cat
+        return per_cat
+
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: sum everything once
+        return _direct_collective_bytes(hlo.splitlines())
+    # also count calls (fusions/calls execute once; nested whiles handled)
+    per_cat = total(entry)
+    call_re = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+    seen = {entry}
+
+    def add_calls(comp_name):
+        for line in comps.get(comp_name, []):
+            m = call_re.search(line)
+            if m and m.group(1) not in seen:
+                seen.add(m.group(1))
+                sub = total(m.group(1))
+                for c in _COLLECTIVES:
+                    per_cat[c] += sub[c]
+                add_calls(m.group(1))
+    add_calls(entry)
+    return per_cat
+
+
+# --------------------------------------------------------------------------
+# dry-run driver
+# --------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "auto", out_dir: Path = RESULTS_DIR,
+             profile: str = "tp") -> dict:
+    shape = get_shape(shape_name)
+    cfg = get_config(arch)
+    support = cell_supported(cfg, shape)
+    if variant == "auto":
+        variant = support
+    if variant == "retrieval":
+        from repro.configs.base import RetrievalConfig
+        # partitions = actual cache shards: (data x model) for batch=1
+        # sequence sharding, model-only otherwise
+        parts = 256 if shape.global_batch == 1 else 16
+        cfg = cfg.replace(retrieval=RetrievalConfig(
+            enabled=True, d_low=16, topk=2048, block=128, partitions=parts))
+    if profile != "tp":
+        cfg = cfg.replace(shard_profile=profile)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if profile != "tp":
+        mesh_name = f"{mesh_name}-{profile}"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "variant": variant, "profile": profile, "ok": False}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered = lower_step(cfg, mesh, shape)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                         "output_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    rec[attr] = int(v)
+        cost = compiled.cost_analysis()
+        if cost:
+            rec["flops"] = float(cost.get("flops", -1))
+            rec["bytes_accessed"] = float(cost.get("bytes accessed", -1))
+            rec["transcendentals"] = float(cost.get("transcendentals", -1))
+        hlo = compiled.as_text()
+        # trip-count-aware per-chip costs (launch/hlo_cost.py): XLA's own
+        # cost_analysis counts scan bodies once, so these are the numbers
+        # the roofline uses.
+        wc = hlo_cost(hlo)
+        rec["walker_flops"] = wc.flops
+        rec["walker_dot_bytes"] = wc.dot_bytes
+        rec["walker_collectives"] = wc.collective
+        rec["collectives"] = collective_bytes(hlo)   # legacy parser
+        rec["collective_bytes_total"] = int(wc.collective_bytes)
+        rec["hlo_bytes"] = len(hlo)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        gz = out_dir / f"{arch}__{shape_name}__{mesh_name}.hlo.txt.gz"
+        gz.write_bytes(gzip.compress(hlo.encode()))
+        rec["ok"] = True
+        print(compiled.memory_analysis())
+    except Exception as e:  # record the failure; the sweep continues
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    status = "OK" if rec["ok"] else f"FAIL ({rec.get('error', '?')[:120]})"
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name} [{variant}]: "
+          f"{status} ({rec['total_s']}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--variant", default="auto",
+                    choices=["auto", "native", "retrieval"])
+    ap.add_argument("--profile", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells whose JSON already reports ok")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes[args.mesh]:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                if args.profile != "tp":
+                    mesh_name = f"{mesh_name}-{args.profile}"
+                f = RESULTS_DIR / f"{arch}__{shape}__{mesh_name}.json"
+                if args.skip_done and f.exists():
+                    try:
+                        if json.loads(f.read_text()).get("ok"):
+                            print(f"[dryrun] skip done: {f.name}", flush=True)
+                            continue
+                    except Exception:
+                        pass
+                rec = run_cell(arch, shape, mp, args.variant,
+                               profile=args.profile)
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

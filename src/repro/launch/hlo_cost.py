@@ -1,0 +1,368 @@
+"""Trip-count-aware cost extraction from compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` over 126 layers contributes a single layer's FLOPs, so
+roofline terms derived from it understate per-step work by the loop trip
+count. This walker recomputes costs with loop multiplication:
+
+  cost(comp) = direct ops in comp
+             + trips(while) * cost(body)     for each while op
+               (trips from the while op's backend_config
+                known_trip_count, falling back to the largest s32
+                constant in the condition computation)
+             + cost(callee)                  for each call site
+               (fusion calls=, reduce/map/scatter to_apply=, etc.)
+
+Direct ops counted (operand shapes resolved through a per-computation
+symbol table, since scheduled HLO references operands by name):
+  * ``dot``: FLOPs = 2 x prod(result) x prod(lhs contracting dims);
+    bytes = operand + result sizes. Dots dominate both compute and HBM
+    traffic for every assigned architecture (attention einsums read the
+    KV cache; matmuls read the weights); elementwise traffic is NOT
+    counted — the memory term is a documented lower bound.
+  * collectives (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute): operand bytes, per category.
+
+All shapes in the per-device HLO are per-shard, so every number is
+per-chip per-step.
+"""
+from __future__ import annotations
+
+import gzip
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+          "pred": 1, "c64": 8, "c128": 16}
+_DTYPES = "|".join(_BYTES)
+_DEF_RE = re.compile(
+    rf"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*({_DTYPES})\[([0-9,]*)\]")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count["\\]*:\s*\{["\\]*n["\\]*:\s*(\d+)')
+_WHILE_RE = re.compile(r"\bwhile\(")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|branch_computations)="
+                      r"\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+
+
+def _dims(dimstr: str) -> List[int]:
+    return [int(d) for d in dimstr.split(",") if d]
+
+
+def _numel(dimstr: str) -> int:
+    n = 1
+    for d in _dims(dimstr):
+        n *= d
+    return n
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    collective: Dict[str, float] = field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.dot_bytes += mult * other.dot_bytes
+        for c in _COLLECTIVES:
+            self.collective[c] += mult * other.collective[c]
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective.values())
+
+    def as_dict(self) -> Dict:
+        return {"flops": self.flops, "dot_bytes": self.dot_bytes,
+                "collective_bytes": self.collective_bytes,
+                "collective": dict(self.collective)}
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur, lines = None, []
+    for line in hlo.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$",
+                     line)
+        if m:
+            if cur is not None:
+                comps[cur] = lines
+            cur, lines = m.group(1), []
+        elif cur is not None:
+            lines.append(line)
+            if line.strip() == "}":
+                comps[cur] = lines
+                cur = None
+    if cur is not None:
+        comps[cur] = lines
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    for line in hlo.splitlines():
+        m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+        if m:
+            return m.group(1)
+    return None
+
+
+_OPKIND_RE = re.compile(
+    rf"^\s*(?:ROOT\s+)?%[\w\.\-]+\s*=\s*(?:{_DTYPES})\[[0-9,]*\]\S*\s+"
+    r"([\w\-]+)\(")
+_GTE_IDX_RE = re.compile(r"index=(\d+)")
+
+
+def _symbols(lines: List[str]) -> Dict[str, Tuple[str, str, str,
+                                                  Optional[str],
+                                                  Optional[int]]]:
+    """name -> (dtype, dims, opkind, first_operand, gte_index)."""
+    table = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        mk = _OPKIND_RE.match(line)
+        kind = mk.group(1) if mk else ""
+        first = None
+        if mk:
+            rest = line.split(f"{kind}(", 1)[1]
+            mo = _OPND_RE.search(rest.split(")")[0])
+            if mo:
+                first = mo.group(1)
+        gte = None
+        if kind == "get-tuple-element":
+            mi = _GTE_IDX_RE.search(line)
+            if mi:
+                gte = int(mi.group(1))
+        table[m.group(1)] = (m.group(2), m.group(3), kind, first, gte)
+    return table
+
+
+_PASSTHRU = {"convert", "copy", "bitcast", "all-gather", "transpose",
+             "reshape", "fusion", "dynamic-slice"}
+
+
+class Resolver:
+    """Origin-dtype resolution across computation boundaries: XLA:CPU
+    widens bf16 dot operands to f32 (no native bf16 GEMM) and hoists the
+    convert out of scan loops, so the f32 origin may be a while-carry
+    element; on the TPU target those values stay bf16. We chase
+    convert/copy/gather chains, and hop get-tuple-element(body param, i)
+    to operand i of the parent's while-init tuple."""
+
+    def __init__(self, comps: Dict[str, List[str]]):
+        self.comps = comps
+        self.syms = {n: _symbols(l) for n, l in comps.items()}
+        # body comp -> (parent comp, while tuple-operand names)
+        self.body_parent: Dict[str, Tuple[str, List[str]]] = {}
+        for parent, lines in comps.items():
+            for line in lines:
+                if not _WHILE_RE.search(line):
+                    continue
+                mb = _BODY_RE.search(line)
+                if not mb:
+                    continue
+                # while operand: a tuple var (tuple-shaped defs aren't in
+                # the symbol table; parse the def line textually)
+                args = _op_args(line.strip(), "while")
+                elems: List[str] = []
+                if len(args) == 1:
+                    for l2 in comps[parent]:
+                        s2 = l2.strip()
+                        if f"%{args[0]} = " in s2 and " tuple(" in s2:
+                            elems = _op_args(s2, "tuple")
+                            break
+                self.body_parent[mb.group(1)] = (parent, elems)
+
+    def consumed_as_bf16(self, comp: str, name: str) -> bool:
+        """True if %name's only array-typed uses flow into bf16-producing
+        defs (convert/fusion) — i.e. the f32 is a CPU-backend artifact."""
+        lines = self.comps.get(comp, [])
+        uses = 0
+        bf16_uses = 0
+        pat = f"%{name}"
+        for line in lines:
+            s = line.strip()
+            m = _DEF_RE.match(s)
+            if m is None or m.group(1) == name:
+                continue
+            # operand appears in this def?
+            if pat + ")" in s or pat + "," in s or pat + " " in s:
+                uses += 1
+                if m.group(2) == "bf16":
+                    bf16_uses += 1
+        return uses > 0 and uses == bf16_uses
+
+    def origin_is_bf16(self, comp: str, name: str, hops: int = 0) -> bool:
+        if hops > 10:
+            return False
+        syms = self.syms.get(comp, {})
+        e = syms.get(name)
+        if e is None:
+            return False
+        dt, _, kind, first, gte = e
+        if dt == "bf16":
+            return True
+        if kind == "get-tuple-element" and gte is not None \
+                and first not in syms:
+            # tuple is the computation's parameter: hop to the parent's
+            # while-init tuple element
+            pb = self.body_parent.get(comp)
+            if pb and gte < len(pb[1]):
+                return self.origin_is_bf16(pb[0], pb[1][gte], hops + 1)
+            return False
+        if kind in _PASSTHRU | {"get-tuple-element"} and first is not None:
+            return self.origin_is_bf16(comp, first, hops + 1)
+        return False
+
+
+def _effective_bytes(name: str, syms, resolver: Optional["Resolver"] = None,
+                     comp: str = "") -> float:
+    if name not in syms:
+        return 0.0
+    dt, dims = syms[name][0], syms[name][1]
+    elems = _numel(dims)
+    if dt == "f32" and resolver is not None \
+            and resolver.origin_is_bf16(comp, name):
+        return elems * 2
+    return elems * _BYTES[dt]
+
+
+def _op_args(s: str, opname: str) -> List[str]:
+    """Operand names inside 'opname(...)' (first level)."""
+    try:
+        inner = s.split(f" {opname}(", 1)[1]
+    except IndexError:
+        return []
+    depth, out, cur = 1, [], []
+    for ch in inner:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                out.append("".join(cur))
+                break
+        elif ch == "," and depth == 1:
+            out.append("".join(cur))
+            cur = []
+            continue
+        cur.append(ch)
+    names = []
+    for frag in out:
+        m = _OPND_RE.search(frag)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def _direct_cost(lines: List[str], syms, resolver: Optional[Resolver] = None,
+                 comp: str = "") -> Cost:
+    c = Cost()
+    for line in lines:
+        s = line.strip()
+        mdef = _DEF_RE.match(s)
+        if " dot(" in s and mdef:
+            out_dt, out_dims = mdef.group(2), mdef.group(3)
+            out_elems = _numel(out_dims)
+            ops = _op_args(s, "dot")
+            contract = 1
+            mcon = _CONTRACT_RE.search(s)
+            if mcon and ops and ops[0] in syms:
+                lhs_dims = _dims(syms[ops[0]][1])
+                for d in _dims(mcon.group(1)):
+                    if d < len(lhs_dims):
+                        contract *= lhs_dims[d]
+            out_bytes = out_elems * _BYTES[out_dt]
+            if out_dt == "f32" and resolver is not None and all(
+                    resolver.origin_is_bf16(comp, n) for n in ops[:2]
+                    if n in syms):
+                # f32 dot fed by bf16-origin operands -> bf16 on TPU
+                out_bytes = out_elems * 2
+            c.flops += 2.0 * out_elems * contract
+            c.dot_bytes += out_bytes
+            for name in ops[:2]:
+                c.dot_bytes += _effective_bytes(name, syms, resolver, comp)
+            continue
+        for cat in _COLLECTIVES:
+            if re.search(rf"\b{cat}(-start)?\(", s):
+                op_label = cat + ("-start" if f"{cat}-start(" in s else "")
+                ops = _op_args(s, op_label)
+                total = sum(_effective_bytes(n, syms, resolver, comp)
+                            for n in ops)
+                if total == 0 and mdef:   # fall back to result shape
+                    total = _numel(mdef.group(3)) * _BYTES[mdef.group(2)]
+                # JAX-level dtype correction: XLA:CPU reduces raw f32 dot
+                # outputs; if this op's result is immediately narrowed to
+                # bf16, the TPU target reduces bf16 -> halve the bytes.
+                if mdef and mdef.group(2) == "f32" and resolver is not None \
+                        and resolver.consumed_as_bf16(comp, mdef.group(1)):
+                    total *= 0.5
+                c.collective[cat] += total
+                break
+    return c
+
+
+def _trips(s: str, comps, fallback_cond: Optional[str]) -> int:
+    m = _TRIP_RE.search(s)
+    if m:
+        return int(m.group(1))
+    best = 1
+    if fallback_cond and fallback_cond in comps:
+        for line in comps[fallback_cond]:
+            for mm in re.finditer(r"s32\[\]\s+constant\((\d+)\)", line):
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def hlo_cost(hlo: str) -> Cost:
+    comps = split_computations(hlo)
+    resolver = Resolver(comps)
+    memo: Dict[str, Cost] = {}
+
+    def walk(name: str, stack=()) -> Cost:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return Cost()
+        lines = comps[name]
+        syms = resolver.syms[name]
+        total = Cost()
+        total.add(_direct_cost(lines, syms, resolver, name))
+        for line in lines:
+            s = line.strip()
+            if _WHILE_RE.search(s):
+                mb = _BODY_RE.search(s)
+                if mb:
+                    mc = _COND_RE.search(s)
+                    trips = _trips(s, comps, mc.group(1) if mc else None)
+                    total.add(walk(mb.group(1), stack + (name,)), trips)
+                continue
+            mcall = _CALL_RE.search(s)
+            if mcall:
+                for callee in re.split(r",\s*%?", mcall.group(1)):
+                    total.add(walk(callee, stack + (name,)))
+        memo[name] = total
+        return total
+
+    entry = _entry_name(hlo)
+    if entry is None:
+        lines = hlo.splitlines()
+        return _direct_cost(lines, _symbols(lines))
+    total = walk(entry)
+    return total
+
+
+def load_hlo(path: Path) -> str:
+    if str(path).endswith(".gz"):
+        with gzip.open(path, "rt") as f:
+            return f.read()
+    return Path(path).read_text()

@@ -1,0 +1,123 @@
+"""Roofline analysis from the compiled dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, from experiments/dryrun/*.json:
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s        (197 TF bf16)
+  memory term     = HLO_bytes_per_chip / HBM_bw             (819 GB/s)
+  collective term = collective_bytes_per_chip / link_bw     (50 GB/s ICI)
+
+``cost_analysis()`` numbers are per-device after SPMD partitioning
+(verified against a hand-checked sharded matmul); collective bytes are
+parsed from the per-device HLO with while-loop trip-count multiplication
+(launch/dryrun.py), so all three terms are per-chip step times.
+
+MODEL_FLOPS (the useful-work floor) is 6·N_active·tokens for training and
+2·N_active·tokens for inference; the ratio MODEL_FLOPS/HLO_FLOPs exposes
+remat recompute and padding waste. The bottleneck column names the term
+the §Perf loop should attack.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e class)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def model_flops_per_chip(arch: str, shape_name: str, n_chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_chips
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return None
+    n_chips = 512 if rec["mesh"] == "pod2x16x16" else 256
+    flops = rec.get("walker_flops") or rec["flops"]
+    mem_bytes = rec.get("walker_dot_bytes") or rec["bytes_accessed"]
+    t_comp = flops / PEAK_FLOPS
+    t_mem = mem_bytes / HBM_BW
+    t_coll = rec["collective_bytes_total"] / ICI_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get).split("_")[0]
+    mf = model_flops_per_chip(rec["arch"], rec["shape"], n_chips)
+    step_s = max(terms.values())            # perfectly-overlapped bound
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "variant": rec.get("variant", "native"),
+        **{k: round(v, 6) for k, v in terms.items()},
+        "bottleneck": bottleneck,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": round(
+            mf / max(rec.get("walker_flops") or rec["flops"], 1.0), 3),
+        "roofline_fraction": round(
+            (mf / PEAK_FLOPS) / max(step_s, 1e-12), 3),
+        "hw_mfu_bound": round(t_comp / max(step_s, 1e-12), 3),
+        "temp_gb": round(rec.get("temp_size_in_bytes", 0) / 1e9, 2),
+        "args_gb": round(rec.get("argument_size_in_bytes", 0) / 1e9, 2),
+    }
+
+
+def load_all(mesh: str = "pod16x16") -> List[Dict]:
+    rows = []
+    for f in sorted(RESULTS_DIR.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        row = analyze(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def what_would_help(row: Dict) -> str:
+    b = row["bottleneck"]
+    if b == "compute":
+        if row["useful_flops_ratio"] < 0.4:
+            return ("compute-bound but mostly recompute/padding: relax "
+                    "remat policy or cut padded-expert waste")
+        return "compute-bound near useful-flops: raise MXU utilization"
+    if b == "memory":
+        return ("HBM-bound: shrink cache/param traffic (quantize KV, "
+                "fuse ops, low-dim filter first)")
+    return ("collective-bound: reshard to cut gathered bytes or overlap "
+            "collectives with compute")
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+    rows = load_all(args.mesh)
+    cols = ["arch", "shape", "variant", "compute_s", "memory_s",
+            "collective_s", "bottleneck", "useful_flops_ratio",
+            "roofline_fraction", "temp_gb"]
+    print(",".join(cols))
+    lines = [",".join(cols)]
+    for r in rows:
+        line = ",".join(str(r[c]) for c in cols)
+        print(line)
+        lines.append(line)
+    if args.csv:
+        Path(args.csv).write_text("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

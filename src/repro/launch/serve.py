@@ -1,0 +1,81 @@
+"""Serving launcher: LM generation or pHNSW vector search.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --smoke
+  PYTHONPATH=src python -m repro.launch.serve --vector --n-points 8000
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def serve_lm(args):
+    from repro.configs import get_config, get_smoke_config
+    from repro.data.tokens import synthetic_batch, batch_extras_for
+    from repro.models import get_model
+    from repro.serve.engine import GenerationEngine
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    api = get_model(cfg)
+    params = api.init(jax.random.key(args.seed))
+    eng = GenerationEngine(cfg, params, max_new=args.max_new,
+                           temperature=args.temperature)
+    batch = synthetic_batch(args.seed, 0, args.batch, args.prompt_len,
+                            cfg.vocab, extras=batch_extras_for(cfg))
+    batch.pop("labels")
+    if "frames" in batch or "patches" in batch:
+        for k in ("frames", "patches"):
+            if k in batch:
+                batch[k] = batch[k].astype(cfg.dtype)
+    res = eng.generate({k: jnp.asarray(v) for k, v in batch.items()})
+    print(f"[serve] batch={args.batch} prompt={args.prompt_len} "
+          f"new={res.steps}: prefill {res.prefill_s:.2f}s, "
+          f"decode {res.decode_s:.2f}s ({res.tokens_per_s:.1f} tok/s)")
+    print(f"[serve] sample tokens: {res.tokens[0][:16].tolist()}")
+
+
+def serve_vectors(args):
+    from repro.configs.base import PHNSWConfig
+    from repro.core.graph import cached_graph
+    from repro.core.pca import fit_pca
+    from repro.core.search_jax import build_packed
+    from repro.data.vectors import make_sift_like, make_queries
+    from repro.serve.vector_service import VectorSearchService
+
+    cfg = PHNSWConfig(name=f"serve{args.n_points}", n_points=args.n_points,
+                      ef_construction=60)
+    x = make_sift_like(args.n_points)
+    g = cached_graph(x, cfg, "experiments/data")
+    pca = fit_pca(x, cfg.d_low)
+    db = build_packed(g, pca.transform(x).astype(np.float32))
+    svc = VectorSearchService(db, pca, batch_size=args.batch)
+    queries = make_queries(x, args.n_queries)
+    idx, stats = svc.run_stream(queries)
+    print(f"[serve] {args.n_queries} queries: {stats['qps']:.0f} QPS, "
+          f"p50 {stats['p50_ms']:.1f}ms, p99 {stats['p99_ms']:.1f}ms")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vector", action="store_true")
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-points", type=int, default=8000)
+    ap.add_argument("--n-queries", type=int, default=256)
+    args = ap.parse_args()
+    if args.vector:
+        serve_vectors(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

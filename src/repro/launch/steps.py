@@ -1,0 +1,225 @@
+"""Step builders: jitted train / prefill / serve steps with full
+in/out shardings for a given (arch config, shape, mesh).
+
+These are shared by the real launchers (train.py / serve.py) and the
+multi-pod dry-run (dryrun.py) — the dry-run lowers exactly what the
+launchers run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import get_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def _logits_sharding(cfg, mesh):
+    """Vocab-sharded logits unless the vocab doesn't divide the model
+    axis (e.g. whisper's 51865)."""
+    if cfg.vocab % shd.axis_size(mesh, "model") == 0:
+        return _ns(mesh, None, "model")
+    return _ns(mesh, None, None)
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: _ns(mesh), tree)
+
+
+# --------------------------------------------------------------------------
+# cache shardings (name-dispatched, mirrors distributed/sharding.py rules)
+# --------------------------------------------------------------------------
+
+def cache_shardings(cfg, mesh: Mesh, abstract_cache, batch: int):
+    b_ax = shd.batch_axes(mesh)
+    b_size = 1
+    for a in b_ax:
+        b_size *= shd.axis_size(mesh, a)
+    bspec = b_ax if batch % b_size == 0 and batch >= b_size else None
+    # sequence axis of KV caches: model (+data when batch can't use it)
+    seq_ax = "model" if bspec is not None else tuple(list(b_ax) + ["model"])
+
+    def rule(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        if name in ("k", "v", "k_low", "k_sc", "v_sc"):  # [L,B,T,KV,*]
+            t = leaf.shape[2]
+            n_seq = 1
+            for a in (seq_ax if isinstance(seq_ax, tuple) else (seq_ax,)):
+                n_seq *= shd.axis_size(mesh, a)
+            sax = seq_ax if t % n_seq == 0 else None
+            return _ns(mesh, None, bspec, sax, None, None)
+        if name == "S":                  # rwkv state [L, B, H, hd, hd]
+            h = leaf.shape[2]
+            m = "model" if h % shd.axis_size(mesh, "model") == 0 else None
+            return _ns(mesh, None, bspec, m, None, None)
+        if name == "x_prev":             # [L, B, 1, D]
+            d = leaf.shape[3]
+            m = "model" if d % shd.axis_size(mesh, "model") == 0 else None
+            return _ns(mesh, None, bspec, None, m)
+        if name == "h":                  # rg-lru state [R, B, W]
+            w = leaf.shape[2]
+            m = "model" if w % shd.axis_size(mesh, "model") == 0 else None
+            return _ns(mesh, None, bspec, m)
+        if name == "conv":               # [R, B, 3, W]
+            w = leaf.shape[3]
+            m = "model" if w % shd.axis_size(mesh, "model") == 0 else None
+            return _ns(mesh, None, bspec, None, m)
+        raise KeyError(f"no cache sharding rule for {path}")
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_cache)
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Gradient-accumulation depth: keep per-device live activations
+    roughly constant across model widths (bigger d_model -> more
+    microbatches), bounded by the per-device batch."""
+    if getattr(cfg, "shard_profile", "tp") == "fsdp":
+        return 1   # the batch spreads over the whole mesh instead
+    b_ax = shd.batch_axes(mesh, cfg)
+    b_size = 1
+    for a in b_ax:
+        b_size *= shd.axis_size(mesh, a)
+    want = max(4, cfg.d_model // 2048)
+    mb = 1
+    while mb < want and shape.global_batch % (mb * 2) == 0 \
+            and (shape.global_batch // (mb * 2)) % b_size == 0:
+        mb *= 2
+    return mb
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                     opt_cfg: AdamWConfig = AdamWConfig(),
+                     microbatches: int = 0):
+    """Returns (jitted_step, specs) where specs holds all abstract
+    values + shardings needed to lower or to initialize real state.
+    microbatches=0 -> auto (default_microbatches)."""
+    api = get_model(cfg)
+    a_params = api.abstract_params()
+    p_sh = shd.param_shardings(cfg, a_params, mesh)
+    a_opt = jax.eval_shape(adamw_init, a_params)
+    o_sh = {"m": p_sh, "v": p_sh, "step": _ns(mesh)}
+    b_sh = shd.batch_sharding(cfg, mesh, shape, "train")
+    mb = microbatches or default_microbatches(cfg, shape, mesh)
+    arules = shd.act_rules(cfg, mesh, shape.global_batch // mb)
+
+    def train_step(params, opt_state, batch):
+        if mb == 1:
+            with shd.activation_rules(arules, mesh):
+                (loss, metrics), grads = jax.value_and_grad(
+                    api.loss, has_aux=True)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                batch)
+
+            def mb_body(acc, mbatch):
+                with shd.activation_rules(arules, mesh):
+                    (l, m), g = jax.value_and_grad(
+                        api.loss, has_aux=True)(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return acc, (l, m)
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, (ls, ms) = jax.lax.scan(mb_body, zero, mbs)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = jnp.mean(ls)
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+        new_p, new_o, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return new_p, new_o, {**metrics, **om}
+
+    a_metrics = jax.eval_shape(
+        lambda p, o, b: train_step(p, o, b)[2], a_params, a_opt,
+        _abstract_batch(api, shape))
+    step = jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, _replicated(mesh, a_metrics)),
+        donate_argnums=(0, 1),
+    )
+    specs = dict(api=api, a_params=a_params, p_sh=p_sh, a_opt=a_opt,
+                 o_sh=o_sh, b_sh=b_sh)
+    return step, specs
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    api = get_model(cfg)
+    a_params = api.abstract_params()
+    p_sh = shd.param_shardings(cfg, a_params, mesh)
+    b_sh = shd.batch_sharding(cfg, mesh, shape, "prefill")
+    arules = shd.act_rules(cfg, mesh, shape.global_batch)
+    a_cache = api.abstract_cache(shape.global_batch, shape.seq_len)
+    c_sh = cache_shardings(cfg, mesh, a_cache, shape.global_batch)
+    lg_sh = _logits_sharding(cfg, mesh)
+
+    def prefill_step(params, batch):
+        with shd.activation_rules(arules, mesh):
+            return api.prefill(params, batch)
+
+    step = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                   out_shardings=(lg_sh, c_sh))
+    return step, dict(api=api, a_params=a_params, p_sh=p_sh, b_sh=b_sh,
+                      a_cache=a_cache, c_sh=c_sh)
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    """One-token decode against a seq_len cache."""
+    api = get_model(cfg)
+    a_params = api.abstract_params()
+    p_sh = shd.param_shardings(cfg, a_params, mesh)
+    b_sh = shd.batch_sharding(cfg, mesh, shape, "decode")
+    a_cache = api.abstract_cache(shape.global_batch, shape.seq_len)
+    c_sh = cache_shardings(cfg, mesh, a_cache, shape.global_batch)
+    lg_sh = _logits_sharding(cfg, mesh)
+
+    def serve_step(params, cache, token, pos):
+        return api.decode_step(params, cache, token, pos)
+
+    step = jax.jit(
+        serve_step,
+        in_shardings=(p_sh, c_sh, b_sh["token"], b_sh["pos"]),
+        out_shardings=(lg_sh, c_sh),
+        donate_argnums=(1,),
+    )
+    return step, dict(api=api, a_params=a_params, p_sh=p_sh, b_sh=b_sh,
+                      a_cache=a_cache, c_sh=c_sh)
+
+
+def _abstract_batch(api, shape: ShapeConfig):
+    return api.input_specs(shape)
+
+
+def lower_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    """Lower the appropriate step for a (cfg, shape) cell. Returns the
+    jax ``Lowered`` object."""
+    api = get_model(cfg)
+    specs_in = api.input_specs(shape)
+    with mesh:
+        if shape.kind == "train":
+            step, s = build_train_step(cfg, mesh, shape)
+            return step.lower(s["a_params"], s["a_opt"], specs_in)
+        if shape.kind == "prefill":
+            step, s = build_prefill_step(cfg, mesh, shape)
+            return step.lower(s["a_params"], specs_in)
+        step, s = build_serve_step(cfg, mesh, shape)
+        return step.lower(s["a_params"], s["a_cache"], specs_in["token"],
+                          specs_in["pos"])

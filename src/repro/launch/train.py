@@ -1,0 +1,58 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+      --shape train_4k --smoke --steps 20
+
+``--smoke`` runs the reduced config on the host device; on a real TPU
+pod, omit it and the production mesh is built from the job's device set.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_shape, get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim import AdamWConfig
+from repro.train.loop import TrainLoop, TrainLoopConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shape on the host device")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = get_smoke_config(args.arch)
+        shape = ShapeConfig("smoke", seq_len=64, global_batch=8, kind="train")
+        mesh = make_host_mesh()
+    else:
+        cfg = get_config(args.arch)
+        shape = get_shape(args.shape)
+        mesh = make_production_mesh()
+
+    loop = TrainLoop(
+        cfg, shape, mesh,
+        TrainLoopConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                        ckpt_dir=args.ckpt_dir, seed=args.seed,
+                        microbatches=args.microbatches,
+                        resume=not args.no_resume),
+        AdamWConfig(lr=args.lr, total_steps=max(args.steps, 10)))
+    out = loop.run()
+    print(f"[train] done: {out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Unified model API: family dispatch + input_specs (ShapeDtypeStruct
+stand-ins for the dry-run; no device allocation)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm, transformer
+
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "encdec": encdec,
+    "hybrid": hybrid,
+    "ssm": ssm,
+}
+
+
+class ModelApi:
+    """Thin namespace binding a config to its family implementation."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.mod = _FAMILY_MODULES[cfg.family]
+
+    # --- parameters ---
+    def init(self, key):
+        return self.mod.init(self.cfg, key)
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.mod.init(
+            self.cfg, jax.random.key(0)))
+
+    # --- steps ---
+    def loss(self, params, batch):
+        return self.mod.loss(self.cfg, params, batch)
+
+    def prefill(self, params, batch):
+        return self.mod.prefill(self.cfg, params, batch)
+
+    def decode_step(self, params, cache, token, pos):
+        return self.mod.decode_step(self.cfg, params, cache, token, pos)
+
+    def init_cache(self, batch: int, seq_len: int):
+        return self.mod.init_cache(self.cfg, batch, seq_len)
+
+    def abstract_cache(self, batch: int, seq_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, seq_len))
+
+    # --- dry-run input specs ---
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        sds = jax.ShapeDtypeStruct
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "train":
+            specs = {"tokens": sds((B, S), jnp.int32),
+                     "labels": sds((B, S), jnp.int32)}
+        elif shape.kind == "prefill":
+            specs = {"tokens": sds((B, S), jnp.int32)}
+        else:  # decode: one new token against a seq_len cache
+            specs = {"token": sds((B, 1), jnp.int32),
+                     "pos": sds((), jnp.int32)}
+        if cfg.family == "encdec" and shape.kind != "decode":
+            specs["frames"] = sds((B, cfg.enc_frames, cfg.d_model), dt)
+        if cfg.vis_tokens and shape.kind != "decode":
+            specs["patches"] = sds((B, cfg.vis_tokens, cfg.d_model), dt)
+        return specs
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(cfg)

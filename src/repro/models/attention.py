@@ -1,0 +1,260 @@
+"""Attention: GQA/MHA/MQA, sliding-window / local, cross-attention, and
+single-token decode against a (possibly sequence-sharded) KV cache.
+
+Training/prefill use a q-chunked formulation (``lax.scan`` over query
+blocks) so the [S, T] score matrix is never materialized — this is the
+pure-jnp analogue of the Pallas ``flash_attention`` kernel in
+``repro/kernels`` and serves as its distribution-friendly XLA path.
+Local/sliding-window attention uses a *banded* variant: each query block
+only reads a ``window + chunk`` KV slice (O(S·w) instead of O(S²)).
+
+Decode attention is a plain einsum over the full cache: with the cache
+sequence axis sharded (flash-decoding style), GSPMD turns the softmax
+max/sum and the PV contraction into all-reduces over the sharded axis —
+the partial-softmax merge falls out of the partitioner.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attn(cfg, key, dtype):
+    d, n, kvh, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
+    ks = split_keys(key, ["wq", "wk", "wv", "wo", "rp"])
+    p = {
+        "wq": dense_init(ks["wq"], (d, n * hd), dtype=dtype),
+        "wk": dense_init(ks["wk"], (d, kvh * hd), dtype=dtype),
+        "wv": dense_init(ks["wv"], (d, kvh * hd), dtype=dtype),
+        "wo": dense_init(ks["wo"], (n * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n * hd,), dtype)
+        p["bk"] = jnp.zeros((kvh * hd,), dtype)
+        p["bv"] = jnp.zeros((kvh * hd,), dtype)
+    if cfg.retrieval.enabled:
+        from repro.models.retrieval_attention import init_retrieval
+        p.update(init_retrieval(cfg, ks["rp"], dtype))
+    return p
+
+
+def _project_q(cfg, p, x):
+    B, S, _ = x.shape
+    n, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    return q.reshape(B, S, n, hd)
+
+
+def _project_kv(cfg, p, x):
+    B, S, _ = x.shape
+    kvh, hd = cfg.kv_heads, cfg.resolved_head_dim
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return k.reshape(B, S, kvh, hd), v.reshape(B, S, kvh, hd)
+
+
+def _merge_heads(cfg, p, o):
+    B, S = o.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+# ------------------------ q-chunked core -----------------------------------
+
+def blocked_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
+                      window: int = 0, q_chunk: int = 256):
+    """q: [B, S, N, Hd]; k, v: [B, T, KV, Hd]; positions int32 [S]/[T].
+    Returns [B, S, N, Hd]. N must be a multiple of KV (GQA)."""
+    B, S, N, Hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = N // KV
+    scale = Hd ** -0.5
+    qg = q.reshape(B, S, KV, G, Hd)
+    c = min(q_chunk, S)
+    while S % c:
+        c -= 1  # S is a power-of-two in all assigned shapes; fallback for odd S
+    n_chunks = S // c
+
+    banded = window > 0 and T > window + c
+    if banded:
+        # pad KV on the left so every band slice is in-bounds
+        pad = window
+        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        kv_pos_p = jnp.pad(kv_pos, (pad, 0), constant_values=-1)
+        band = window + c
+
+    def one_chunk(i):
+        qs = i * c
+        qc = jax.lax.dynamic_slice_in_dim(qg, qs, c, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, qs, c, axis=0)
+        if banded:
+            # q block covers absolute kv range [qs, qs + c); band starts at
+            # qs + pad - window = qs (in padded coords) of length window + c
+            kc = jax.lax.dynamic_slice_in_dim(kp, qs, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(vp, qs, band, axis=1)
+            kpos = jax.lax.dynamic_slice_in_dim(kv_pos_p, qs, band, axis=0)
+        else:
+            kc, vc, kpos = k, v, kv_pos
+        lg = jnp.einsum("bskgh,btkh->bskgt", qc, kc,
+                        preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((c, kpos.shape[0]), bool)
+        if causal:
+            mask &= qp[:, None] >= kpos[None, :]
+        if window > 0:
+            mask &= (qp[:, None] - kpos[None, :]) < window
+        mask &= kpos[None, :] >= 0
+        lg = jnp.where(mask[None, :, None, None, :], lg, NEG_INF)
+        w = jax.nn.softmax(lg, axis=-1)
+        oc = jnp.einsum("bskgt,btkh->bskgh", w.astype(v.dtype), vc)
+        return oc.reshape(B, c, N, Hd)
+
+    if n_chunks == 1:
+        return one_chunk(0)
+    outs = jax.lax.map(one_chunk, jnp.arange(n_chunks))   # [n, B, c, N, Hd]
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, N, Hd)
+
+
+# ------------------------ block-level APIs ----------------------------------
+
+def attn_forward(cfg, p, x, positions, *, causal=True, window=None,
+                 kv_src=None, kv_positions=None):
+    """Self- or cross-attention over a full sequence (train / prefill).
+    kv_src: encoder states for cross-attention (no rope, no causal)."""
+    q = _project_q(cfg, p, x)
+    src = x if kv_src is None else kv_src
+    k, v = _project_kv(cfg, p, src)
+    w = cfg.window if window is None else window
+    if kv_src is None and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kv_pos = positions
+    else:
+        kv_pos = kv_positions if kv_positions is not None else \
+            jnp.arange(src.shape[1], dtype=jnp.int32)
+    o = blocked_attention(q, k, v, positions, kv_pos,
+                          causal=causal and kv_src is None, window=w or 0)
+    return _merge_heads(cfg, p, o)
+
+
+def attn_prefill(cfg, p, x, positions, cache_len: int, *, window=None):
+    """Prefill: forward + return the KV slices to install in the cache."""
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, x)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    w = cfg.window if window is None else window
+    o = blocked_attention(q, k, v, positions, positions, causal=True,
+                          window=w or 0)
+    return _merge_heads(cfg, p, o), (k, v)
+
+
+def attn_decode(cfg, p, x, cache, pos, *, window=None):
+    """One-token decode. x: [B, 1, D]; cache: {"k","v"}: [B, T, KV, Hd]
+    (T = full seq for dense archs, T = window for SWA/local archs — the
+    cache is then a ring buffer indexed pos % T). pos: scalar int32.
+    Returns (y [B,1,D], new_cache)."""
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    q = _project_q(cfg, p, x)
+    k_new, v_new = _project_kv(cfg, p, x)
+    if cfg.rope_theta > 0:
+        pvec = jnp.full((1,), pos, jnp.int32)
+        q = apply_rope(q, pvec, cfg.rope_theta)
+        k_new = apply_rope(k_new, pvec, cfg.rope_theta)
+    w = cfg.window if window is None else window
+    slot = (pos % T) if w else jnp.minimum(pos, T - 1)
+    # mask-based cache write: a dynamic-update-slice on a sequence-sharded
+    # cache would force GSPMD to gather; jnp.where partitions trivially.
+    idx = jnp.arange(T, dtype=jnp.int32)
+    hit = (idx == slot)[None, :, None, None]
+    quant = cfg.kv_quant and "k_sc" in cache
+    if quant:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        ck_q = jnp.where(hit, kq, cache["k"])
+        cv_q = jnp.where(hit, vq, cache["v"])
+        ks_c = jnp.where(hit, ks, cache["k_sc"])
+        vs_c = jnp.where(hit, vs, cache["v_sc"])
+        # dequant on read (fused into the decode kernel on TPU: the HBM
+        # read is the int8 tensor + scales — half the bf16 bytes)
+        ck = _dequantize_kv(ck_q, ks_c)
+        cv = _dequantize_kv(cv_q, vs_c)
+        new_cache_extra = {"k": ck_q, "v": cv_q, "k_sc": ks_c, "v_sc": vs_c}
+    else:
+        ck = jnp.where(hit, k_new, cache["k"])
+        cv = jnp.where(hit, v_new, cache["v"])
+        new_cache_extra = None
+    if cfg.retrieval.enabled and "k_low" in cache:
+        from repro.models import retrieval_attention as ra
+        klow_new = ra.project_low(p, k_new)
+        cklow = jnp.where(hit, klow_new, cache["k_low"])
+        qh = q  # rope already applied above
+        o = ra.retrieval_decode_attention(cfg, p, qh, ck, cv, cklow, pos)
+        y = _merge_heads(cfg, p, o)
+        out_cache = new_cache_extra if quant else {"k": ck, "v": cv}
+        return y, {**out_cache, "k_low": cklow}
+    if w:
+        # ring buffer: slot s holds the largest position p' <= pos with
+        # p' % T == s (negative -> slot not yet written)
+        kv_pos = pos - ((pos - idx) % T)
+    else:
+        kv_pos = idx
+    valid = (kv_pos <= pos) & (kv_pos >= 0)
+    if w:
+        valid &= (pos - kv_pos) < w
+    N, KV, Hd = cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
+    G = N // KV
+    qg = q.reshape(B, 1, KV, G, Hd)
+    lg = jnp.einsum("bskgh,btkh->bskgt", qg, ck,
+                    preferred_element_type=jnp.float32) * (Hd ** -0.5)
+    lg = jnp.where(valid[None, None, None, None, :], lg, NEG_INF)
+    wts = jax.nn.softmax(lg, axis=-1)
+    o = jnp.einsum("bskgt,btkh->bskgh", wts.astype(cv.dtype), cv)
+    y = _merge_heads(cfg, p, o.reshape(B, 1, N, Hd))
+    return y, (new_cache_extra if quant else {"k": ck, "v": cv})
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype) -> dict:
+    """Per-layer KV cache. SWA/local archs get a bounded ring buffer.
+    Retrieval archs additionally store low-dim keys inline (layout (3)).
+    kv_quant stores int8 values + per-(token, head) absmax scales."""
+    T = seq_len
+    if cfg.window:
+        T = min(seq_len, cfg.window)
+    kvh, hd = cfg.kv_heads, cfg.resolved_head_dim
+    if cfg.kv_quant:
+        zq = jnp.zeros((batch, T, kvh, hd), jnp.int8)
+        zs = jnp.zeros((batch, T, kvh, 1), dtype)
+        c = {"k": zq, "v": zq, "k_sc": zs, "v_sc": zs}
+    else:
+        z = jnp.zeros((batch, T, kvh, hd), dtype)
+        c = {"k": z, "v": z}
+    if cfg.retrieval.enabled:
+        c["k_low"] = jnp.zeros((batch, T, kvh, cfg.retrieval.d_low), dtype)
+    return c
+
+
+def _quantize_kv(x):
+    """x: [B, S, KV, Hd] -> (int8, scale [B, S, KV, 1])."""
+    sc = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                 keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / sc), -127, 127
+                 ).astype(jnp.int8)
+    return q, sc.astype(x.dtype)
+
+
+def _dequantize_kv(q, sc):
+    return q.astype(sc.dtype) * sc

@@ -1,0 +1,108 @@
+"""Shared model plumbing: parameter init, dtype policy, pytree helpers.
+
+Parameters are plain nested dicts of jnp arrays. Leaf NAMES are the
+contract with ``distributed/sharding.py`` — the sharding rule table
+dispatches on the leaf key (e.g. ``wq``, ``e_up``, ``emb``), with stacked
+layer axes detected from rank.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32, scale=1.0):
+    """Normal(0, scale/sqrt(fan_in)) init."""
+    fan_in = shape[in_axis]
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+def stack_layers(init_one: Callable[[jax.Array], Params], key, n: int) -> Params:
+    """Init ``n`` layers and stack each leaf along a new leading axis.
+    Used with ``lax.scan`` over layers to keep HLO size O(1) in depth."""
+    keys = jax.random.split(key, n)
+    layers = [init_one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layers)
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def maybe_remat(fn, cfg):
+    if getattr(cfg, "remat", "none") == "full":
+        return jax.checkpoint(fn)
+    if getattr(cfg, "remat", "none") == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _sqrt_block(L: int) -> int:
+    """Largest divisor of L that is <= ceil(sqrt(L))."""
+    best = 1
+    d = 1
+    while d * d <= L:
+        if L % d == 0:
+            best = d
+        d += 1
+    return best
+
+
+def scan_layers(cfg, body, carry, xs):
+    """Scan ``body`` over the stacked-layer axis with the config's remat
+    policy. For deep stacks under full remat, uses a two-level
+    (sqrt-remat) scan: outer checkpoint over layer blocks, inner
+    checkpoint per layer — residency drops from O(L) layer inputs to
+    O(sqrt(L)) at ~1 extra forward of recompute. This is what makes
+    llama3-405b train_4k fit (see EXPERIMENTS.md §Perf)."""
+    mode = getattr(cfg, "remat", "none")
+    if mode == "none":
+        return jax.lax.scan(body, carry, xs)
+    cbody = maybe_remat(body, cfg)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    bs = _sqrt_block(L)
+    if mode != "full" or L < 16 or bs == 1:
+        return jax.lax.scan(cbody, carry, xs)
+    nb = L // bs
+    xs2 = jax.tree.map(lambda x: x.reshape((nb, bs) + x.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(c, xb):
+        return jax.lax.scan(cbody, c, xb)
+
+    carry, ys = jax.lax.scan(outer, carry, xs2)
+    if ys is not None:
+        ys = jax.tree.map(
+            lambda y: y.reshape((nb * bs,) + y.shape[2:]) if y is not None
+            else None, ys)
+    return carry, ys

@@ -1,0 +1,197 @@
+"""Whisper-style encoder-decoder backbone. The conv audio frontend is a
+STUB per the assignment: ``input_specs`` provides precomputed frame
+embeddings [B, enc_frames, d_model]; the encoder is the transformer stack
+over those frames (bidirectional), the decoder adds causal self-attention
++ cross-attention. Positions are sinusoidal (rope_theta=0)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (dtype_of, maybe_remat, scan_layers,
+                                 split_keys, stack_layers)
+from repro.models.layers import (apply_mlp, apply_norm, chunked_xent,
+                                 embed_tokens, init_embed, init_mlp, init_norm,
+                                 logits_fn)
+from repro.models.rope import sinusoidal_positions
+from repro.distributed.sharding import constrain
+
+MAX_DEC_POS = 65536   # sinusoidal table length for the decoder
+
+
+def _init_enc_layer(cfg, key, dtype):
+    ks = split_keys(key, ["attn", "mlp", "n1", "n2"])
+    return {
+        "ln_attn": init_norm(cfg, ks["n1"]),
+        "attn": attn.init_attn(cfg, ks["attn"], dtype),
+        "ln_mlp": init_norm(cfg, ks["n2"]),
+        "mlp": init_mlp(cfg, ks["mlp"], dtype),
+    }
+
+
+def _init_dec_layer(cfg, key, dtype):
+    ks = split_keys(key, ["attn", "xattn", "mlp", "n1", "n2", "n3"])
+    return {
+        "ln_attn": init_norm(cfg, ks["n1"]),
+        "attn": attn.init_attn(cfg, ks["attn"], dtype),
+        "ln_xattn": init_norm(cfg, ks["n2"]),
+        "xattn": attn.init_attn(cfg, ks["xattn"], dtype),
+        "ln_mlp": init_norm(cfg, ks["n3"]),
+        "mlp": init_mlp(cfg, ks["mlp"], dtype),
+    }
+
+
+def init(cfg, key):
+    dtype = dtype_of(cfg)
+    ks = split_keys(key, ["emb", "enc", "dec", "lne", "lnd"])
+    return {
+        **init_embed(cfg, ks["emb"], dtype),
+        "enc_layers_p": stack_layers(lambda k: _init_enc_layer(cfg, k, dtype),
+                                     ks["enc"], cfg.enc_layers),
+        "layers": stack_layers(lambda k: _init_dec_layer(cfg, k, dtype),
+                               ks["dec"], cfg.n_layers),
+        "ln_enc": init_norm(cfg, ks["lne"]),
+        "ln_f": init_norm(cfg, ks["lnd"]),
+    }
+
+
+def encode(cfg, params, frames):
+    """frames: [B, F, D] stubbed frontend output -> encoder states."""
+    F = frames.shape[1]
+    h = frames + sinusoidal_positions(F, cfg.d_model).astype(frames.dtype)
+    pos = jnp.arange(F, dtype=jnp.int32)
+
+    def body(carry, lp):
+        hh = carry
+        a = attn.attn_forward(cfg, lp["attn"],
+                              apply_norm(cfg, lp["ln_attn"], hh), pos,
+                              causal=False)
+        hh = constrain(hh + a, "act_btd")
+        m = apply_mlp(cfg, lp["mlp"], apply_norm(cfg, lp["ln_mlp"], hh))
+        hh = constrain(hh + m, "act_btd")
+        return hh, None
+
+    h, _ = scan_layers(cfg, body, h, params["enc_layers_p"])
+    return apply_norm(cfg, params["ln_enc"], h)
+
+
+def _dec_layer(cfg, lp, h, positions, enc_out, enc_pos):
+    a = attn.attn_forward(cfg, lp["attn"],
+                          apply_norm(cfg, lp["ln_attn"], h), positions)
+    h = constrain(h + a, "act_btd")
+    x = attn.attn_forward(cfg, lp["xattn"],
+                          apply_norm(cfg, lp["ln_xattn"], h), positions,
+                          kv_src=enc_out, kv_positions=enc_pos, causal=False)
+    h = constrain(h + x, "act_btd")
+    m = apply_mlp(cfg, lp["mlp"], apply_norm(cfg, lp["ln_mlp"], h))
+    h = constrain(h + m, "act_btd")
+    return h
+
+
+def loss(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens, labels = batch["tokens"], batch["labels"]
+    S = tokens.shape[1]
+    h = embed_tokens(cfg, params, tokens)
+    h = h + sinusoidal_positions(S, cfg.d_model).astype(h.dtype)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(carry, lp):
+        return _dec_layer(cfg, lp, carry, pos, enc_out, enc_pos), None
+
+    h, _ = scan_layers(cfg, body, h, params["layers"])
+    h = apply_norm(cfg, params["ln_f"], h)
+    nll = chunked_xent(cfg, params, h, labels)
+    return nll, {"loss": nll}
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    dtype = dtype_of(cfg)
+    kvh, hd = cfg.kv_heads, cfg.resolved_head_dim
+    self_c = jax.tree.map(
+        lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype),
+        attn.init_cache(cfg, batch, seq_len, dtype))
+    cross = {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.enc_frames, kvh, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.enc_frames, kvh, hd), dtype),
+    }
+    return {"self": self_c, "cross": cross}
+
+
+def prefill(cfg, params, batch):
+    """Encode audio + run the decoder prompt; returns (logits, cache)."""
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = embed_tokens(cfg, params, tokens)
+    h = h + sinusoidal_positions(S, cfg.d_model).astype(h.dtype)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(carry, lp):
+        hh = carry
+        hn = apply_norm(cfg, lp["ln_attn"], hh)
+        a, (k, v) = attn.attn_prefill(cfg, lp["attn"], hn, pos, cache_len=S)
+        hh = constrain(hh + a, "act_btd")
+        x = attn.attn_forward(cfg, lp["xattn"],
+                              apply_norm(cfg, lp["ln_xattn"], hh), pos,
+                              kv_src=enc_out, kv_positions=enc_pos,
+                              causal=False)
+        hh = constrain(hh + x, "act_btd")
+        m = apply_mlp(cfg, lp["mlp"], apply_norm(cfg, lp["ln_mlp"], hh))
+        hh = constrain(hh + m, "act_btd")
+        # cross K/V are position-independent: cache them for decode
+        xk = (enc_out @ lp["xattn"]["wk"]).reshape(B, -1, cfg.kv_heads,
+                                                   cfg.resolved_head_dim)
+        xv = (enc_out @ lp["xattn"]["wv"]).reshape(B, -1, cfg.kv_heads,
+                                                   cfg.resolved_head_dim)
+        if cfg.qkv_bias:
+            xk = xk + lp["xattn"]["bk"].reshape(cfg.kv_heads, -1)
+            xv = xv + lp["xattn"]["bv"].reshape(cfg.kv_heads, -1)
+        return hh, {"self": {"k": k, "v": v}, "cross": {"k": xk, "v": xv}}
+
+    h, cache = scan_layers(cfg, body, h, params["layers"])
+    h = apply_norm(cfg, params["ln_f"], h)
+    logits = logits_fn(cfg, params, h[:, -1]).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, token, pos):
+    B = token.shape[0]
+    h = embed_tokens(cfg, params, token)
+    table = sinusoidal_positions(MAX_DEC_POS, cfg.d_model)
+    h = h + jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0).astype(h.dtype)
+
+    def body(carry, xs):
+        lp, cache_l = xs
+        hh = carry
+        hn = apply_norm(cfg, lp["ln_attn"], hh)
+        a, new_self = attn.attn_decode(cfg, lp["attn"], hn, cache_l["self"],
+                                       pos)
+        hh = hh + a
+        # cross-attention against the cached encoder K/V
+        hn = apply_norm(cfg, lp["ln_xattn"], hh)
+        q = (hn @ lp["xattn"]["wq"])
+        if cfg.qkv_bias:
+            q = q + lp["xattn"]["bq"]
+        n, hd = cfg.n_heads, cfg.resolved_head_dim
+        qh = q.reshape(B, 1, cfg.kv_heads, n // cfg.kv_heads, hd)
+        lg = jnp.einsum("bskgh,btkh->bskgt", qh, cache_l["cross"]["k"],
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+        w = jax.nn.softmax(lg, axis=-1)
+        o = jnp.einsum("bskgt,btkh->bskgh", w.astype(hh.dtype),
+                       cache_l["cross"]["v"])
+        x = o.reshape(B, 1, n * hd) @ lp["xattn"]["wo"]
+        hh = hh + x
+        m = apply_mlp(cfg, lp["mlp"], apply_norm(cfg, lp["ln_mlp"], hh))
+        hh = hh + m
+        return hh, {"self": new_self, "cross": cache_l["cross"]}
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = apply_norm(cfg, params["ln_f"], h)
+    logits = logits_fn(cfg, params, h[:, -1]).astype(jnp.float32)
+    return logits, new_cache

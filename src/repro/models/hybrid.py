@@ -1,0 +1,275 @@
+"""RecurrentGemma-style hybrid: repeating (rec, rec, attn) pattern of
+RG-LRU recurrent blocks and LOCAL (windowed, MQA) attention blocks, each
+followed by a gated MLP. 38 layers = 12 full groups + 2 trailing rec.
+
+Scan structure: ``lax.scan`` over the 12 groups (group params stacked),
+then a second scan over the trailing rec layers — HLO stays O(1) in
+depth. Sub-quadratic by construction: bounded attention window + O(1)
+recurrent state, so long_500k decode runs natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import rglru
+from repro.models.common import (dtype_of, maybe_remat, scan_layers,
+                                 split_keys, stack_layers)
+from repro.models.layers import (apply_mlp, apply_norm, chunked_xent,
+                                 embed_tokens, init_embed, init_mlp, init_norm,
+                                 logits_fn)
+from repro.distributed.sharding import constrain
+
+
+def _n_groups(cfg):
+    g = len(cfg.pattern)
+    return cfg.n_layers // g, cfg.n_layers % g   # (full groups, trailing rec)
+
+
+def _init_rec_block(cfg, key, dtype):
+    ks = split_keys(key, ["mix", "mlp", "n1", "n2"])
+    return {
+        "ln_mix": init_norm(cfg, ks["n1"]),
+        "rec": rglru.init_rglru(cfg, ks["mix"], dtype),
+        "ln_mlp": init_norm(cfg, ks["n2"]),
+        "mlp": init_mlp(cfg, ks["mlp"], dtype),
+    }
+
+
+def _init_attn_block(cfg, key, dtype):
+    ks = split_keys(key, ["mix", "mlp", "n1", "n2"])
+    return {
+        "ln_mix": init_norm(cfg, ks["n1"]),
+        "attn": attn.init_attn(cfg, ks["mix"], dtype),
+        "ln_mlp": init_norm(cfg, ks["n2"]),
+        "mlp": init_mlp(cfg, ks["mlp"], dtype),
+    }
+
+
+def _init_group(cfg, key, dtype):
+    ks = jax.random.split(key, len(cfg.pattern))
+    g = {}
+    for i, (kind, k) in enumerate(zip(cfg.pattern, ks)):
+        if kind == "rec":
+            g[f"rec{i}"] = _init_rec_block(cfg, k, dtype)
+        else:
+            g[f"attn{i}"] = _init_attn_block(cfg, k, dtype)
+    return g
+
+
+def init(cfg, key):
+    dtype = dtype_of(cfg)
+    nG, nT = _n_groups(cfg)
+    ks = split_keys(key, ["emb", "groups", "trail", "lnf"])
+    p = {
+        **init_embed(cfg, ks["emb"], dtype),
+        "groups": stack_layers(lambda k: _init_group(cfg, k, dtype),
+                               ks["groups"], nG),
+        "ln_f": init_norm(cfg, ks["lnf"]),
+    }
+    if nT:
+        p["trail"] = stack_layers(lambda k: _init_rec_block(cfg, k, dtype),
+                                  ks["trail"], nT)
+    return p
+
+
+def _rec_block(cfg, bp, h):
+    m = rglru.apply_rglru(cfg, bp["rec"], apply_norm(cfg, bp["ln_mix"], h))
+    h = constrain(h + m, "act_btd")
+    m = apply_mlp(cfg, bp["mlp"], apply_norm(cfg, bp["ln_mlp"], h))
+    return constrain(h + m, "act_btd")
+
+
+def _attn_block(cfg, bp, h, positions):
+    a = attn.attn_forward(cfg, bp["attn"], apply_norm(cfg, bp["ln_mix"], h),
+                          positions, window=cfg.local_window)
+    h = constrain(h + a, "act_btd")
+    m = apply_mlp(cfg, bp["mlp"], apply_norm(cfg, bp["ln_mlp"], h))
+    return constrain(h + m, "act_btd")
+
+
+def loss(cfg, params, batch):
+    tokens, labels = batch["tokens"], batch["labels"]
+    h = embed_tokens(cfg, params, tokens)
+    pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def group_body(carry, gp):
+        hh = carry
+        for i, kind in enumerate(cfg.pattern):
+            if kind == "rec":
+                hh = _rec_block(cfg, gp[f"rec{i}"], hh)
+            else:
+                hh = _attn_block(cfg, gp[f"attn{i}"], hh, pos)
+        return hh, None
+
+    h, _ = scan_layers(cfg, group_body, h, params["groups"])
+    if "trail" in params:
+        def trail_body(carry, bp):
+            return _rec_block(cfg, bp, carry), None
+        h, _ = scan_layers(cfg, trail_body, h, params["trail"])
+    h = apply_norm(cfg, params["ln_f"], h)
+    nll = chunked_xent(cfg, params, h, labels)
+    return nll, {"loss": nll}
+
+
+# ------------------------------ serving ------------------------------------
+
+def init_cache(cfg, batch: int, seq_len: int):
+    dtype = dtype_of(cfg)
+    nG, nT = _n_groups(cfg)
+    n_rec_per_group = cfg.pattern.count("rec")
+    W = min(seq_len, cfg.local_window)
+    kvh, hd = cfg.kv_heads, cfg.resolved_head_dim
+    st = rglru.init_rglru_state(cfg, batch, dtype)
+    stack = lambda tree, n: jax.tree.map(
+        lambda x: jnp.zeros((n,) + x.shape, x.dtype), tree)
+    cache = {
+        "attn": {"k": jnp.zeros((nG, batch, W, kvh, hd), dtype),
+                 "v": jnp.zeros((nG, batch, W, kvh, hd), dtype)},
+        "rec": stack(st, nG * n_rec_per_group),
+    }
+    if nT:
+        cache["trail"] = stack(st, nT)
+    return cache
+
+
+def prefill(cfg, params, batch):
+    """Prefill via full-sequence forward; recurrent states rebuilt by a
+    short suffix re-scan (states only need the final value): we run the
+    sequence forms and extract final states."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = embed_tokens(cfg, params, tokens)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    W = min(S, cfg.local_window)
+    n_rec = cfg.pattern.count("rec")
+
+    def group_body(carry, gp):
+        hh = carry
+        rec_states, attn_kv = [], None
+        for i, kind in enumerate(cfg.pattern):
+            if kind == "rec":
+                bp = gp[f"rec{i}"]
+                u = apply_norm(cfg, bp["ln_mix"], hh)
+                m = rglru.apply_rglru(cfg, bp["rec"], u)
+                # recompute final state cheaply via one decode step on the
+                # last token (exact: h_T from the scan equals decode at T)
+                st = _final_state(cfg, bp["rec"], u)
+                rec_states.append(st)
+                hh = constrain(hh + m, "act_btd")
+                m = apply_mlp(cfg, bp["mlp"], apply_norm(cfg, bp["ln_mlp"], hh))
+                hh = constrain(hh + m, "act_btd")
+            else:
+                bp = gp[f"attn{i}"]
+                hn = apply_norm(cfg, bp["ln_mix"], hh)
+                a, (k, v) = attn.attn_prefill(cfg, bp["attn"], hn, pos,
+                                              cache_len=S,
+                                              window=cfg.local_window)
+                attn_kv = {"k": k[:, -W:], "v": v[:, -W:]}
+                hh = constrain(hh + a, "act_btd")
+                m = apply_mlp(cfg, bp["mlp"], apply_norm(cfg, bp["ln_mlp"], hh))
+                hh = constrain(hh + m, "act_btd")
+        rec_states = jax.tree.map(lambda *xs: jnp.stack(xs), *rec_states)
+        return hh, {"rec": rec_states, "attn": attn_kv}
+
+    h, caches = jax.lax.scan(group_body, h, params["groups"])
+    nG, nT = _n_groups(cfg)
+    cache = {
+        "attn": caches["attn"],
+        "rec": jax.tree.map(
+            lambda x: x.reshape((nG * n_rec,) + x.shape[2:]), caches["rec"]),
+    }
+    if nT:
+        def trail_body(carry, bp):
+            hh = carry
+            u = apply_norm(cfg, bp["ln_mix"], hh)
+            m = rglru.apply_rglru(cfg, bp["rec"], u)
+            st = _final_state(cfg, bp["rec"], u)
+            hh = hh + m
+            m = apply_mlp(cfg, bp["mlp"], apply_norm(cfg, bp["ln_mlp"], hh))
+            return hh + m, st
+        h, tstates = jax.lax.scan(trail_body, h, params["trail"])
+        cache["trail"] = tstates
+    h = apply_norm(cfg, params["ln_f"], h)
+    logits = logits_fn(cfg, params, h[:, -1]).astype(jnp.float32)
+    return logits, cache
+
+
+def _final_state(cfg, rp, u_seq):
+    """Final RG-LRU state after consuming u_seq (norm'd block input)."""
+    w = cfg.lru_width or cfg.d_model
+    h_heads = cfg.n_heads
+    wh = w // h_heads
+    x = u_seq @ rp["rg_in_x"]
+    xc, conv_tail = rglru._causal_conv(rp, x)
+    uf = xc.astype(jnp.float32)
+    r, i = rglru._gates(rp, uf, h_heads, wh)
+    log_a = rglru._log_a(rp, r)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return {"h": hs[:, -1], "conv": conv_tail}
+
+
+def decode_step(cfg, params, cache, token, pos):
+    B = token.shape[0]
+    h = embed_tokens(cfg, params, token)
+    n_rec = cfg.pattern.count("rec")
+
+    def group_body(carry, xs):
+        gp, ck = xs
+        hh = carry
+        rec_i = 0
+        new_rec, new_attn = [], None
+        for i, kind in enumerate(cfg.pattern):
+            if kind == "rec":
+                bp = gp[f"rec{i}"]
+                st = jax.tree.map(lambda x: x[rec_i], ck["rec"])
+                m, st2 = rglru.decode_rglru(
+                    cfg, bp["rec"], apply_norm(cfg, bp["ln_mix"], hh), st)
+                new_rec.append(st2)
+                rec_i += 1
+                hh = hh + m
+            else:
+                bp = gp[f"attn{i}"]
+                a, new_attn = attn.attn_decode(
+                    cfg, bp["attn"], apply_norm(cfg, bp["ln_mix"], hh),
+                    ck["attn"], pos, window=cfg.local_window)
+                hh = hh + a
+            m = apply_mlp(cfg, bp["mlp"], apply_norm(cfg, bp["ln_mlp"], hh))
+            hh = hh + m
+        new_rec = jax.tree.map(lambda *xs: jnp.stack(xs), *new_rec)
+        return hh, {"rec": new_rec, "attn": new_attn}
+
+    nG, nT = _n_groups(cfg)
+    grec = jax.tree.map(
+        lambda x: x.reshape((nG, n_rec) + x.shape[1:]), cache["rec"])
+    h, new_cache = jax.lax.scan(
+        group_body, h, (params["groups"], {"rec": grec, "attn": cache["attn"]}))
+    out_cache = {
+        "attn": new_cache["attn"],
+        "rec": jax.tree.map(
+            lambda x: x.reshape((nG * n_rec,) + x.shape[2:]), new_cache["rec"]),
+    }
+    if nT:
+        def trail_body(carry, xs):
+            bp, st = xs
+            hh = carry
+            m, st2 = rglru.decode_rglru(
+                cfg, bp["rec"], apply_norm(cfg, bp["ln_mix"], hh), st)
+            hh = hh + m
+            m = apply_mlp(cfg, bp["mlp"], apply_norm(cfg, bp["ln_mlp"], hh))
+            return hh + m, st2
+        h, tstates = jax.lax.scan(trail_body, h, (params["trail"],
+                                                  cache["trail"]))
+        out_cache["trail"] = tstates
+    h = apply_norm(cfg, params["ln_f"], h)
+    logits = logits_fn(cfg, params, h[:, -1]).astype(jnp.float32)
+    return logits, out_cache

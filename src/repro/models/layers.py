@@ -1,0 +1,129 @@
+"""Norms, MLPs, embeddings, and the chunked cross-entropy loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+
+# ----------------------------- norms --------------------------------------
+
+def init_norm(cfg, key, width=None):
+    d = width or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(cfg, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ----------------------------- MLPs ---------------------------------------
+
+def init_mlp(cfg, key, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        ks = split_keys(key, ["w_gate", "w_up", "w_down"])
+        return {
+            "w_gate": dense_init(ks["w_gate"], (d, f), dtype=dtype),
+            "w_up": dense_init(ks["w_up"], (d, f), dtype=dtype),
+            "w_down": dense_init(ks["w_down"], (f, d), dtype=dtype),
+        }
+    # plain gelu MLP (whisper, starcoder2)
+    ks = split_keys(key, ["w_up", "w_down"])
+    return {
+        "w_up": dense_init(ks["w_up"], (d, f), dtype=dtype),
+        "b_up": jnp.zeros((f,), dtype),
+        "w_down": dense_init(ks["w_down"], (f, d), dtype=dtype),
+        "b_down": jnp.zeros((d,), dtype),
+    }
+
+
+def apply_mlp(cfg, p, x):
+    if cfg.mlp == "swiglu":
+        g = jax.nn.silu(x @ p["w_gate"])
+        return (g * (x @ p["w_up"])) @ p["w_down"]
+    if cfg.mlp == "geglu":
+        g = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+        return (g * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"], approximate=True)
+    return h @ p["w_down"] + p["b_down"]
+
+
+# ------------------------- embeddings / head -------------------------------
+
+def init_embed(cfg, key, dtype):
+    ks = split_keys(key, ["emb", "lm_head"])
+    p = {"emb": (jax.random.normal(ks["emb"], (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks["lm_head"], (cfg.d_model, cfg.vocab),
+                                  dtype=dtype)
+    return p
+
+
+def embed_tokens(cfg, p, tokens):
+    return jnp.take(p["emb"], tokens, axis=0)
+
+
+def head_matrix(cfg, p):
+    return p["emb"].T if cfg.tie_embeddings else p["lm_head"]
+
+
+def logits_fn(cfg, p, h):
+    return h @ head_matrix(cfg, p)
+
+
+# ------------------------- chunked XENT loss --------------------------------
+# Never materialize [B, S, V] logits: scan over sequence chunks. For
+# llama3-405b train_4k this is the difference between 269 GB of logits and
+# ~2 GB of live chunk. (Recorded as a baseline memory optimization in
+# EXPERIMENTS.md §Perf.)
+
+def chunked_xent(cfg, p, h, labels, mask=None, chunk=512):
+    """h: [B, S, D]; labels: [B, S] int32; returns mean NLL over mask."""
+    B, S, D = h.shape
+    W = head_matrix(cfg, p)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+
+    @jax.checkpoint
+    def one(hc, lc, mc):
+        # checkpointed: the [B, c, V] logits are recomputed in backward
+        # instead of being stored per scan step (13 GB/device saved on
+        # starcoder2 train_4k; see EXPERIMENTS.md §Perf)
+        lg = (hc @ W).astype(jnp.float32)                  # [B, c, V]
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - tgt) * mc), jnp.sum(mc)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, lc, mc = xs
+        l, c = one(hc, lc, mc)
+        return (tot + l, cnt + c), None
+
+    hs = h[:, :n_chunks * chunk].reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    ls = labels[:, :n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    ms = mask[:, :n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (hs, ls, ms))
+    if rem:
+        l, c = one(h[:, -rem:], labels[:, -rem:], mask[:, -rem:])
+        tot, cnt = tot + l, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)

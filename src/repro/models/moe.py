@@ -1,0 +1,192 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based token
+dispatch (sorted, dropped-token formulation).
+
+Dispatch strategy: assignments are sorted by expert id, ranked within
+their expert group, and scattered into a dense [E, C, D] buffer — a
+static-shape formulation that shards cleanly: experts over the ``model``
+mesh axis (expert parallelism) when E divides the axis, otherwise
+per-expert tensor parallelism over d_ff. Tokens past capacity are dropped
+(standard GShard/Switch behavior) and counted in the router metrics.
+
+The router's top-k selection is the same "filter a candidate set down to
+k" primitive the paper builds kSort.L for — ``repro/kernels/ksort_l``
+implements it as a comparison-matrix Pallas kernel; here we use
+``lax.top_k`` for the XLA path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+
+def init_moe(cfg, key, dtype):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    ks = split_keys(key, ["router", "e_gate", "e_up", "e_down"])
+    return {
+        "router": dense_init(ks["router"], (d, E), dtype=jnp.float32),
+        "e_gate": dense_init(ks["e_gate"], (E, d, f), in_axis=1, dtype=dtype),
+        "e_up": dense_init(ks["e_up"], (E, d, f), in_axis=1, dtype=dtype),
+        "e_down": dense_init(ks["e_down"], (E, f, d), in_axis=1, dtype=dtype),
+    }
+
+
+def apply_moe(cfg, p, x, *, capacity_factor: float = 1.25):
+    """x: [B, S, D] -> ([B, S, D], aux_metrics).
+
+    Dispatch strategy is chosen by context:
+      * Under a known mesh with E divisible by the ``model`` axis, the
+        EXPLICIT shard_map path (`_apply_moe_sharded`): activations are
+        replicated over ``model`` (batch shards over ``data``), so every
+        chip already holds its tokens — each expert-shard masks the
+        assignments it owns, runs a purely LOCAL capacity dispatch, and
+        the combine is one psum over ``model`` ([T_local, D], the same
+        volume dense TP pays for its down-projection all-reduce).
+        The naive global-scatter formulation forced GSPMD to move the
+        [E, C, D] buffer across shards every layer — 268 s of collectives
+        per step on qwen3-235b train_4k (§Perf iteration on this cell).
+      * Otherwise: the single-device scatter path below.
+    """
+    from repro.distributed.sharding import current_mesh
+    mesh = current_mesh()
+    if (mesh is not None and "model" in mesh.axis_names
+            and cfg.moe.n_experts % mesh.shape["model"] == 0
+            and mesh.shape["model"] > 1):
+        return _apply_moe_sharded(cfg, p, x, mesh,
+                                  capacity_factor=capacity_factor)
+    return _apply_moe_local(cfg, p, x, capacity_factor=capacity_factor)
+
+
+def _apply_moe_local(cfg, p, x, *, capacity_factor: float = 1.25):
+    B, S, D = x.shape
+    E, K = cfg.moe.n_experts, cfg.moe.experts_per_tok
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # [T, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(gates, K)                   # [T, K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing aux loss (Switch-style) ----
+    me = jnp.mean(gates, axis=0)                             # [E]
+    ce = jnp.mean(
+        (jax.nn.one_hot(top_e, E, dtype=jnp.float32).sum(1)), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based capacity dispatch ----
+    C = int(max(K, round(T * K / E * capacity_factor)))
+    C = min(C, T)
+    flat_e = top_e.reshape(-1)                               # [T*K]
+    flat_w = top_w.reshape(-1)
+    tok_of = jnp.arange(T * K, dtype=jnp.int32) // K
+    order = jnp.argsort(flat_e, stable=True)                 # group by expert
+    se, sw, stok = flat_e[order], flat_w[order], tok_of[order]
+    ar = jnp.arange(T * K, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
+    group_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, ar, 0))
+    rank = ar - group_start                                  # pos within expert
+    keep = rank < C
+    dropped = jnp.sum(1.0 - keep.astype(jnp.float32)) / (T * K)
+
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[se, jnp.minimum(rank, C - 1)].add(
+        xf[stok] * keep[:, None].astype(x.dtype), mode="drop")
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["e_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["e_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["e_down"])     # [E, C, D]
+
+    contrib = out_buf[se, jnp.minimum(rank, C - 1)]          # [T*K, D]
+    contrib = contrib * (sw * keep.astype(jnp.float32)).astype(x.dtype)[:, None]
+    y = jnp.zeros((T, D), x.dtype).at[stok].add(contrib, mode="drop")
+
+    metrics = {"aux_loss": aux, "dropped_frac": dropped}
+    return y.reshape(B, S, D), metrics
+
+
+# ---------------------------------------------------------------------------
+# explicit expert-parallel dispatch (shard_map over the model axis)
+# ---------------------------------------------------------------------------
+
+def _apply_moe_sharded(cfg, p, x, mesh, *, capacity_factor: float = 1.25):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import batch_axes
+
+    B, S, D = x.shape
+    E, K = cfg.moe.n_experts, cfg.moe.experts_per_tok
+    m_size = mesh.shape["model"]
+    E_loc = E // m_size
+    b_ax = batch_axes(mesh)
+    b_size = 1
+    for a in b_ax:
+        b_size *= mesh.shape[a]
+    bspec = b_ax if (B % b_size == 0 and B >= b_size) else \
+        (b_ax[:1] if B % mesh.shape[b_ax[0]] == 0 else None)
+
+    def local(xl, router, eg, eu, ed):
+        # xl: [B_l, S, D] (this data-shard's tokens, replicated over model)
+        # eg/eu/ed: [E_loc, ...] this model-shard's experts
+        Bl = xl.shape[0]
+        T = Bl * S
+        xf = xl.reshape(T, D)
+        logits = xf.astype(jnp.float32) @ router              # [T, E]
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(gates, K)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+        me = jnp.mean(gates, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32).sum(1), 0)
+        aux = E * jnp.sum(me * ce)
+        # ---- mask to the experts THIS shard owns ----
+        shard = jax.lax.axis_index("model")
+        elo = shard * E_loc
+        local_e = top_e - elo                                  # [T, K]
+        mine = (local_e >= 0) & (local_e < E_loc)
+        flat_e = jnp.where(mine, local_e, E_loc).reshape(-1)   # E_loc = trash
+        flat_w = jnp.where(mine, top_w, 0.0).reshape(-1)
+        tok_of = jnp.arange(T * K, dtype=jnp.int32) // K
+        # capacity per local expert (per data-shard token pool)
+        C = int(max(K, round(T * K / E * capacity_factor)))
+        C = min(C, T)
+        order = jnp.argsort(flat_e, stable=True)
+        se, sw, stok = flat_e[order], flat_w[order], tok_of[order]
+        ar = jnp.arange(T * K, dtype=jnp.int32)
+        is_start = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
+        group_start = jax.lax.associative_scan(
+            jnp.maximum, jnp.where(is_start, ar, 0))
+        rank = ar - group_start
+        keep = (rank < C) & (se < E_loc)
+        n_dropped = jnp.sum((rank >= C) & (se < E_loc))
+        buf = jnp.zeros((E_loc + 1, C, D), xl.dtype)
+        buf = buf.at[se, jnp.minimum(rank, C - 1)].add(
+            xf[stok] * keep[:, None].astype(xl.dtype), mode="drop")
+        buf = buf[:E_loc]
+        h = jnp.einsum("ecd,edf->ecf", buf, eg)
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, eu)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, ed)            # [E_loc, C, D]
+        out_buf = jnp.concatenate(
+            [out_buf, jnp.zeros((1, C, D), out_buf.dtype)], axis=0)
+        contrib = out_buf[se, jnp.minimum(rank, C - 1)]
+        contrib = contrib * (sw * keep.astype(jnp.float32)
+                             ).astype(xl.dtype)[:, None]
+        y = jnp.zeros((T, D), xl.dtype).at[stok].add(contrib, mode="drop")
+        # ---- combine across expert shards: the ONLY collective ----
+        y = jax.lax.psum(y, "model")
+        drop_frac = jax.lax.psum(n_dropped.astype(jnp.float32),
+                                 "model") / (T * K)
+        return y.reshape(Bl, S, D), aux, drop_frac
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(bspec, None, None), P(), P()),
+        check_rep=False)
+    y, aux, dropped = fn(x, p["router"], p["e_gate"], p["e_up"], p["e_down"])
+    return y, {"aux_loss": aux, "dropped_frac": dropped}

@@ -1,0 +1,133 @@
+"""pHNSW retrieval attention — the paper's 3-step filter applied to
+long-context decode (DESIGN.md section 4).
+
+Attending to a 524288-entry KV cache is a nearest-neighbor problem: the
+query vector wants the keys with the highest dot products. We map the
+paper's pipeline onto it per attention head:
+
+  Step 1 (PCA):   keys are projected to ``d_low`` with a fixed
+                  orthonormal projection stored with the model (the
+                  streaming analogue of the paper's offline PCA; for
+                  dot-product search an orthonormal JL projection
+                  preserves score ordering the way PCA preserves L2).
+                  The low-dim keys are stored INLINE in the cache —
+                  layout (3): regular access to the filter data.
+  Step 2 (filter): low-dim scores over the whole cache (d_low/head_dim
+                  of the full cost), block-max pooled (``block`` KV
+                  positions per index entry), local top-k per cache
+                  PARTITION — the kSort.L filter, kept partition-local
+                  so a sequence-sharded cache never gathers globally.
+  Step 3 (rerank): exact attention over the gathered candidate blocks
+                  only — k irregular-but-block-contiguous fetches, the
+                  same "irregular accesses bounded by k" guarantee as
+                  the processor's AGU/DMA path.
+
+Partition-local retrieval + full-softmax merge across partitions is the
+distributed-pHNSW design (core/distributed.py) applied inside attention:
+per-shard search, collective-light merge (GSPMD turns the softmax over
+the partition axis into the flash-decoding all-reduce).
+
+HBM math for llama3-405b long_500k (per layer, per step): full attention
+reads 2 x T x KV x Hd x 2B = 2.1 GB; retrieval reads T x KV x d_low x 2B
+(low keys) + topk x KV x 2 x Hd x 2B = 134 MB + ~2 MB — a ~16x cut in the
+term that dominates decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_retrieval(cfg, key, dtype):
+    """Orthonormal per-head-dim projection [Hd, d_low] (the 'PCA' matrix)."""
+    hd, dl = cfg.resolved_head_dim, cfg.retrieval.d_low
+    a = jax.random.normal(key, (hd, hd), jnp.float32)
+    qm, _ = jnp.linalg.qr(a)
+    return {"rp_proj": qm[:, :dl].astype(jnp.float32)}
+
+
+def project_low(p, k):
+    """k: [..., Hd] -> [..., d_low] low-dim keys (Step 1)."""
+    return (k.astype(jnp.float32) @ p["rp_proj"]).astype(k.dtype)
+
+
+def retrieval_decode_attention(cfg, p, q, cache_k, cache_v, cache_klow,
+                               pos):
+    """One-token retrieval attention, PARTITION-MAJOR formulation.
+
+    q: [B, 1, N, Hd] (rope applied); cache_k/v: [B, T, KV, Hd];
+    cache_klow: [B, T, KV, dl]; pos: scalar int32. Returns [B, 1, N, Hd].
+
+    The cache sequence axis is reshaped to (nP, T/nP) with nP aligned to
+    the mesh's cache shards. Every op then carries the nP axis:
+      * low-dim scores + block-max pooling per partition (Step 2);
+      * top-nb blocks per partition via ``take_along_axis`` along the
+        UNSHARDED within-partition axis — the gather stays shard-local;
+      * exact scores over selected blocks (Step 3), with the softmax
+        max/sum and the PV contraction reducing over nP — GSPMD turns
+        those into tiny [B,KV,G(,Hd)] all-reduces (the flash-decoding
+        merge), never a cache-sized collective.
+    v1 of this function flattened partitions before gathering; GSPMD
+    all-gathered the whole low-dim cache (llama3-405b long_500k:
+    1.44 s of collectives/step). See EXPERIMENTS.md §Perf iteration 1.
+    """
+    B, _, N, Hd = q.shape
+    T, KV = cache_k.shape[1], cache_k.shape[2]
+    rcfg = cfg.retrieval
+    G = N // KV
+    blk = rcfg.block
+    n_blocks = T // blk
+    nP = max(1, min(rcfg.partitions, n_blocks))
+    pp = n_blocks // nP                  # blocks per partition
+    tpp = pp * blk                       # tokens per partition
+    nb = min(max(1, rcfg.topk // blk // nP), pp)   # blocks kept/partition
+    scale = Hd ** -0.5
+
+    # ---- Step 2: low-dim scores, partition-major ----
+    # operands stay bf16 (f32 accumulate): casting k_low to f32 would
+    # double the dominant HBM read (§Perf iteration 2)
+    q_low = project_low(p, q).reshape(B, KV, G, -1)
+    klow_p = cache_klow.reshape(B, nP, tpp, KV, -1)
+    lg_low = jnp.einsum("bkgc,bptkc->bkgpt", q_low, klow_p,
+                        preferred_element_type=jnp.float32)  # [B,KV,G,nP,tpp]
+    tpos = (jnp.arange(nP)[:, None] * tpp
+            + jnp.arange(tpp)[None, :]).astype(jnp.int32)    # [nP, tpp]
+    lg_low = jnp.where((tpos <= pos)[None, None, None], lg_low, NEG_INF)
+    # block score pooled over (blk positions) AND the G heads of the GQA
+    # group: the group SHARES one candidate set, so the Step-3 gather is
+    # per KV head, not per q-head (a per-q-head gather multiplies the
+    # fetched volume by G=16 and re-reads the whole cache at T=32k —
+    # §Perf iteration 3's refuted first attempt)
+    bs = lg_low.reshape(B, KV, G, nP, pp, blk).max((-1, 2))  # [B,KV,nP,pp]
+    _, top_idx = jax.lax.top_k(bs, nb)                       # [B,KV,nP,nb]
+
+    # ---- Step 3: shard-local block gather + exact attention ----
+    kb = cache_k.reshape(B, nP, pp, blk, KV, Hd)
+    vb = cache_v.reshape(B, nP, pp, blk, KV, Hd)
+    # operand [B,KV,nP,pp,blk,Hd]; indices [B,KV,nP,nb,1,1] -> gather
+    # along the (unsharded) pp axis
+    kb = jnp.moveaxis(kb, 4, 1)                              # [B,KV,nP,pp,blk,Hd]
+    vb = jnp.moveaxis(vb, 4, 1)
+    idx = top_idx[..., None, None]                           # [B,KV,nP,nb,1,1]
+    k_sel = jnp.take_along_axis(kb, idx, axis=3)             # [B,KV,nP,nb,blk,Hd]
+    v_sel = jnp.take_along_axis(vb, idx, axis=3)
+    qh = q.reshape(B, KV, G, Hd)
+    lg = jnp.einsum("bkgh,bkpnth->bkgpnt", qh, k_sel,
+                    preferred_element_type=jnp.float32) * scale
+    sel_pos = (jnp.arange(nP, dtype=jnp.int32)[:, None, None] * tpp
+               + top_idx[..., None] * blk
+               + jnp.arange(blk, dtype=jnp.int32))           # [B,KV,nP,nb,blk]
+    lg = jnp.where(sel_pos[:, :, None] <= pos, lg, NEG_INF)
+    # flash-decoding merge over (nP, nb, blk): reductions over nP are the
+    # only cross-shard ops, each [B,KV,G(,Hd)]-sized
+    m = jnp.max(lg, axis=(3, 4, 5), keepdims=True)
+    m = jnp.maximum(m, NEG_INF / 2)
+    e = jnp.exp(lg - m)
+    denom = jnp.sum(e, axis=(3, 4, 5))                       # [B,KV,G]
+    o = jnp.einsum("bkgpnt,bkpnth->bkgh", e.astype(v_sel.dtype), v_sel)
+    o = o / jnp.maximum(denom, 1e-30)[..., None].astype(o.dtype)
+    return o.reshape(B, 1, N, Hd)

@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(W_a x_t)           recurrence gate  (block-diag per head)
+    i_t = sigmoid(W_x x_t)           input gate       (block-diag per head)
+    a_t = exp(-c * softplus(L) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The sequence recurrence is evaluated with ``jax.lax.associative_scan``
+(parallel prefix over (a, b) pairs) — the TPU-native form; decode is the
+single-step recurrence. The block follows the Griffin layout: two input
+branches (GELU gate x conv1d->RG-LRU), merged then projected out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+_C = 8.0
+_CONV_W = 4
+
+
+def init_rglru(cfg, key, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    h = cfg.n_heads
+    wh = w // h
+    ks = split_keys(key, ["in_gate", "in_x", "conv", "wa", "wx", "lam", "out"])
+    return {
+        "rg_in_gate": dense_init(ks["in_gate"], (d, w), dtype=dtype),
+        "rg_in_x": dense_init(ks["in_x"], (d, w), dtype=dtype),
+        "rg_conv": dense_init(ks["conv"], (_CONV_W, w), dtype=dtype, scale=0.5),
+        "rg_wa": dense_init(ks["wa"], (h, wh, wh), in_axis=1, dtype=jnp.float32),
+        "rg_wx": dense_init(ks["wx"], (h, wh, wh), in_axis=1, dtype=jnp.float32),
+        # init lambda so a ~ 0.9..0.999 at r=0.5
+        "rg_lam": jnp.linspace(0.5, 4.0, w).astype(jnp.float32),
+        "rg_out": dense_init(ks["out"], (w, d), dtype=dtype),
+    }
+
+
+def _gates(p, u, h, wh):
+    """u: [B, S, W] (fp32) -> (a_gate, x_gate) via block-diagonal projections."""
+    B, S, W = u.shape
+    uh = u.reshape(B, S, h, wh)
+    ra = jnp.einsum("bshw,hwv->bshv", uh, p["rg_wa"]).reshape(B, S, W)
+    rx = jnp.einsum("bshw,hwv->bshv", uh, p["rg_wx"]).reshape(B, S, W)
+    return jax.nn.sigmoid(ra), jax.nn.sigmoid(rx)
+
+
+def _log_a(p, r):
+    return -_C * jax.nn.softplus(p["rg_lam"]) * r      # [B, S, W], <= 0
+
+
+def _causal_conv(p, u, state=None):
+    """Depthwise causal conv, width 4. state: [B, 3, W] tail of prev inputs."""
+    B, S, W = u.shape
+    if state is None:
+        pad = jnp.zeros((B, _CONV_W - 1, W), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + S] * p["rg_conv"][i] for i in range(_CONV_W))
+    return out, up[:, -(_CONV_W - 1):]
+
+
+def apply_rglru(cfg, p, x):
+    """Full-sequence (train/prefill). x: [B, S, D] -> [B, S, D]."""
+    h_heads = cfg.n_heads
+    w = cfg.lru_width or cfg.d_model
+    wh = w // h_heads
+    gate = jax.nn.gelu(x @ p["rg_in_gate"], approximate=True)
+    u = x @ p["rg_in_x"]
+    u, _ = _causal_conv(p, u)
+    uf = u.astype(jnp.float32)
+    r, i = _gates(p, uf, h_heads, wh)
+    log_a = _log_a(p, r)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (hseq.astype(x.dtype) * gate) @ p["rg_out"]
+    return y
+
+
+def init_rglru_state(cfg, batch, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_W - 1, w), dtype)}
+
+
+def decode_rglru(cfg, p, x, state):
+    """x: [B, 1, D]; state from init_rglru_state. Returns (y, new_state)."""
+    h_heads = cfg.n_heads
+    w = cfg.lru_width or cfg.d_model
+    wh = w // h_heads
+    gate = jax.nn.gelu(x @ p["rg_in_gate"], approximate=True)
+    u = x @ p["rg_in_x"]
+    u, conv_state = _causal_conv(p, u, state["conv"])
+    uf = u.astype(jnp.float32)
+    r, i = _gates(p, uf, h_heads, wh)
+    log_a = _log_a(p, r)[:, 0]
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i[:, 0] * uf[:, 0])
+    h_new = a * state["h"] + b
+    y = (h_new[:, None].astype(x.dtype) * gate) @ p["rg_out"]
+    return y, {"h": h_new, "conv": conv_state}

@@ -1,0 +1,163 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free sequence mixer with
+data-dependent per-channel decay.
+
+Per head (state S in R^{hd x hd}):
+    out_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+    w_t   = exp(-exp(w0 + lora_w(x_t)))          (data-dependent decay)
+
+Training/prefill use the CHUNKED PARALLEL form (the TPU-native adaptation:
+intra-chunk work is MXU matmuls over [c, hd] blocks; inter-chunk state is
+a short ``lax.scan``), decode is the O(1) recurrence. The decay exponent
+is clamped so fp32 within-chunk cumulative products cannot underflow.
+
+Simplification vs the full Finch recipe (documented in DESIGN.md): the
+token-shift interpolation uses static mu for r/k/v/g and keeps the
+low-rank *data-dependent* path only for the decay w — the defining Finch
+feature. Channel-mix is the standard relu^2 form.
+
+The paper's PCA-filtering technique has no analogue here (no candidate
+neighbor set to filter) — see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+_CHUNK = 16
+_LORA_R = 64
+_CLAMP = 5.0   # |log decay| per step; 16 * 5 = 80 < fp32 exp range (~87)
+
+
+def init_rwkv_tmix(cfg, key, dtype):
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    ks = split_keys(key, ["r", "k", "v", "g", "o", "w0", "la", "lb", "u", "ln"])
+    return {
+        "w_r": dense_init(ks["r"], (d, d), dtype=dtype),
+        "w_k": dense_init(ks["k"], (d, d), dtype=dtype),
+        "w_v": dense_init(ks["v"], (d, d), dtype=dtype),
+        "w_g": dense_init(ks["g"], (d, d), dtype=dtype),
+        "w_o": dense_init(ks["o"], (d, d), dtype=dtype),
+        "w0": jnp.zeros((d,), jnp.float32) - 0.6,        # base log-log decay
+        "lw_a": dense_init(ks["la"], (d, _LORA_R), dtype=jnp.float32),
+        "lw_b": dense_init(ks["lb"], (_LORA_R, d), dtype=jnp.float32, scale=0.1),
+        "u": (jax.random.normal(ks["u"], (h, hd), jnp.float32) * 0.1),
+        "mu": jnp.full((5, d), 0.5, jnp.float32),        # shift mix r,k,v,g,w
+        "gn_scale": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} (zeros / carried state at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix_inputs(p, x, xprev):
+    mu = p["mu"]
+    mix = lambda i: x + (xprev - x) * mu[i].astype(x.dtype)
+    return mix(0), mix(1), mix(2), mix(3), mix(4)
+
+
+def _log_decay(p, xw):
+    """per-channel log decay in [-_CLAMP, -1e-4]."""
+    lw = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["lw_a"]) @ p["lw_b"]
+    return -jnp.clip(jnp.exp(lw), 1e-4, _CLAMP)
+
+
+def _group_norm(p, o, h):
+    """LayerNorm per head (RWKV 'group_norm' on [B, S, H, hd])."""
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + 64e-5)
+    B, S = o.shape[:2]
+    return o.reshape(B, S, -1) * p["gn_scale"]
+
+
+def tmix_forward(cfg, p, x, state=None):
+    """x: [B, S, D]. state: optional {"x_prev": [B,1,D], "S": [B,H,hd,hd]}.
+    Returns (y, new_state). S must be a multiple of _CHUNK (all assigned
+    shapes are powers of two) or a single step."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    xprev = _shift(x, None if state is None else state["x_prev"])
+    xr, xk, xv, xg, xw = _mix_inputs(p, x, xprev)
+    r = (xr @ p["w_r"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xk @ p["w_k"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xv @ p["w_v"]).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"])
+    logw = _log_decay(p, xw).reshape(B, S, H, hd)            # [B,S,H,hd]
+    u = p["u"]
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32) if state is None else state["S"]
+
+    if S == 1:   # decode fast-path
+        out = jnp.einsum("bhk,bhkv->bhv", r[:, 0],
+                         S0 + u[None, :, :, None] * k[:, 0][..., None]
+                         * v[:, 0][:, :, None, :])
+        S1 = jnp.exp(logw[:, 0])[..., None] * S0 \
+            + k[:, 0][..., None] * v[:, 0][:, :, None, :]
+        o = out[:, None]                                      # [B,1,H,hd]
+    else:
+        c = min(_CHUNK, S)
+        while S % c:       # assigned shapes are powers of two; tests aren't
+            c -= 1
+        n = S // c
+        rc = r.reshape(B, n, c, H, hd).transpose(1, 0, 3, 2, 4)   # [n,B,H,c,hd]
+        kc = k.reshape(B, n, c, H, hd).transpose(1, 0, 3, 2, 4)
+        vc = v.reshape(B, n, c, H, hd).transpose(1, 0, 3, 2, 4)
+        wc = logw.reshape(B, n, c, H, hd).transpose(1, 0, 3, 2, 4)
+
+        causal = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)    # strict
+
+        def chunk_step(Sin, xs):
+            rb, kb, vb, wb = xs                                   # [B,H,c,hd]
+            cum = jnp.cumsum(wb, axis=2)                          # inclusive logP
+            pex = cum - wb                                        # exclusive
+            r_t = rb * jnp.exp(pex)
+            k_t = kb * jnp.exp(-cum)
+            # intra attention: A[t,s] = sum_k r[t]k[s]exp(pex[t]-cum[s]), s<t
+            intra = jnp.einsum("bhtk,bhsk->bhts", r_t, k_t) * causal
+            diag = jnp.einsum("bhtk,bhtk->bht", rb * u[None, :, None, :], kb)
+            out = jnp.einsum("bhts,bhsv->bhtv", intra, vb) \
+                + diag[..., None] * vb \
+                + jnp.einsum("bhtk,bhkv->bhtv", r_t, Sin)
+            Pc = cum[:, :, -1]                                    # [B,H,hd]
+            Snew = jnp.exp(Pc)[..., None] * Sin \
+                + jnp.einsum("bhsk,bhsv->bhkv", k_t * jnp.exp(Pc)[:, :, None, :], vb)
+            return Snew, out
+
+        S1, outs = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc))
+        # outs: [n, B, H, c, hd] -> [B, n, c, H, hd] -> [B, S, H, hd]
+        o = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+
+    o = _group_norm(p, o.reshape(B, S, H, hd), H).astype(x.dtype)
+    y = (o * g) @ p["w_o"]
+    new_state = {"x_prev": x[:, -1:], "S": S1}
+    return y, new_state
+
+
+def init_rwkv_cmix(cfg, key, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, ["k", "v", "r"])
+    return {
+        "c_wk": dense_init(ks["k"], (d, f), dtype=dtype),
+        "c_wv": dense_init(ks["v"], (f, d), dtype=dtype),
+        "c_wr": dense_init(ks["r"], (d, d), dtype=dtype),
+        "c_mu": jnp.full((2, d), 0.5, jnp.float32),
+    }
+
+
+def cmix_forward(cfg, p, x, state=None):
+    xprev = _shift(x, None if state is None else state["x_prev"])
+    mu = p["c_mu"].astype(x.dtype)
+    xk = x + (xprev - x) * mu[0]
+    xr = x + (xprev - x) * mu[1]
+    rgate = jax.nn.sigmoid(xr @ p["c_wr"])
+    h = jnp.square(jax.nn.relu(xk @ p["c_wk"]))
+    y = rgate * (h @ p["c_wv"])
+    return y, {"x_prev": x[:, -1:]}

@@ -1,0 +1,108 @@
+"""RWKV6 model driver (attention-free; O(1) recurrent state).
+State per layer: time-mix {x_prev, S [B,H,hd,hd]} + channel-mix {x_prev}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rwkv6
+from repro.models.common import (dtype_of, maybe_remat, scan_layers,
+                                 split_keys, stack_layers)
+from repro.models.layers import (apply_norm, chunked_xent, embed_tokens,
+                                 init_embed, init_norm, logits_fn)
+from repro.distributed.sharding import constrain
+
+
+def _init_layer(cfg, key, dtype):
+    ks = split_keys(key, ["tmix", "cmix", "n1", "n2"])
+    return {
+        "ln_t": init_norm(cfg, ks["n1"]),
+        "tmix": rwkv6.init_rwkv_tmix(cfg, ks["tmix"], dtype),
+        "ln_c": init_norm(cfg, ks["n2"]),
+        "cmix": rwkv6.init_rwkv_cmix(cfg, ks["cmix"], dtype),
+    }
+
+
+def init(cfg, key):
+    dtype = dtype_of(cfg)
+    ks = split_keys(key, ["emb", "layers", "ln0", "lnf"])
+    return {
+        **init_embed(cfg, ks["emb"], dtype),
+        "ln_0": init_norm(cfg, ks["ln0"]),        # rwkv convention
+        "layers": stack_layers(lambda k: _init_layer(cfg, k, dtype),
+                               ks["layers"], cfg.n_layers),
+        "ln_f": init_norm(cfg, ks["lnf"]),
+    }
+
+
+def _layer(cfg, lp, h, state):
+    t, st_t = rwkv6.tmix_forward(cfg, lp["tmix"],
+                                 apply_norm(cfg, lp["ln_t"], h),
+                                 None if state is None else state["t"])
+    h = constrain(h + t, "act_btd")
+    c, st_c = rwkv6.cmix_forward(cfg, lp["cmix"],
+                                 apply_norm(cfg, lp["ln_c"], h),
+                                 None if state is None else state["c"])
+    h = constrain(h + c, "act_btd")
+    return h, {"t": st_t, "c": st_c}
+
+
+def loss(cfg, params, batch):
+    tokens, labels = batch["tokens"], batch["labels"]
+    h = apply_norm(cfg, params["ln_0"], embed_tokens(cfg, params, tokens))
+
+    def body(carry, lp):
+        hh, _ = _layer(cfg, lp, carry, None)
+        return hh, None
+
+    h, _ = scan_layers(cfg, body, h, params["layers"])
+    h = apply_norm(cfg, params["ln_f"], h)
+    nll = chunked_xent(cfg, params, h, labels)
+    return nll, {"loss": nll}
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    dtype = dtype_of(cfg)
+    H, hd, D = cfg.n_heads, cfg.resolved_head_dim, cfg.d_model
+    L = cfg.n_layers
+    return {
+        "t": {"x_prev": jnp.zeros((L, batch, 1, D), dtype),
+              "S": jnp.zeros((L, batch, H, hd, hd), jnp.float32)},
+        "c": {"x_prev": jnp.zeros((L, batch, 1, D), dtype)},
+    }
+
+
+def prefill(cfg, params, batch):
+    tokens = batch["tokens"]
+    h = apply_norm(cfg, params["ln_0"], embed_tokens(cfg, params, tokens))
+
+    def body(carry, lp):
+        hh = carry
+        tn = apply_norm(cfg, lp["ln_t"], hh)
+        t, st_t = rwkv6.tmix_forward(cfg, lp["tmix"], tn, None)
+        hh = constrain(hh + t, "act_btd")
+        cn = apply_norm(cfg, lp["ln_c"], hh)
+        c, st_c = rwkv6.cmix_forward(cfg, lp["cmix"], cn, None)
+        hh = constrain(hh + c, "act_btd")
+        return hh, {"t": st_t, "c": st_c}
+
+    h, cache = scan_layers(cfg, body, h, params["layers"])
+    h = apply_norm(cfg, params["ln_f"], h)
+    logits = logits_fn(cfg, params, h[:, -1]).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, token, pos):
+    del pos  # recurrent: position-free
+    h = apply_norm(cfg, params["ln_0"], embed_tokens(cfg, params, token))
+
+    def body(carry, xs):
+        lp, st = xs
+        hh, st2 = _layer(cfg, lp, carry, st)
+        return hh, st2
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = apply_norm(cfg, params["ln_f"], h)
+    logits = logits_fn(cfg, params, h[:, -1]).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,174 @@
+"""Decoder-only transformer covering the dense / moe / vlm families.
+
+Layers are stacked along a leading axis and executed with ``lax.scan`` so
+HLO size is O(1) in depth — essential for the 40-cell x 2-mesh dry-run
+compile budget. Remat policy wraps the scan body.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.common import (dtype_of, maybe_remat, scan_layers,
+                                 split_keys, stack_layers)
+from repro.models.layers import (apply_mlp, apply_norm, chunked_xent,
+                                 embed_tokens, init_embed, init_mlp, init_norm,
+                                 logits_fn)
+from repro.distributed.sharding import constrain
+
+
+# ----------------------------- init ----------------------------------------
+
+def _init_layer(cfg, key, dtype):
+    ks = split_keys(key, ["attn", "mlp", "n1", "n2"])
+    p = {
+        "ln_attn": init_norm(cfg, ks["n1"]),
+        "attn": attn.init_attn(cfg, ks["attn"], dtype),
+        "ln_mlp": init_norm(cfg, ks["n2"]),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe(cfg, ks["mlp"], dtype)
+    else:
+        p["mlp"] = init_mlp(cfg, ks["mlp"], dtype)
+    return p
+
+
+def init(cfg, key):
+    dtype = dtype_of(cfg)
+    ks = split_keys(key, ["emb", "layers", "lnf", "vis"])
+    params = {
+        **init_embed(cfg, ks["emb"], dtype),
+        "layers": stack_layers(lambda k: _init_layer(cfg, k, dtype),
+                               ks["layers"], cfg.n_layers),
+        "ln_f": init_norm(cfg, ks["lnf"]),
+    }
+    if cfg.vis_tokens:
+        from repro.models.common import dense_init
+        params["vis_proj"] = dense_init(ks["vis"], (cfg.d_model, cfg.d_model),
+                                        dtype=dtype)
+    return params
+
+
+# --------------------------- forward (full-seq) -----------------------------
+
+def _layer_fwd(cfg, lp, h, positions):
+    a = attn.attn_forward(cfg, lp["attn"], apply_norm(cfg, lp["ln_attn"], h),
+                          positions)
+    h = constrain(h + a, "act_btd")
+    hn = apply_norm(cfg, lp["ln_mlp"], h)
+    if cfg.moe is not None:
+        m, aux = moe_mod.apply_moe(cfg, lp["moe"], hn)
+    else:
+        m, aux = apply_mlp(cfg, lp["mlp"], hn), {}
+    h = constrain(h + m, "act_btd")
+    return h, aux
+
+
+def forward_hidden(cfg, params, h, positions):
+    """h: [B, S, D] embedded inputs -> final hidden [B, S, D] (+ moe aux)."""
+    def body(carry, lp):
+        return _layer_fwd(cfg, lp, carry, positions)
+    h, aux = scan_layers(cfg, body, h, params["layers"])
+    h = apply_norm(cfg, params["ln_f"], h)
+    aux = {k: jnp.mean(v) for k, v in aux.items()} if aux else {}
+    return h, aux
+
+
+def _embed_inputs(cfg, params, batch) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (h [B, S_total, D], positions [S_total], loss_mask [B, S_total])."""
+    tokens = batch["tokens"]
+    h = embed_tokens(cfg, params, tokens)
+    B, S = tokens.shape
+    mask = jnp.ones((B, S), jnp.float32)
+    if cfg.vis_tokens:
+        vis = batch["patches"].astype(h.dtype) @ params["vis_proj"]
+        h = jnp.concatenate([vis, h], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((B, cfg.vis_tokens), jnp.float32), mask], axis=1)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+    return h, positions, mask
+
+
+def loss(cfg, params, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+    h, positions, mask = _embed_inputs(cfg, params, batch)
+    h = constrain(h, "act_btd")
+    h, aux = forward_hidden(cfg, params, h, positions)
+    labels = batch["labels"]
+    if cfg.vis_tokens:   # logits only over text positions
+        h = h[:, cfg.vis_tokens:]
+        mask = mask[:, cfg.vis_tokens:]
+    nll = chunked_xent(cfg, params, h, labels, mask)
+    metrics = {"loss": nll, **aux}
+    total = nll
+    if cfg.moe is not None and "aux_loss" in aux:
+        total = total + cfg.moe.aux_loss_weight * aux["aux_loss"]
+    return total, metrics
+
+
+# ----------------------------- prefill / decode -----------------------------
+
+def init_cache(cfg, batch: int, seq_len: int):
+    dtype = dtype_of(cfg)
+    one = attn.init_cache(cfg, batch, seq_len, dtype)
+    zeros_like_stacked = jax.tree.map(
+        lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype), one)
+    return zeros_like_stacked
+
+
+def prefill(cfg, params, batch):
+    """Run the prompt, return (last-token logits [B, V], cache).
+    Cache seq dim == prompt length (the dry-run 'prefill' cell); decode
+    continues in a caller-provided longer cache in the serving engine."""
+    h, positions, _ = _embed_inputs(cfg, params, batch)
+    h = constrain(h, "act_btd")
+
+    def body(carry, lp):
+        hh = carry
+        hn = apply_norm(cfg, lp["ln_attn"], hh)
+        a, (k, v) = attn.attn_prefill(cfg, lp["attn"], hn, positions,
+                                      cache_len=h.shape[1])
+        hh = constrain(hh + a, "act_btd")
+        hn = apply_norm(cfg, lp["ln_mlp"], hh)
+        if cfg.moe is not None:
+            m, _ = moe_mod.apply_moe(cfg, lp["moe"], hn)
+        else:
+            m = apply_mlp(cfg, lp["mlp"], hn)
+        hh = constrain(hh + m, "act_btd")
+        return hh, {"k": k, "v": v}
+
+    h, cache = scan_layers(cfg, body, h, params["layers"])
+    h = apply_norm(cfg, params["ln_f"], h)
+    logits = logits_fn(cfg, params, h[:, -1]).astype(jnp.float32)
+    if cfg.window:   # bound the cache to the attention window
+        cache = jax.tree.map(lambda x: x[:, :, -min(cfg.window, x.shape[2]):],
+                             cache)
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, token, pos):
+    """token: [B, 1] int32; pos: scalar int32 (current position).
+    Returns (logits [B, V], new_cache)."""
+    h = embed_tokens(cfg, params, token)
+
+    def body(carry, xs):
+        lp, cache_l = xs
+        hh = carry
+        hn = apply_norm(cfg, lp["ln_attn"], hh)
+        a, new_cache = attn.attn_decode(cfg, lp["attn"], hn, cache_l, pos)
+        hh = hh + a
+        hn = apply_norm(cfg, lp["ln_mlp"], hh)
+        if cfg.moe is not None:
+            m, _ = moe_mod.apply_moe(cfg, lp["moe"], hn, capacity_factor=2.0)
+        else:
+            m = apply_mlp(cfg, lp["mlp"], hn)
+        hh = hh + m
+        return hh, new_cache
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = apply_norm(cfg, params["ln_f"], h)
+    logits = logits_fn(cfg, params, h[:, -1]).astype(jnp.float32)
+    return logits, new_cache

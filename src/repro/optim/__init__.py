@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.optim.compression import compress_grads, decompress_grads
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+           "compress_grads", "decompress_grads"]

@@ -1,0 +1,52 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+int8 block-quantized compression: each gradient leaf is quantized to int8
+with a per-block fp32 scale before the ``pod``-axis all-reduce, and
+dequantized after. At 1000+ node scale the DCN all-reduce is the slowest
+collective; 4x fewer bytes at <1% relative error on gradient noise is the
+standard trade (the within-pod ICI reductions stay full precision).
+
+Used by ``train/loop.py`` when ``compress_dcn=True``: gradients are
+psum'd over ("data",) in full precision, then the quantized tree is
+psum'd over ("pod",) inside shard_map.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_grads(grads) -> Any:
+    """tree of arrays -> tree of (q_int8, scale, shape, dtype)."""
+    def one(x):
+        q, s = _quantize(x)
+        return {"q": q, "scale": s}
+    return jax.tree.map(one, grads)
+
+
+def decompress_grads(comp, like) -> Any:
+    return jax.tree.map(
+        lambda c, x: _dequantize(c["q"], c["scale"], x.shape, x.dtype),
+        comp, like, is_leaf=lambda t: isinstance(t, dict) and "q" in t)

@@ -1,0 +1,4 @@
+from repro.serve.engine import GenerationEngine
+from repro.serve.vector_service import VectorSearchService
+
+__all__ = ["GenerationEngine", "VectorSearchService"]

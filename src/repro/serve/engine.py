@@ -1,0 +1,104 @@
+"""Generation engine: batched prefill -> decode with a right-padded KV
+cache, greedy or temperature sampling.
+
+The cache returned by ``prefill`` covers exactly the prompt; the engine
+pads the sequence axis to ``prompt + max_new`` before stepping (and for
+retrieval-attention archs, fills the inline low-dim keys for the prompt
+region — the layout-(3) index is built at prefill time, like the paper
+builds its database before the S phase).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray        # [B, max_new]
+    steps: int
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens.size / max(self.decode_s, 1e-9)
+
+
+def _pad_cache_seq(cfg: ModelConfig, params, cache, target_t: int):
+    """Right-pad the cache sequence axis (axis 2 of [L,B,T,...]) and
+    derive low-dim keys for retrieval archs."""
+    def pad(x):
+        t = x.shape[2]
+        if t >= target_t:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[2] = (0, target_t - t)
+        return jnp.pad(x, widths)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache = {"k": pad(cache["k"]), "v": pad(cache["v"])}
+        if cfg.retrieval.enabled:
+            proj = params["layers"]["attn"]["rp_proj"]       # [L, Hd, dl]
+            klow = jnp.einsum("lbtkh,lhc->lbtkc",
+                              cache["k"].astype(jnp.float32),
+                              proj).astype(cache["k"].dtype)
+            cache["k_low"] = klow
+        return cache
+    if cfg.family == "encdec":
+        return {"self": {"k": pad(cache["self"]["k"]),
+                         "v": pad(cache["self"]["v"])},
+                "cross": cache["cross"]}
+    return cache   # hybrid / ssm states are fixed-size
+
+
+class GenerationEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_new: int = 32,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.api = get_model(cfg)
+        self.params = params
+        self.max_new = max_new
+        self.temperature = temperature
+        self.key = jax.random.key(seed)
+        self._prefill = jax.jit(self.api.prefill)
+        self._step = jax.jit(self.api.decode_step)
+
+    def _sample(self, logits):
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / self.temperature, axis=-1)[:, None].astype(jnp.int32)
+
+    def generate(self, batch: Dict[str, Any]) -> GenerationResult:
+        import time
+        B, S = batch["tokens"].shape
+        t0 = time.monotonic()
+        logits, cache = self._prefill(self.params, batch)
+        logits = jax.block_until_ready(logits)
+        t1 = time.monotonic()
+        if self.cfg.family in ("dense", "moe", "vlm", "encdec"):
+            total = S + (self.cfg.vis_tokens or 0) + self.max_new
+            if self.cfg.window:
+                total = min(total, self.cfg.window)
+            cache = _pad_cache_seq(self.cfg, self.params, cache, total)
+        out = []
+        tok = self._sample(logits)
+        pos = S + (self.cfg.vis_tokens or 0)
+        for i in range(self.max_new):
+            out.append(np.asarray(tok))
+            logits, cache = self._step(self.params, cache, tok,
+                                       jnp.int32(pos + i))
+            tok = self._sample(logits)
+        t2 = time.monotonic()
+        return GenerationResult(tokens=np.concatenate(out, axis=1),
+                                steps=self.max_new,
+                                prefill_s=t1 - t0, decode_s=t2 - t1)

@@ -1,0 +1,77 @@
+"""Batched pHNSW vector-search service — the serving half of the paper's
+system (single-query ASIC -> batched TPU service).
+
+Requests accumulate into fixed-size batches (the compiled search program
+has a static batch dim); underfull batches are padded with the entry
+point and results trimmed. Tracks QPS and latency percentiles.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.pca import PCA
+from repro.core.search_jax import PackedDB, search_batched
+
+
+@dataclass
+class ServiceStats:
+    latencies_ms: List[float] = field(default_factory=list)
+    queries: int = 0
+    started: float = field(default_factory=time.monotonic)
+
+    @property
+    def qps(self) -> float:
+        return self.queries / max(time.monotonic() - self.started, 1e-9)
+
+    def percentile(self, p: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(self.latencies_ms, p))
+
+
+class VectorSearchService:
+    def __init__(self, db: PackedDB, pca: PCA, *, batch_size: int = 64,
+                 ef0: Optional[int] = None):
+        self.db, self.pca = db, pca
+        self.batch = batch_size
+        self.ef0 = ef0 or db.cfg.ef0
+        self.stats = ServiceStats()
+        # warm the compiled program
+        dummy = np.zeros((batch_size, db.high.shape[1]), np.float32)
+        self._run(dummy)
+
+    def _run(self, q: np.ndarray):
+        ql = self.pca.transform(q).astype(np.float32)
+        fd, fi = search_batched(self.db, jnp.asarray(q), jnp.asarray(ql),
+                                ef0=self.ef0)
+        return np.asarray(fd), np.asarray(fi)
+
+    def query(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """q: [n, D] with n <= batch_size. Returns (dists, indices)."""
+        n = len(q)
+        t0 = time.monotonic()
+        if n < self.batch:
+            pad = np.repeat(q[-1:], self.batch - n, axis=0)
+            q = np.concatenate([q, pad], axis=0)
+        fd, fi = self._run(q)
+        dt = (time.monotonic() - t0) * 1000.0
+        self.stats.queries += n
+        self.stats.latencies_ms.extend([dt] * n)
+        return fd[:n], fi[:n]
+
+    def run_stream(self, queries: np.ndarray) -> Tuple[np.ndarray, dict]:
+        """Serve a stream in service batches; returns (all indices, stats)."""
+        outs = []
+        for i in range(0, len(queries), self.batch):
+            _, fi = self.query(queries[i:i + self.batch])
+            outs.append(fi)
+        return np.concatenate(outs, axis=0), {
+            "qps": self.stats.qps,
+            "p50_ms": self.stats.percentile(50),
+            "p99_ms": self.stats.percentile(99),
+        }

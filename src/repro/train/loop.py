@@ -1,0 +1,118 @@
+"""Training loop: sharded init, prefetched data, async checkpointing,
+restart, straggler monitoring.
+
+Restart contract: the data stream is (seed, step)-deterministic and the
+optimizer state carries the step counter, so resume = restore latest
+checkpoint + fast-forward the pipeline. Kill the process at any point
+and relaunch with the same CLI: training continues bit-exactly (modulo
+async-ckpt lag, bounded by ckpt_every).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.tokens import TokenPipeline
+from repro.distributed.fault import StepMonitor
+from repro.launch.steps import build_train_step
+from repro.models import get_model
+from repro.optim import AdamWConfig, adamw_init
+
+
+@dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    keep: int = 3
+    seed: int = 0
+    log_every: int = 10
+    microbatches: int = 0          # 0 = auto
+    resume: bool = True
+
+
+class TrainLoop:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 loop_cfg: TrainLoopConfig = TrainLoopConfig(),
+                 opt_cfg: AdamWConfig = AdamWConfig()):
+        self.cfg, self.shape, self.mesh = cfg, shape, mesh
+        self.loop_cfg, self.opt_cfg = loop_cfg, opt_cfg
+        self.step_fn, self.specs = build_train_step(
+            cfg, mesh, shape, opt_cfg, microbatches=loop_cfg.microbatches)
+        self.monitor = StepMonitor()
+        self.ckpt = CheckpointManager(Path(loop_cfg.ckpt_dir),
+                                      keep=loop_cfg.keep)
+        self.metrics_log: list = []
+
+    # ---- state ----
+    def init_state(self):
+        api = self.specs["api"]
+        p_sh, o_sh = self.specs["p_sh"], self.specs["o_sh"]
+        with self.mesh:
+            params = jax.jit(api.init, out_shardings=p_sh)(
+                jax.random.key(self.loop_cfg.seed))
+            opt = jax.jit(adamw_init, out_shardings=o_sh)(params)
+        return params, opt
+
+    def try_restore(self):
+        step = latest_step(Path(self.loop_cfg.ckpt_dir))
+        if step is None:
+            return None
+        a_params, a_opt = self.specs["a_params"], self.specs["a_opt"]
+        state = restore_checkpoint(
+            Path(self.loop_cfg.ckpt_dir), step,
+            {"params": a_params, "opt": a_opt},
+            {"params": self.specs["p_sh"], "opt": self.specs["o_sh"]})
+        return step, state["params"], state["opt"]
+
+    # ---- main ----
+    def run(self) -> Dict[str, Any]:
+        lc = self.loop_cfg
+        start = 0
+        restored = self.try_restore() if lc.resume else None
+        if restored is not None:
+            start, params, opt = restored
+            print(f"[train] resumed from step {start}", flush=True)
+        else:
+            params, opt = self.init_state()
+        pipe = TokenPipeline(self.cfg, self.shape, seed=lc.seed,
+                             start_step=start,
+                             shardings=self.specs["b_sh"])
+        last_metrics = {}
+        try:
+            for step, batch in pipe:
+                if step >= lc.steps:
+                    break
+                t0 = time.monotonic()
+                params, opt, metrics = self.step_fn(params, opt, batch)
+                jax.block_until_ready(metrics["loss"])
+                wall = time.monotonic() - t0
+                ev = self.monitor.heartbeat(step, wall)
+                if ev.kind == "straggler":
+                    print(f"[train] straggler step {step}: {ev.detail}",
+                          flush=True)
+                last_metrics = {k: float(v) for k, v in metrics.items()}
+                self.metrics_log.append({"step": step, "wall_s": wall,
+                                         **last_metrics})
+                if step % lc.log_every == 0:
+                    print(f"[train] step {step} loss={last_metrics['loss']:.4f} "
+                          f"gnorm={last_metrics.get('grad_norm', 0):.3f} "
+                          f"{wall:.2f}s", flush=True)
+                if (step + 1) % lc.ckpt_every == 0 or step + 1 == lc.steps:
+                    self.ckpt.save_async(step + 1,
+                                         {"params": params, "opt": opt},
+                                         extra={"arch": self.cfg.name})
+        finally:
+            pipe.close()
+            self.ckpt.wait()
+        return {"final_step": min(lc.steps, pipe.step),
+                "last_metrics": last_metrics,
+                "straggler_events": sum(
+                    1 for e in self.monitor.events if e.kind == "straggler")}

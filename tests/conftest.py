@@ -1,0 +1,36 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
+# Multi-device tests spawn subprocesses that set the flag themselves.
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.data.vectors import make_sift_like, make_queries, brute_force_topk
+    x = make_sift_like(4000, seed=3)
+    q = make_queries(x, 40, seed=4)
+    gt = brute_force_topk(x, q, 10)
+    return x, q, gt
+
+
+@pytest.fixture(scope="session")
+def small_graph(small_dataset):
+    from repro.configs.base import PHNSWConfig
+    from repro.core.graph import build_hnsw
+    x, _, _ = small_dataset
+    cfg = PHNSWConfig(name="test4k", n_points=len(x), ef_construction=50)
+    return build_hnsw(x, cfg, seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_pca(small_dataset):
+    from repro.core.pca import fit_pca
+    x, _, _ = small_dataset
+    return fit_pca(x, 15)
+
+
+@pytest.fixture(scope="session")
+def small_xlow(small_dataset, small_pca):
+    x, _, _ = small_dataset
+    return small_pca.transform(x).astype(np.float32)

@@ -1,0 +1,169 @@
+"""pHNSW core: PCA properties, graph invariants, Algorithm 1 behaviour,
+cost-model orderings — the paper's claims as assertions."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import DDR4, HBM, query_cost, table3, \
+    hw_variant_stats
+from repro.core.search_ref import run_queries, search_hnsw, search_phnsw
+
+
+# ------------------------------- PCA ----------------------------------------
+
+def test_pca_orthonormal(small_pca):
+    c = small_pca.components
+    np.testing.assert_allclose(c.T @ c, np.eye(c.shape[1]), atol=1e-4)
+
+
+def test_pca_contraction(small_dataset, small_pca):
+    """Low-dim distances never exceed high-dim distances (orthonormal
+    projection) — the property the filter's correctness leans on."""
+    x, q, _ = small_dataset
+    xl = small_pca.transform(x[:500])
+    ql = small_pca.transform(q[:10])
+    d_hi = ((x[:500][None] - q[:10][:, None]) ** 2).sum(-1)
+    d_lo = ((xl[None] - ql[:, None]) ** 2).sum(-1)
+    assert np.all(d_lo <= d_hi * (1 + 1e-5))
+
+
+def test_pca_explains_variance(small_dataset, small_pca):
+    assert float(small_pca.explained.sum()) > 0.8
+
+
+# ------------------------------ graph ---------------------------------------
+
+def test_graph_degree_bounds(small_graph):
+    cfg = small_graph.cfg
+    for l, adj in enumerate(small_graph.layers):
+        assert adj.shape[1] == cfg.degree(l)
+        assert adj.max() < small_graph.n
+
+
+def test_graph_layer_population(small_graph):
+    """Geometric level assignment: layer l has ~N/M^l points."""
+    sizes = [int((small_graph.levels >= l).sum()) for l in range(3)]
+    assert sizes[0] == small_graph.n
+    assert sizes[1] < sizes[0] // 8
+    assert sizes[2] <= max(sizes[1] // 4, 8)
+
+
+def test_graph_connectivity(small_graph):
+    """Layer 0 must be (almost fully) reachable from the entry point."""
+    adj = small_graph.layers[0]
+    n = small_graph.n
+    seen = np.zeros(n, bool)
+    frontier = [small_graph.entry]
+    seen[small_graph.entry] = True
+    while frontier:
+        nxt = adj[frontier]
+        nxt = np.unique(nxt[nxt >= 0])
+        frontier = [int(i) for i in nxt if not seen[i]]
+        seen[[int(i) for i in nxt]] = True
+    assert seen.mean() > 0.99
+
+
+# --------------------------- Algorithm 1 ------------------------------------
+
+def test_phnsw_recall_close_to_hnsw(small_dataset, small_graph, small_pca,
+                                    small_xlow):
+    x, q, gt = small_dataset
+    r_h, _ = run_queries(small_graph, q, gt, algo="hnsw")
+    r_p, _ = run_queries(small_graph, q, gt, algo="phnsw",
+                         x_low=small_xlow, pca=small_pca)
+    assert r_h > 0.75
+    assert r_p >= r_h - 0.05      # paper: filter costs ~no recall
+
+
+def test_phnsw_reduces_highdim_work(small_dataset, small_graph, small_pca,
+                                    small_xlow):
+    """The core claim: high-dim distance computations bounded by k per
+    expansion -> far fewer than HNSW's per-neighbor count."""
+    x, q, gt = small_dataset
+    _, st_h = run_queries(small_graph, q, gt, algo="hnsw", hw_mode=True)
+    _, st_p = run_queries(small_graph, q, gt, algo="phnsw",
+                          x_low=small_xlow, pca=small_pca)
+    assert st_p.dist_high < st_h.dist_high / 2
+    assert st_p.rand_bytes < st_h.rand_bytes / 2
+
+
+def test_layout_access_patterns(small_dataset, small_graph, small_pca,
+                                small_xlow):
+    """Layout (3) vs (4): same algorithm, same recall, wildly different
+    irregular-access counts (paper IV-A)."""
+    x, q, gt = small_dataset
+    r_p, st_p = run_queries(small_graph, q, gt, algo="phnsw",
+                            x_low=small_xlow, pca=small_pca, layout="packed")
+    r_s, st_s = run_queries(small_graph, q, gt, algo="phnsw",
+                            x_low=small_xlow, pca=small_pca,
+                            layout="separate")
+    assert r_p == r_s                      # identical traversal
+    assert st_s.rand_accesses > 4 * st_p.rand_accesses
+    assert st_p.seq_bytes > st_s.seq_bytes  # inline data moves to bursts
+
+
+def test_recall_monotone_in_k(small_dataset, small_graph, small_pca,
+                              small_xlow):
+    """Fig 2: recall non-decreasing (within noise) as k grows; saturates."""
+    x, q, gt = small_dataset
+    recalls = []
+    for k0 in (4, 8, 16, 32):
+        r, _ = run_queries(small_graph, q, gt, algo="phnsw",
+                           x_low=small_xlow, pca=small_pca,
+                           k_schedule=(k0, 8, 3, 3, 3, 3))
+        recalls.append(r)
+    assert recalls[-1] >= recalls[0] - 1e-9
+    # saturation: last doubling gains little
+    assert recalls[-1] - recalls[-2] < 0.05
+
+
+def test_recall_monotone_in_ef(small_dataset, small_graph, small_pca,
+                               small_xlow):
+    x, q, gt = small_dataset
+    r10, _ = run_queries(small_graph, q, gt, algo="hnsw")
+    cfgs = small_graph.cfg
+    from repro.core.search_ref import search_hnsw, recall_at
+    r_small = np.mean([recall_at(search_hnsw(small_graph, qi, ef0=5)[0],
+                                 gt[i], 10) for i, qi in enumerate(q)])
+    r_big = np.mean([recall_at(search_hnsw(small_graph, qi, ef0=40)[0],
+                               gt[i], 10) for i, qi in enumerate(q)])
+    assert r_big >= r_small
+
+
+# ----------------------------- cost model -----------------------------------
+
+def _stats(small_dataset, small_graph, small_pca, small_xlow):
+    x, q, gt = small_dataset
+    _, st_h = run_queries(small_graph, q, gt, algo="hnsw", hw_mode=True)
+    _, st_p = run_queries(small_graph, q, gt, algo="phnsw",
+                          x_low=small_xlow, pca=small_pca)
+    _, st_s = run_queries(small_graph, q, gt, algo="phnsw",
+                          x_low=small_xlow, pca=small_pca, layout="separate")
+    return table3(hw_variant_stats(st_h, st_p, st_s), n_queries=len(q),
+                  dim=x.shape[1], d_low=small_xlow.shape[1])
+
+
+def test_table3_orderings(small_dataset, small_graph, small_pca, small_xlow):
+    """Paper Table III orderings: QPS pHNSW > pHNSW-Sep > (Sep vs Std
+    varies with scale) and pHNSW > HNSW-Std on both DRAMs; HBM >= DDR4
+    for every variant."""
+    t3 = _stats(small_dataset, small_graph, small_pca, small_xlow)
+    for d in ("DDR4", "HBM"):
+        assert t3["pHNSW"][d].qps > t3["pHNSW-Sep"][d].qps
+        assert t3["pHNSW"][d].qps > t3["HNSW-Std"][d].qps
+    for v in t3:
+        assert t3[v]["HBM"].qps >= t3[v]["DDR4"].qps
+
+
+def test_fig5_energy_orderings(small_dataset, small_graph, small_pca,
+                               small_xlow):
+    """Fig 5: pHNSW lowest energy; DRAM dominates energy on DDR4; HBM
+    share lower than DDR4 share."""
+    t3 = _stats(small_dataset, small_graph, small_pca, small_xlow)
+    for d in ("DDR4", "HBM"):
+        assert t3["pHNSW"][d].energy_uj < t3["HNSW-Std"][d].energy_uj
+        assert t3["pHNSW"][d].energy_uj < t3["pHNSW-Sep"][d].energy_uj
+    assert t3["pHNSW"]["DDR4"].dram_energy_share > 0.6
+    assert t3["pHNSW"]["HBM"].dram_energy_share < \
+        t3["pHNSW"]["DDR4"].dram_energy_share

@@ -1,0 +1,134 @@
+"""Per-kernel Pallas (interpret=True) vs pure-jnp oracle, swept over
+shapes/dtypes, plus hypothesis property tests on the sort/filter
+invariants."""
+import os
+
+import numpy as np
+import pytest
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dist_l import dist_l_pallas
+from repro.kernels.ksort_l import ksort_l_pallas
+from repro.kernels.dist_h import dist_h_pallas
+from repro.kernels.fused_filter import fused_filter_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def rnd(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale).astype(dtype)
+
+
+# ------------------------- shape/dtype sweeps -------------------------------
+
+@pytest.mark.parametrize("B,M,dl", [(8, 16, 15), (8, 32, 15), (16, 32, 16),
+                                    (8, 64, 8), (24, 128, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dist_l_sweep(B, M, dl, dtype):
+    x, q = rnd((B, M, dl), dtype), rnd((B, dl), dtype)
+    out = dist_l_pallas(x, q, block_b=8, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(out, ref.dist_l_ref(x, q), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,M,k", [(8, 16, 3), (8, 32, 16), (16, 32, 8),
+                                   (8, 64, 16), (8, 128, 32)])
+def test_ksort_sweep(B, M, k):
+    d = rnd((B, M), scale=3.0)
+    v1, i1 = ksort_l_pallas(d, k, block_b=8, interpret=True)
+    v0, i0 = ref.ksort_l_ref(d, k)
+    np.testing.assert_allclose(v1, v0, rtol=1e-6)
+    np.testing.assert_array_equal(i1, i0)
+
+
+@pytest.mark.parametrize("B,K,D", [(8, 16, 128), (8, 3, 128), (16, 32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dist_h_sweep(B, K, D, dtype):
+    x, q = rnd((B, K, D), dtype), rnd((B, D), dtype)
+    out = dist_h_pallas(x, q, block_b=8, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 0.3
+    np.testing.assert_allclose(out, ref.dist_h_ref(x, q), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,M,dl,k", [(8, 32, 15, 16), (8, 16, 15, 3),
+                                      (16, 64, 16, 8)])
+def test_fused_filter_sweep(B, M, dl, k):
+    x, q = rnd((B, M, dl)), rnd((B, dl))
+    v1, i1 = fused_filter_pallas(x, q, k, block_b=8, interpret=True)
+    v0, i0 = ref.fused_filter_ref(x, q, k)
+    np.testing.assert_allclose(v1, v0, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(i1, i0)
+
+
+@pytest.mark.parametrize("S,T,window", [(128, 128, 0), (128, 256, 0),
+                                        (256, 256, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, T, window, dtype):
+    B, H, d = 2, 2, 64
+    q, k, v = rnd((B, H, S, d), dtype), rnd((B, H, T, d), dtype), \
+        rnd((B, H, T, d), dtype)
+    out = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-3 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_noncausal():
+    B, H, S, d = 1, 2, 128, 64
+    q, k, v = rnd((B, H, S, d)), rnd((B, H, S, d)), rnd((B, H, S, d))
+    out = flash_attention_pallas(q, k, v, causal=False, bq=64, bk=64,
+                                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("T,bk", [(256, 64), (512, 128)])
+def test_decode_attention_sweep(T, bk):
+    B, H, d = 3, 4, 64
+    q, k, v = rnd((B, H, d)), rnd((B, H, T, d)), rnd((B, H, T, d))
+    length = jnp.asarray([1, T // 2, T], jnp.int32)
+    out = decode_attention_pallas(q, k, v, length, bk=bk, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)
+
+
+# ------------------------- hypothesis properties ----------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 48), st.integers(1, 16), st.data())
+def test_ksort_properties(m, k, data):
+    """rank is a permutation; output = sorted smallest-k; ties -> index."""
+    k = min(k, m)
+    # XLA flushes subnormals to zero (numpy doesn't), which legitimately
+    # changes tie-breaking — exclude denormal magnitudes
+    vals = data.draw(st.lists(
+        st.floats(-1e6, 1e6, allow_nan=False, width=32).filter(
+            lambda v: v == 0.0 or abs(v) > 1e-30),
+        min_size=m, max_size=m))
+    d = jnp.asarray([vals], jnp.float32)
+    v, i = ref.ksort_l_ref(d, k)
+    order = np.lexsort((np.arange(m), np.asarray(d[0])))
+    np.testing.assert_array_equal(np.asarray(i[0]), order[:k])
+    assert np.all(np.diff(np.asarray(v[0])) >= 0)            # ascending
+    assert len(set(np.asarray(i[0]).tolist())) == k           # distinct
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(4, 32), st.integers(1, 20))
+def test_dist_l_nonneg_and_zero(b, m, dl):
+    """distances are >= 0 and d(x, x) == 0."""
+    x = jnp.asarray(RNG.standard_normal((b, m, dl)), jnp.float32)
+    q = x[:, 0, :]
+    d = ref.dist_l_ref(x, q)
+    assert float(d.min()) >= 0.0
+    np.testing.assert_allclose(np.asarray(d[:, 0]), 0.0, atol=1e-4)
