@@ -18,7 +18,10 @@ for pHNSW rows also the layout-(3) memory blow-up vs the raw dataset.
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
+from typing import Optional
 
 import numpy as np
 import jax.numpy as jnp
@@ -29,7 +32,8 @@ from repro.core.search_jax import build_packed, search_batched
 from repro.core.search_ref import recall_at, run_queries
 
 
-def main(n_points: int = 50_000, n_queries: int = 200):
+def main(n_points: int = 50_000, n_queries: int = 200,
+         json_path: Optional[str] = None):
     cfg, x, g, pca, x_low, q, gt = load_bench_db(n_points, n_queries)
     rows = []
 
@@ -80,8 +84,27 @@ def main(n_points: int = 50_000, n_queries: int = 200):
     fi = np.asarray(fi)
     rec = float(np.mean([recall_at(fi[i], gt[i], cfg.recall_at)
                          for i in range(B)]))
+    # per-query expansion-step telemetry (convoy diagnostics: the batch
+    # convoys on its slowest lane, so p99 steps ~ batch wall-clock)
+    _, _, st_b = search_batched(db, qd, pca=pca, return_stats=True)
+    steps = np.asarray(st_b["steps_total"])
+    steps_mean, steps_p99 = float(steps.mean()), \
+        float(np.percentile(steps, 99))
     rows.append(("table3/pHNSW-JAX-batched", dt / B * 1e6,
-                 f"qps={B / dt:.0f};recall@10={rec:.3f}"))
+                 f"qps={B / dt:.0f};recall@10={rec:.3f};"
+                 f"steps_mean={steps_mean:.1f};steps_p99={steps_p99:.1f}"))
+    if json_path:
+        Path(json_path).write_text(json.dumps({
+            "bench": "table3_qps",
+            "n_points": n_points,
+            "batch": B,
+            "qps": B / dt,
+            "us_per_query": dt / B * 1e6,
+            "recall_at_10": rec,
+            "steps_mean": steps_mean,
+            "steps_p99": steps_p99,
+            "steps_max": int(steps.max()),
+        }, indent=2) + "\n")
     return emit(rows)
 
 

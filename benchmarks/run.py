@@ -20,16 +20,35 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller database (8k points) for quick runs")
     ap.add_argument("--n-points", type=int, default=None)
+    ap.add_argument("--perf-smoke", action="store_true",
+                    help="only the batched-QPS benchmark on a small "
+                         "database; writes BENCH_table3.json (QPS, "
+                         "recall, mean/p99 steps) for the tracked perf "
+                         "trajectory")
     args = ap.parse_args()
-    n_points = args.n_points or (8_000 if args.fast else 50_000)
-    n_queries = 64 if args.fast else 200
+    n_points = args.n_points or \
+        (8_000 if args.fast or args.perf_smoke else 50_000)
+    n_queries = 64 if args.fast or args.perf_smoke else 200
+    json_path = str(Path(__file__).resolve().parents[1]
+                    / "BENCH_table3.json")
 
     from benchmarks import (bench_fig2_kselect, bench_fig5_energy,
                             bench_kernel_footprint, bench_pq_ablation,
                             bench_table3_qps)
 
+    if args.perf_smoke:
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        bench_table3_qps.main(n_points=n_points, n_queries=n_queries,
+                              json_path=json_path)
+        print(f"# wrote {json_path}", file=sys.stderr)
+        print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+        return
+
     print("name,us_per_call,derived")
     t0 = time.time()
+    # BENCH_table3.json tracks the fixed --perf-smoke configuration
+    # only; full runs at other sizes must not overwrite it
     for mod, kwargs in (
         (bench_table3_qps, dict(n_points=n_points, n_queries=n_queries)),
         (bench_fig2_kselect, dict(n_points=n_points,

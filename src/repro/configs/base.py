@@ -220,6 +220,24 @@ class PHNSWConfig:
     ef_construction: int = 100
     recall_at: int = 10
     dtype: str = "float32"
+    # storage dtype of the inline low-dim vectors in layout (3)
+    # ("bfloat16" halves the dominant HBM stream and the paper's ~2.9x
+    # memory blow-up; distances still accumulate in f32)
+    low_dtype: str = "float32"
+    # per-layer expansion-step budgets for the batched engine (layer 0
+    # first). None -> the default linear-in-ef budget. Tune from the
+    # steps_mean/steps_p99 telemetry in BENCH_table3.json: the batch
+    # convoys on its slowest query, so capping tail steps trades a
+    # bounded recall loss for wall-clock.
+    step_budget: Optional[Tuple[int, ...]] = None
+    # batched engine: expand the W nearest frontier candidates per loop
+    # iteration (DESIGN.md). Exact w.r.t. the per-candidate expansion
+    # rule (a popped candidate beyond F.max can never re-qualify) and
+    # cuts while_loop trips ~W-fold, but widens every per-iteration
+    # matrix ~W-fold — a win only where fixed per-iteration overhead
+    # dominates element throughput (measured: not on CPU; revisit per
+    # backend via BENCH_table3.json).
+    expand_width: int = 1
 
     def k_for_layer(self, layer: int) -> int:
         return self.k_schedule[min(layer, len(self.k_schedule) - 1)]
@@ -229,3 +247,8 @@ class PHNSWConfig:
 
     def degree(self, layer: int) -> int:
         return self.M0 if layer == 0 else self.M
+
+    def max_steps_for_layer(self, layer: int) -> int:
+        if self.step_budget is not None:
+            return self.step_budget[min(layer, len(self.step_budget) - 1)]
+        return 4 * self.ef_for_layer(layer) + 16

@@ -60,7 +60,8 @@ def build_sharded(x: np.ndarray, cfg: PHNSWConfig, pca: PCA,
         xs = x[s * per:(s + 1) * per]
         g = build_hnsw(xs, cfg, seed=seed + s)
         xl = pca.transform(xs).astype(np.float32)
-        dbs.append(build_packed(g, xl))
+        # keep layer counts uniform across shards for stacking
+        dbs.append(build_packed(g, xl, drop_empty_layers=False))
         offsets.append(s * per)
     stack = lambda xs: jnp.stack(xs)
     n_layers = len(dbs[0].layers)
@@ -128,8 +129,9 @@ def _search_with_entry(db: PackedDB, queries, q_low, entry, ef0, ks):
     ep = jnp.full((B, 1), entry, jnp.int32)
     ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), queries)
     for layer in range(len(db.layers) - 1, 0, -1):
-        ep_d, ep = search_layer_batched(
+        ep_d, ep, _ = search_layer_batched(
             db, layer, queries, q_low, ep_d, ep,
             ef=cfg.ef_for_layer(layer), k=k_of(layer))
-    return search_layer_batched(db, 0, queries, q_low, ep_d, ep,
-                                ef=ef0, k=k_of(0))
+    fd, fi, _ = search_layer_batched(db, 0, queries, q_low, ep_d, ep,
+                                     ef=ef0, k=k_of(0))
+    return fd, fi

@@ -6,20 +6,34 @@ simultaneously through Algorithm 1 with:
 
   * packed layout (3) as a device array ``packed_low[N, M, dl]`` — one
     row gather per expansion fetches indices + all neighbor low-dim
-    vectors (the regular-access insight, HBM edition);
-  * the Dist.L / kSort.L / Dist.H kernels (repro.kernels.ops) for the
-    filter pipeline;
-  * fixed-capacity candidate/final/visited buffers with masked updates
-    inside ``lax.while_loop`` (no data-dependent shapes anywhere);
-  * per-query freeze masks instead of early exit.
+    vectors (the regular-access insight, HBM edition), storable in
+    bfloat16 (``PHNSWConfig.low_dtype``) to halve the dominant stream;
+  * the FUSED expand kernel (``ops.fused_expand``): Dist.L, the
+    adjacency/active mask, the C_pca threshold compare and kSort.L in a
+    single VMEM residency — one kernel per expansion step instead of a
+    Dist.L -> HBM -> kSort.L round-trip;
+  * sorted frontiers: C (candidates), F (finals) and C_pca are kept
+    ascending-sorted loop invariants, so the pop is slot 0 and every
+    per-step merge is an O(ef+k) sorted merge (``ops.merge_topk_sorted``)
+    instead of a concat + O((CAP+k)^2) comparison-matrix re-sort;
+  * fixed-capacity candidate/final buffers with masked updates inside
+    ``lax.while_loop`` (no data-dependent shapes anywhere), and the
+    ASIC's per-query visited BITMAP (one bit per node, packed into
+    int32 words — membership is a single word gather per candidate);
+  * per-query ``done`` masks carried as loop state (termination is
+    monotone, so freezing is latched), per-query step telemetry, and a
+    global early exit once every query in the batch has frozen — the
+    convoy-mitigation story (DESIGN.md).
 
-The visited set is a bounded ring buffer (VCAP entries) — a documented
-deviation from the ASIC's 1M-bit SPM bitmap (DESIGN.md): membership
-tests are vectorized compares, and VCAP is sized so overflow is
-statistically negligible at the paper's operating point.
+Formulation note (DESIGN.md): every small sort/merge here is a
+comparison-matrix + one-hot contraction, NOT lax.sort/gather — XLA
+lowers variadic sorts and gathers to scalar loops on CPU and the widths
+involved (M, k, CAP) are tiny, so the O(n^2) vector form wins on every
+backend this repo targets.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
@@ -30,8 +44,9 @@ import jax.numpy as jnp
 from repro.configs.base import PHNSWConfig
 from repro.core.graph import HNSWGraph
 from repro.kernels import ops
+from repro.kernels.ref import INF as _INF, VALID_MAX
 
-INF = jnp.float32(3.4e38)
+INF = jnp.float32(_INF)
 
 
 @dataclass
@@ -57,16 +72,19 @@ class PackedDB:
         keep full-N rows for gather regularity; the accounting reflects
         what a packed store would hold.)"""
         dl = self.low.shape[1]
+        low_bytes = jnp.dtype(self.low.dtype).itemsize
         extra = 0
         for l in self.layers:
             nnz = int((l.adj >= 0).sum())
-            extra += nnz * (4 + dl * 4)
+            extra += nnz * (4 + dl * low_bytes)
         return extra + int(self.high.size) * 4
 
     @property
     def bytes_layout4(self) -> int:
         idx = sum(int((l.adj >= 0).sum()) * 4 for l in self.layers)
-        return idx + int(self.low.size) * 4 + int(self.high.size) * 4
+        low_bytes = jnp.dtype(self.low.dtype).itemsize
+        return idx + int(self.low.size) * low_bytes \
+            + int(self.high.size) * 4
 
 
 # pytree registration so whole searches can be jit'd / shard_map'd
@@ -77,110 +95,175 @@ jax.tree_util.register_dataclass(
     meta_fields=["entry", "cfg"])
 
 
-def build_packed(g: HNSWGraph, x_low: np.ndarray) -> PackedDB:
+def build_packed(g: HNSWGraph, x_low: np.ndarray,
+                 *, low_dtype: Optional[str] = None,
+                 drop_empty_layers: bool = True) -> PackedDB:
+    """``low_dtype`` overrides ``g.cfg.low_dtype`` (layout-(3) storage
+    dtype of the inline low-dim vectors; distances still run in f32).
+    ``drop_empty_layers`` skips all-padding top layers (the level
+    assignment rarely reaches cfg.n_layers at small N) so the search
+    never runs a while_loop over an empty graph layer; pass False when
+    layer counts must stay uniform (e.g. stacking shards)."""
+    dt = jnp.dtype(low_dtype or g.cfg.low_dtype)
+    adjs = list(g.layers)
+    if drop_empty_layers:
+        while len(adjs) > 1 and not (adjs[-1] >= 0).any():
+            adjs.pop()
     layers = []
-    for adj in g.layers:
+    for adj in adjs:
         safe = np.where(adj >= 0, adj, 0)
         packed = x_low[safe]                       # [N, M, dl]
         packed[adj < 0] = 0.0
         layers.append(PackedLayer(adj=jnp.asarray(adj),
-                                  packed_low=jnp.asarray(packed)))
-    return PackedDB(layers=layers, low=jnp.asarray(x_low),
+                                  packed_low=jnp.asarray(packed, dt)))
+    return PackedDB(layers=layers, low=jnp.asarray(x_low, dt),
                     high=jnp.asarray(g.x), entry=g.entry, cfg=g.cfg)
 
 
-def _merge_topk(d_a, i_a, d_b, i_b, k: int):
-    """Merge two (dist, idx) sets, keep k smallest (kSort.L merge)."""
-    d = jnp.concatenate([d_a, d_b], axis=1)
-    i = jnp.concatenate([i_a, i_b], axis=1)
-    vals, sel = ops.ksort_l(d, k)
-    return vals, jnp.take_along_axis(i, sel, axis=1)
+def _rank_sort_with_payload(d, p):
+    """Stable ascending sort of each row of d (ties -> lower slot), the
+    int payload p carried along. Same (dist, slot) order as
+    ref.ksort_l_ref — merge_topk_sorted's determinism depends on the
+    tie-break matching — but applies the payload through the rank
+    one-hot instead of ksort_l + take_along_axis: n is small (W*k) and
+    XLA CPU lowers lax.sort/gather to scalar loops."""
+    B, n = d.shape
+    ii = jnp.arange(n)
+    idx_gt = (ii[:, None] > ii[None, :])[None]
+    cmp = (d[:, :, None] > d[:, None, :]) \
+        | ((d[:, :, None] == d[:, None, :]) & idx_gt)
+    rank = cmp.sum(-1).astype(jnp.int32)
+    hot = rank[:, :, None] == ii[None, None, :]          # [B, n, n]
+    sd = jnp.sum(jnp.where(hot, d[:, :, None], 0.0), axis=1)
+    sp = jnp.sum(jnp.where(hot, p[:, :, None], 0), axis=1).astype(p.dtype)
+    return sd, sp
 
 
 def search_layer_batched(db: PackedDB, layer: int, q_high, q_low,
                          start_d, start_i, *, ef: int, k: int,
                          max_steps: Optional[int] = None,
-                         vcap: int = 256):
+                         expand_width: Optional[int] = None):
     """One layer of Algorithm 1 for a batch of queries.
 
-    start_d/start_i: [B, E] entry candidates (high-dim dists, idx).
-    Returns (F_dist [B, ef], F_idx [B, ef]) ascending."""
+    start_d/start_i: [B, E] entry candidates (high-dim dists, idx),
+    ASCENDING — the previous layer's output already is.
+
+    Each loop iteration pops the W = expand_width nearest frontier
+    candidates (slots 0..W-1 of the sorted C) and expands them jointly —
+    exact w.r.t. the per-candidate rule, since a popped candidate with
+    d > F.max can never re-qualify (F.max only shrinks). W-fold fewer
+    while_loop trips; each trip's gathers/kernels widen instead.
+
+    Returns (F_dist [B, ef], F_idx [B, ef] ascending, steps [B] int32 =
+    per-query expansion count before that query froze)."""
     B = q_high.shape[0]
     lay = db.layers[layer]
-    M = lay.adj.shape[1]
-    CAP = max(2 * ef + k, 32)
-    steps = max_steps or (4 * ef + 16)
+    N = db.high.shape[0]
+    W = expand_width or db.cfg.expand_width
+    kk = W * k                                   # survivors per iteration
+    CAP = max(ef + kk, 8)
+    steps = max_steps or db.cfg.max_steps_for_layer(layer)
+    iters = -(-steps // W)                       # expansion budget / W
 
-    # --- fixed-capacity state ---
+    # --- fixed-capacity SORTED state ---
     pad = CAP - start_d.shape[1]
     C_d = jnp.pad(start_d, ((0, 0), (0, pad)), constant_values=INF)
     C_i = jnp.pad(start_i, ((0, 0), (0, pad)), constant_values=-1)
-    F_d, F_i = _merge_topk(C_d, C_i, jnp.full((B, 1), INF),
-                           jnp.full((B, 1), -1, jnp.int32), ef)
-    V = jnp.full((B, vcap), -1, jnp.int32)
-    V = V.at[:, :start_i.shape[1]].set(start_i)
-    vptr = jnp.full((B,), start_i.shape[1], jnp.int32)
-    # C_pca threshold heap (k-bounded low-dim dists of accepted candidates)
+    F_d, F_i = C_d[:, :ef], C_i[:, :ef]        # best ef of the start set
+    # visited bitmap, the ASIC's SPM bitmap verbatim: one bit per node,
+    # packed into int32 words; membership = one word gather per
+    # candidate, insert = scatter-add of (disjoint) bit masks
+    nw = -(-N // 32)
+    V = jnp.zeros((B, nw), jnp.int32)
+    sw, sb = start_i // 32, start_i % 32
+    V = jax.vmap(lambda v, w, m: v.at[w].add(m))(
+        V, sw, jnp.where(start_i >= 0, (1 << sb).astype(jnp.int32), 0))
+    # C_pca threshold heap (k-bounded low-dim dists of accepted
+    # candidates, ascending; Cp[-1] is the filter threshold f_pca)
     Cp = jnp.full((B, k), INF)
-    state = (jnp.int32(0), C_d, C_i, F_d, F_i, V, vptr, Cp)
+    done = jnp.zeros((B,), bool)
+    nsteps = jnp.zeros((B,), jnp.int32)
+    state = (jnp.int32(0), C_d, C_i, F_d, F_i, V, Cp, done, nsteps)
 
     def cond(state):
-        t, C_d, C_i, F_d, F_i, *_ = state
-        active = C_d.min(axis=1) <= F_d.max(axis=1)
-        return (t < steps) & active.any()
+        t, *_, done, _ns = state
+        return (t < iters) & ~done.all()
 
     def body(state):
-        t, C_d, C_i, F_d, F_i, V, vptr, Cp = state
-        # -- pop nearest candidate --
-        j = jnp.argmin(C_d, axis=1)                         # [B]
-        d_c = jnp.take_along_axis(C_d, j[:, None], 1)[:, 0]
-        c = jnp.take_along_axis(C_i, j[:, None], 1)[:, 0]
-        active = d_c <= F_d.max(axis=1)                     # lines 7-8
-        C_d = C_d.at[jnp.arange(B), j].set(INF)
-        c_safe = jnp.maximum(c, 0)
-        # -- step 2: ONE row gather = paper layout (3) burst --
-        nb_i = jnp.take(lay.adj, c_safe, axis=0)            # [B, M]
-        nb_low = jnp.take(lay.packed_low, c_safe, axis=0)   # [B, M, dl]
-        dl = ops.dist_l(nb_low, q_low)                      # Dist.L
-        th = jnp.where(jnp.sum(jnp.isfinite(Cp), 1) >= k,
-                       Cp.max(axis=1), INF)
-        dl = jnp.where((nb_i >= 0) & (dl < th[:, None]) & active[:, None],
-                       dl, INF)
-        kv, ki = ops.ksort_l(dl, k)                         # kSort.L
-        cand = jnp.take_along_axis(nb_i, ki, axis=1)        # [B, k]
-        valid = jnp.isfinite(kv) & (cand >= 0)
-        # -- visited check (V-list) --
-        seen = (V[:, None, :] == cand[:, :, None]).any(-1)
+        t, C_d, C_i, F_d, F_i, V, Cp, done, nsteps = state
+        # -- pop the W nearest candidates: slots 0..W-1 of sorted C --
+        d_w, c_w = C_d[:, :W], C_i[:, :W]
+        # termination is monotone (F.max only shrinks, the popped min
+        # only grows), so the freeze is latched per query; frozen
+        # queries keep popping into masked work, which is harmless
+        done = done | (C_d[:, 0] > F_d[:, -1])          # lines 7-8
+        # per-slot expansion gate: a popped candidate past F.max is
+        # dead forever, so dropping it unexpanded is exact; the budget
+        # term keeps total expansions <= steps even when W ∤ steps
+        exp = (d_w <= F_d[:, -1:]) & ~done[:, None] \
+            & (nsteps[:, None] + jnp.arange(W)[None, :] < steps)
+        C_d = jnp.concatenate([C_d[:, W:], jnp.full((B, W), INF)], 1)
+        C_i = jnp.concatenate([C_i[:, W:],
+                               jnp.full((B, W), -1, jnp.int32)], 1)
+        # gated-off slots gather row 0 (cheap, discarded via the mask)
+        c_safe = jnp.where(exp, jnp.maximum(c_w, 0), 0)
+        # -- step 2: W row gathers = paper layout (3) bursts --
+        nb_i = jnp.take(lay.adj, c_safe.reshape(-1), axis=0) \
+            .reshape(B, -1)                             # [B, W*M]
+        nb_low = jnp.take(lay.packed_low, c_safe.reshape(-1), axis=0) \
+            .reshape(B, nb_i.shape[1], -1)              # [B, W*M, dl]
+        # -- fused expand: Dist.L + mask + f_pca threshold + kSort.L --
+        th = Cp[:, -1]
+        M = lay.adj.shape[1]
+        kv, ki = ops.fused_expand(
+            nb_low, q_low,
+            (nb_i >= 0) & jnp.repeat(exp, M, axis=1), th, kk)
+        cand = jnp.take_along_axis(nb_i, ki, axis=1)    # [B, W*k]
+        valid = (kv < VALID_MAX) & (cand >= 0)
+        # -- visited check: one bit gather per candidate --
+        cw, cb = jnp.maximum(cand, 0) // 32, jnp.maximum(cand, 0) % 32
+        seen = (jnp.take_along_axis(V, cw, axis=1) >> cb) & 1 != 0
+        if W > 1:
+            # intra-iteration dedup (the W neighbor lists may overlap;
+            # keep the first occurrence)
+            jj = jnp.arange(kk, dtype=jnp.int32)
+            dup = ((cand[:, :, None] == cand[:, None, :])
+                   & (jj[None, :, None] > jj[None, None, :])
+                   & valid[:, None, :]).any(-1)
+            seen |= dup
         valid &= ~seen
-        # -- step 3: k irregular high-dim fetches + Dist.H --
-        xh = jnp.take(db.high, jnp.maximum(cand, 0), axis=0)  # [B, k, D]
+        # -- step 3: W*k irregular high-dim fetches + Dist.H --
+        xh = jnp.take(db.high, jnp.maximum(cand, 0), axis=0)
         dh = jnp.where(valid, ops.dist_h(xh, q_high), INF)    # Dist.H
-        # -- V append (ring) --
-        slot = (vptr[:, None] + jnp.arange(k)[None, :]) % vcap
-        V = jax.vmap(lambda v, s, cnd, vl:
-                     v.at[s].set(jnp.where(vl, cnd, v[s])))(
-                         V, slot, cand, valid)
-        vptr = vptr + valid.sum(axis=1)
+        # -- mark visited: disjoint bit masks (valid slots are distinct
+        #    ids, so mod-2^32 add == bitwise or) --
+        V = jax.vmap(lambda v, w, m: v.at[w].add(m))(
+            V, cw, jnp.where(valid, (1 << cb).astype(jnp.int32), 0))
         # -- accept: d < F.max or F not full (F starts padded with INF) --
-        accept = dh < F_d.max(axis=1)[:, None]
-        dh_acc = jnp.where(accept, dh, INF)
-        cand_acc = jnp.where(accept, cand, -1)
-        F_d, F_i = _merge_topk(F_d, F_i, dh_acc, cand_acc, ef)
-        # push to C: replace worst slots
-        C_d2 = jnp.concatenate([C_d, dh_acc], axis=1)
-        C_i2 = jnp.concatenate([C_i, cand_acc], axis=1)
-        C_d, C_i = _merge_topk(C_d2, C_i2, jnp.full((B, 1), INF),
-                               jnp.full((B, 1), -1, jnp.int32), CAP)
-        # C_pca threshold heap update (low-dim dists of accepted)
-        kv_acc = jnp.where(accept, kv, INF)
-        Cp, _ = _merge_topk(Cp, cand_acc, kv_acc, cand_acc, k)
-        return (t + 1, C_d, C_i, F_d, F_i, V, vptr, Cp)
+        accept = dh < F_d[:, -1:]
+        # one stacked stable sort orders the acceptees by high-dim dist
+        # (rows 0..B-1, feeding F/C) and by low-dim dist (rows B..2B-1,
+        # feeding the C_pca threshold heap)
+        s2d, s2i = _rank_sort_with_payload(
+            jnp.concatenate([jnp.where(accept, dh, INF),
+                             jnp.where(accept, kv, INF)], 0),
+            jnp.concatenate([jnp.where(accept, cand, -1),
+                             jnp.zeros((B, kk), jnp.int32)], 0))
+        sd, si = s2d[:B], s2i[:B]
+        pv, zk = s2d[B:], s2i[B:]
+        # -- fold into the three sorted frontiers: O(ef+k) sorted
+        #    merges, each right-sized (element work, not op count, is
+        #    what the CPU/TPU vector units pay for) --
+        F_d, F_i = ops.merge_topk_sorted(F_d, F_i, sd, si, ef)
+        C_d, C_i = ops.merge_topk_sorted(C_d, C_i, sd, si, CAP)
+        Cp, _ = ops.merge_topk_sorted(Cp, jnp.zeros((B, k), jnp.int32),
+                                      pv, zk, k)
+        nsteps = nsteps + exp.sum(axis=1, dtype=jnp.int32)
+        return (t + 1, C_d, C_i, F_d, F_i, V, Cp, done, nsteps)
 
-    _, _, _, F_d, F_i, _, _, _ = jax.lax.while_loop(cond, body, state)
-    return F_d, F_i
-
-
-import functools
+    out = jax.lax.while_loop(cond, body, state)
+    _, _, _, F_d, F_i, _, _, _, nsteps = out
+    return F_d, F_i, nsteps
 
 
 @functools.partial(jax.jit, static_argnames=("ef0", "k_schedule"))
@@ -191,14 +274,22 @@ def _search_batched_jit(db, queries, q_low, ef0, k_schedule):
 
 def search_batched(db: PackedDB, queries, q_low=None, *, pca=None,
                    ef0: Optional[int] = None,
-                   k_schedule: Optional[Tuple[int, ...]] = None):
+                   k_schedule: Optional[Tuple[int, ...]] = None,
+                   return_stats: bool = False):
     """Full multi-layer pHNSW search for a batch (jit'd).
-    queries: [B, D] (device). Returns (dists [B, ef0], idx [B, ef0])."""
+    queries: [B, D] (device). Returns (dists [B, ef0], idx [B, ef0]);
+    with ``return_stats=True`` also a dict with per-query expansion-step
+    telemetry: ``steps_per_layer`` [n_layers, B] (top layer first) and
+    ``steps_total`` [B]."""
     if q_low is None:
         q_low = pca.transform_jnp(queries).astype(jnp.float32)
-    return _search_batched_jit(db, queries, q_low,
-                               ef0 or db.cfg.ef0,
-                               k_schedule or db.cfg.k_schedule)
+    fd, fi, steps = _search_batched_jit(db, queries, q_low,
+                                        ef0 or db.cfg.ef0,
+                                        k_schedule or db.cfg.k_schedule)
+    if return_stats:
+        return fd, fi, {"steps_per_layer": steps,
+                        "steps_total": steps.sum(axis=0)}
+    return fd, fi
 
 
 def _search_batched_impl(db: PackedDB, queries, q_low, *,
@@ -211,9 +302,13 @@ def _search_batched_impl(db: PackedDB, queries, q_low, *,
     ep = jnp.full((B, 1), db.entry, jnp.int32)
     ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), queries)
     n_layers = len(db.layers)
+    steps = []
     for layer in range(n_layers - 1, 0, -1):
-        ep_d, ep = search_layer_batched(
+        ep_d, ep, st = search_layer_batched(
             db, layer, queries, q_low, ep_d, ep,
             ef=cfg.ef_for_layer(layer), k=k_of(layer))
-    return search_layer_batched(db, 0, queries, q_low, ep_d, ep,
-                                ef=ef0 or cfg.ef0, k=k_of(0))
+        steps.append(st)
+    fd, fi, st = search_layer_batched(db, 0, queries, q_low, ep_d, ep,
+                                      ef=ef0 or cfg.ef0, k=k_of(0))
+    steps.append(st)
+    return fd, fi, jnp.stack(steps)

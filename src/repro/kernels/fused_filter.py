@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import INF
+
 
 def _fused_kernel(x_ref, q_ref, val_ref, idx_ref, *, k: int):
     x = x_ref[...].astype(jnp.float32)                   # [bb, M, dl]
@@ -54,3 +56,61 @@ def fused_filter_pallas(x, q, k: int, *, block_b: int = 8,
         ),
         interpret=interpret,
     )(x, q)
+
+
+# ---------------------------------------------------------------------------
+# fused expand: the masked/thresholded variant used by the traversal loop
+# ---------------------------------------------------------------------------
+
+def _fused_expand_kernel(x_ref, q_ref, valid_ref, th_ref, val_ref, idx_ref,
+                         *, k: int):
+    """One expansion step's whole filter stage in a single VMEM
+    residency: Dist.L, adjacency/active masking, the C_pca threshold
+    compare, and the comparison-matrix kSort.L."""
+    x = x_ref[...].astype(jnp.float32)                   # [bb, M, dl]
+    q = q_ref[...].astype(jnp.float32)                   # [bb, dl]
+    valid = valid_ref[...] != 0                          # [bb, M]
+    th = th_ref[...].astype(jnp.float32)                 # [bb, 1]
+    diff = x - q[:, None, :]
+    d = jnp.sum(diff * diff, axis=-1)                    # Dist.L
+    d = jnp.where(valid & (d < th), d, INF)              # filter
+    bb, M = d.shape
+    ii = jax.lax.broadcasted_iota(jnp.int32, (M, M), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (M, M), 1)
+    cmp = (d[:, :, None] > d[:, None, :]) \
+        | ((d[:, :, None] == d[:, None, :]) & (ii > jj)[None])
+    rank = jnp.sum(cmp.astype(jnp.int32), axis=-1)       # kSort.L
+    kk = jax.lax.broadcasted_iota(jnp.int32, (1, M, k), 2)
+    onehot = rank[:, :, None] == kk
+    im = jax.lax.broadcasted_iota(jnp.int32, (1, M, k), 1)
+    val_ref[...] = jnp.sum(jnp.where(onehot, d[:, :, None], 0.0), axis=1)
+    idx_ref[...] = jnp.sum(jnp.where(onehot, im, 0), axis=1).astype(jnp.int32)
+
+
+def fused_expand_pallas(x, q, valid, th, k: int, *, block_b: int = 8,
+                        interpret: bool = False):
+    """x: [B, M, dl]; q: [B, dl]; valid: [B, M] int32 (0/1); th: [B, 1]
+    f32 -> (vals [B, k], idx [B, k]). Non-survivors get vals = INF."""
+    B, M, dl = x.shape
+    assert B % block_b == 0, (B, block_b)
+    kernel = lambda xr, qr, vr, tr, or_, ir: \
+        _fused_expand_kernel(xr, qr, vr, tr, or_, ir, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, M, dl), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, dl), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, M), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(x, q, valid, th)

@@ -1,0 +1,79 @@
+"""Sorted-merge top-k — the O(ef+k) frontier merge.
+
+The traversal keeps C (candidates), F (finals) and C_pca (filter
+thresholds) as ASCENDING-sorted invariants, so folding one expansion
+step's k new candidates into them is a two-list sorted merge, not a
+re-sort. The previous implementation concatenated and ran the full
+comparison-matrix rank sort over every slot — O((CAP+k)^2) compares per
+merge, three merges per step. Here each element's merged position is its
+own slot index plus its rank in the OTHER list (Na·Nb compares, Nb = k
+small), and the k output slots are filled by a one-hot contraction —
+no data-dependent gathers, so the same formulation compiles on the TPU
+VPU and under interpret mode.
+
+Tie-breaking matches the oracle: equal keys resolve to the a side, and
+within a list to the lower slot, so merged positions form a permutation
+and the output is bit-deterministic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(da_ref, ia_ref, db_ref, ib_ref, vd_ref, vi_ref, *, k: int):
+    d_a = da_ref[...].astype(jnp.float32)                # [bb, Na]
+    d_b = db_ref[...].astype(jnp.float32)                # [bb, Nb]
+    i_a = ia_ref[...]
+    i_b = ib_ref[...]
+    bb, Na = d_a.shape
+    Nb = d_b.shape[1]
+    # merged positions: pos_a[i] = i + #{j : b[j] < a[i]},
+    #                   pos_b[j] = j + #{i : a[i] <= b[j]}
+    ja = jax.lax.broadcasted_iota(jnp.int32, (1, Na), 1)
+    jb = jax.lax.broadcasted_iota(jnp.int32, (1, Nb), 1)
+    pos_a = ja + jnp.sum((d_b[:, None, :] < d_a[:, :, None])
+                         .astype(jnp.int32), axis=-1)    # [bb, Na]
+    pos_b = jb + jnp.sum((d_a[:, None, :] <= d_b[:, :, None])
+                         .astype(jnp.int32), axis=-1)    # [bb, Nb]
+    # one-hot scatter into the k output slots (positions are unique)
+    ka = jax.lax.broadcasted_iota(jnp.int32, (1, k, Na), 1)
+    kb = jax.lax.broadcasted_iota(jnp.int32, (1, k, Nb), 1)
+    hot_a = pos_a[:, None, :] == ka                      # [bb, k, Na]
+    hot_b = pos_b[:, None, :] == kb                      # [bb, k, Nb]
+    vd_ref[...] = jnp.sum(jnp.where(hot_a, d_a[:, None, :], 0.0), axis=-1) \
+        + jnp.sum(jnp.where(hot_b, d_b[:, None, :], 0.0), axis=-1)
+    vi_ref[...] = (jnp.sum(jnp.where(hot_a, i_a[:, None, :], 0), axis=-1)
+                   + jnp.sum(jnp.where(hot_b, i_b[:, None, :], 0), axis=-1)
+                   ).astype(jnp.int32)
+
+
+def merge_sorted_pallas(d_a, i_a, d_b, i_b, k: int, *, block_b: int = 8,
+                        interpret: bool = False):
+    """d_a: [B, Na], d_b: [B, Nb] ascending per row; k <= Na + Nb.
+    Returns (d [B, k], i [B, k]) ascending. B % block_b == 0."""
+    B, Na = d_a.shape
+    Nb = d_b.shape[1]
+    assert B % block_b == 0, (B, block_b)
+    kernel = lambda dar, iar, dbr, ibr, vdr, vir: \
+        _merge_kernel(dar, iar, dbr, ibr, vdr, vir, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, Na), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, Na), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, Nb), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, Nb), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(d_a, i_a, d_b, i_b)

@@ -18,7 +18,8 @@ from repro.kernels import ref
 from repro.kernels.dist_l import dist_l_pallas
 from repro.kernels.ksort_l import ksort_l_pallas
 from repro.kernels.dist_h import dist_h_pallas
-from repro.kernels.fused_filter import fused_filter_pallas
+from repro.kernels.fused_filter import fused_expand_pallas, fused_filter_pallas
+from repro.kernels.merge_sorted import merge_sorted_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 
@@ -53,23 +54,25 @@ def _pad_batch(x, mult: int):
     return x, B
 
 
-def _pick_block_b(B: int, M: int, cap_elems: int = 1 << 20) -> int:
-    """Comparison-matrix kernels hold [bb, M, M]; bound VMEM usage."""
+def _pick_block_b(B: int, row_elems: int, cap_elems: int = 1 << 20) -> int:
+    """Every traversal kernel holds O(row_elems) VMEM per batch row
+    (comparison matrices, neighbor blocks, ...); shrink the batch block
+    until the per-block footprint fits under ``cap_elems`` elements."""
     bb = 8
-    while bb > 1 and bb * M * M > cap_elems:
+    while bb > 1 and bb * row_elems > cap_elems:
         bb //= 2
     return bb
 
 
-@functools.partial(jax.jit, static_argnames=("block_b",))
-def dist_l(x, q, *, block_b: int = 8):
+@jax.jit
+def dist_l(x, q):
     """x: [B, M, dl]; q: [B, dl] -> [B, M] f32 squared distances."""
     if _use_ref():
         return ref.dist_l_ref(x, q)
-    xp, B = _pad_batch(x, block_b)
-    qp, _ = _pad_batch(q, block_b)
-    return dist_l_pallas(xp, qp, block_b=block_b,
-                         interpret=_interpret())[:B]
+    bb = _pick_block_b(x.shape[0], x.shape[1] * x.shape[2])
+    xp, B = _pad_batch(x, bb)
+    qp, _ = _pad_batch(q, bb)
+    return dist_l_pallas(xp, qp, block_b=bb, interpret=_interpret())[:B]
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -77,21 +80,21 @@ def ksort_l(d, k: int):
     """d: [B, M] -> (vals [B, k] ascending, idx [B, k])."""
     if _use_ref():
         return ref.ksort_l_ref(d, k)
-    bb = _pick_block_b(d.shape[0], d.shape[1])
+    bb = _pick_block_b(d.shape[0], d.shape[1] * d.shape[1])
     dp, B = _pad_batch(d, bb)
     v, i = ksort_l_pallas(dp, k, block_b=bb, interpret=_interpret())
     return v[:B], i[:B]
 
 
-@functools.partial(jax.jit, static_argnames=("block_b",))
-def dist_h(x, q, *, block_b: int = 8):
+@jax.jit
+def dist_h(x, q):
     """x: [B, K, D]; q: [B, D] -> [B, K] f32 squared distances."""
     if _use_ref():
         return ref.dist_h_ref(x, q)
-    xp, B = _pad_batch(x, block_b)
-    qp, _ = _pad_batch(q, block_b)
-    return dist_h_pallas(xp, qp, block_b=block_b,
-                         interpret=_interpret())[:B]
+    bb = _pick_block_b(x.shape[0], x.shape[1] * x.shape[2])
+    xp, B = _pad_batch(x, bb)
+    qp, _ = _pad_batch(q, bb)
+    return dist_h_pallas(xp, qp, block_b=bb, interpret=_interpret())[:B]
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -99,10 +102,51 @@ def fused_filter(x, q, k: int):
     """pHNSW step 2: x [B, M, dl], q [B, dl] -> top-k (vals, idx)."""
     if _use_ref():
         return ref.fused_filter_ref(x, q, k)
-    bb = _pick_block_b(x.shape[0], x.shape[1])
+    bb = _pick_block_b(x.shape[0],
+                       x.shape[1] * (x.shape[1] + x.shape[2]))
     xp, B = _pad_batch(x, bb)
     qp, _ = _pad_batch(q, bb)
     v, i = fused_filter_pallas(xp, qp, k, block_b=bb,
+                               interpret=_interpret())
+    return v[:B], i[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def fused_expand(x, q, valid, th, k: int):
+    """One traversal expansion's full filter stage (Dist.L + validity
+    mask + C_pca threshold + kSort.L) in a single kernel.
+    x: [B, M, dl]; q: [B, dl]; valid: [B, M] bool; th: [B] f32.
+    Returns (vals [B, k] ascending, idx [B, k]); filtered-out slots get
+    vals >= ref.VALID_MAX."""
+    if _use_ref():
+        return ref.fused_expand_ref(x, q, valid, th, k)
+    bb = _pick_block_b(x.shape[0],
+                       x.shape[1] * (x.shape[1] + x.shape[2]))
+    xp, B = _pad_batch(x, bb)
+    qp, _ = _pad_batch(q, bb)
+    vp, _ = _pad_batch(valid.astype(jnp.int32), bb)
+    tp, _ = _pad_batch(th[:, None].astype(jnp.float32), bb)
+    v, i = fused_expand_pallas(xp, qp, vp, tp, k, block_b=bb,
+                               interpret=_interpret())
+    return v[:B], i[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk_sorted(d_a, i_a, d_b, i_b, k: int):
+    """Merge two ascending-sorted (dist, idx) lists, keep the k smallest
+    (ties -> a side, then lower slot). d_a: [B, Na]; d_b: [B, Nb]."""
+    if d_b.shape[1] > k:
+        # only the first k of a sorted b can reach a k-wide output
+        d_b, i_b = d_b[:, :k], i_b[:, :k]
+    if _use_ref():
+        return ref.merge_topk_sorted_ref(d_a, i_a, d_b, i_b, k)
+    Na, Nb = d_a.shape[1], d_b.shape[1]
+    bb = _pick_block_b(d_a.shape[0], Na * Nb + k * (Na + Nb))
+    dap, B = _pad_batch(d_a, bb)
+    iap, _ = _pad_batch(i_a, bb)
+    dbp, _ = _pad_batch(d_b, bb)
+    ibp, _ = _pad_batch(i_b, bb)
+    v, i = merge_sorted_pallas(dap, iap, dbp, ibp, k, block_b=bb,
                                interpret=_interpret())
     return v[:B], i[:B]
 

@@ -11,6 +11,12 @@ import jax.numpy as jnp
 
 NEG_INF = -1e30
 
+# Sentinel for "filtered out / empty slot" distances on the traversal
+# path. Deliberately a large FINITE f32 (not jnp.inf) so arithmetic on
+# padded slots never produces NaNs; callers test ``d < VALID_MAX``.
+INF = 3.4e38
+VALID_MAX = 1e37
+
 
 # ---------------------------------------------------------------------------
 # pHNSW kernels
@@ -27,7 +33,12 @@ def ksort_l_ref(d, k: int, valid=None):
     """Comparison-matrix top-k (paper kSort.L): rank[i] = #{j : (d_j, j) <
     (d_i, i)}; the k smallest (dist, index) pairs, ascending.
     d: [B, M] -> (vals [B, k] f32, idx [B, k] i32). ``valid``: optional
-    [B, M] bool mask; invalid entries sort last."""
+    [B, M] bool mask; invalid entries sort last.
+
+    Deliberately NOT a lax.sort: XLA lowers variadic sorts (and gathers)
+    to scalar loops on CPU, while the O(M^2) compare + one-hot contract
+    is pure vector code — measurably faster at every M this repo uses,
+    on CPU and TPU both."""
     d = d.astype(jnp.float32)
     if valid is not None:
         d = jnp.where(valid, d, jnp.inf)
@@ -55,6 +66,50 @@ def fused_filter_ref(x, q, k: int):
     """Fused Dist.L + kSort.L (one VMEM residency; pHNSW steps 2+filter).
     x: [B, M, dl]; q: [B, dl] -> (vals [B,k], idx [B,k])."""
     return ksort_l_ref(dist_l_ref(x, q), k)
+
+
+def fused_expand_ref(x, q, valid, th, k: int):
+    """The whole pHNSW expansion filter (step 2) in one op: Dist.L +
+    adjacency/active masking + C_pca threshold + kSort.L.
+
+    x: [B, M, dl] neighbor low-dim block; q: [B, dl]; valid: [B, M] bool
+    (adjacency padding & per-query active mask); th: [B] f32 C_pca
+    threshold. Returns (vals [B, k], idx [B, k]): the k nearest surviving
+    neighbors ascending; non-survivors carry vals >= VALID_MAX."""
+    d = dist_l_ref(x, q)
+    d = jnp.where(valid & (d < th[:, None]), d, INF)
+    return ksort_l_ref(d, k)
+
+
+def merge_topk_sorted_ref(d_a, i_a, d_b, i_b, k: int):
+    """Merge two ASCENDING-sorted (dist, idx) lists, keep the k smallest
+    — the O((Na+k)·Nb) frontier merge (Nb = k small), vs concat +
+    O((Na+Nb)^2) rank sort. Ties between lists resolve to the a side;
+    within a list the lower slot wins, so the merge is a permutation and
+    fully deterministic.
+
+    d_a: [B, Na], d_b: [B, Nb] (each row ascending); k <= Na + Nb.
+    Returns (d [B, k], i [B, k]) ascending."""
+    d_a = d_a.astype(jnp.float32)
+    d_b = d_b.astype(jnp.float32)
+    B, Nb = d_b.shape
+    Na = d_a.shape[1]
+    # merged positions: pos_a[i] = i + #{j : b[j] < a[i]},
+    #                   pos_b[j] = j + #{i : a[i] <= b[j]}
+    pos_a = jnp.arange(Na, dtype=jnp.int32)[None, :] + jnp.sum(
+        d_b[:, None, :] < d_a[:, :, None], axis=-1, dtype=jnp.int32)
+    pos_b = jnp.arange(Nb, dtype=jnp.int32)[None, :] + jnp.sum(
+        d_a[:, None, :] <= d_b[:, :, None], axis=-1, dtype=jnp.int32)
+    # one-hot scatter into the k output slots (positions are unique;
+    # gather-free on purpose — XLA CPU lowers gathers to scalar loops)
+    out = jnp.arange(k, dtype=jnp.int32)[None, :, None]       # [1, k, 1]
+    hot_a = pos_a[:, None, :] == out                          # [B, k, Na]
+    hot_b = pos_b[:, None, :] == out                          # [B, k, Nb]
+    d = jnp.sum(jnp.where(hot_a, d_a[:, None, :], 0.0), axis=-1) \
+        + jnp.sum(jnp.where(hot_b, d_b[:, None, :], 0.0), axis=-1)
+    i = jnp.sum(jnp.where(hot_a, i_a[:, None, :], 0), axis=-1) \
+        + jnp.sum(jnp.where(hot_b, i_b[:, None, :], 0), axis=-1)
+    return d, i.astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -40,10 +40,17 @@ class VectorSearchService:
         self.db, self.pca = db, pca
         self.batch = batch_size
         self.ef0 = ef0 or db.cfg.ef0
+        # pad row for underfull batches: the entry point's vector — its
+        # search terminates in O(1) steps, so pad lanes never drag the
+        # batch (padding with a caller query would re-run it)
+        self._pad_row = np.asarray(db.high[db.entry])[None].astype(
+            np.float32)
+        # warm the compiled program, then reset stats so compile time
+        # and the warmup batch never pollute QPS/latency percentiles
         self.stats = ServiceStats()
-        # warm the compiled program
         dummy = np.zeros((batch_size, db.high.shape[1]), np.float32)
         self._run(dummy)
+        self.stats = ServiceStats()
 
     def _run(self, q: np.ndarray):
         ql = self.pca.transform(q).astype(np.float32)
@@ -52,11 +59,14 @@ class VectorSearchService:
         return np.asarray(fd), np.asarray(fi)
 
     def query(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """q: [n, D] with n <= batch_size. Returns (dists, indices)."""
+        """q: [n, D] with n <= batch_size; underfull batches are padded
+        with the entry point. Returns (dists, indices) for the n real
+        queries; only those count toward stats."""
         n = len(q)
         t0 = time.monotonic()
         if n < self.batch:
-            pad = np.repeat(q[-1:], self.batch - n, axis=0)
+            pad = np.broadcast_to(self._pad_row,
+                                  (self.batch - n, q.shape[1]))
             q = np.concatenate([q, pad], axis=0)
         fd, fi = self._run(q)
         dt = (time.monotonic() - t0) * 1000.0

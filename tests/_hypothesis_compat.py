@@ -1,0 +1,29 @@
+"""Import hypothesis if available; otherwise provide no-op stand-ins so
+the rest of the suite still collects and runs (property tests skip).
+The container image does not always ship hypothesis, and the tier-1
+suite must not lose coverage of the non-property tests because of it.
+"""
+try:
+    from hypothesis import given, settings, strategies as st   # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            return skipped
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

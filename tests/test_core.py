@@ -2,8 +2,9 @@
 cost-model orderings — the paper's claims as assertions."""
 import numpy as np
 import pytest
+import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cost_model import DDR4, HBM, query_cost, table3, \
     hw_variant_stats
@@ -129,6 +130,37 @@ def test_recall_monotone_in_ef(small_dataset, small_graph, small_pca,
     r_big = np.mean([recall_at(search_hnsw(small_graph, qi, ef0=40)[0],
                                gt[i], 10) for i, qi in enumerate(q)])
     assert r_big >= r_small
+
+
+@pytest.mark.parametrize("impl", ["ref", "fused-pallas"])
+def test_search_batched_recall_parity(small_dataset, small_graph,
+                                      small_pca, small_xlow, impl,
+                                      monkeypatch):
+    """Batched engine vs host reference: recall@10 within 0.02, under
+    both the jnp-oracle path (REPRO_KERNEL_IMPL=ref) and the fused
+    Pallas expand/merge path (interpret mode on CPU)."""
+    from repro.core.search_jax import build_packed, search_batched
+    from repro.core.search_ref import recall_at
+    if impl == "ref":
+        monkeypatch.setenv("REPRO_KERNEL_IMPL", "ref")
+        monkeypatch.delenv("REPRO_FORCE_PALLAS_INTERPRET", raising=False)
+    else:
+        monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    # the kernel dispatchers branch on env vars at trace time — drop any
+    # compiled programs cached under the other setting
+    jax.clear_caches()
+    try:
+        x, q, gt = small_dataset
+        r_ref, _ = run_queries(small_graph, q, gt, algo="phnsw",
+                               x_low=small_xlow, pca=small_pca)
+        db = build_packed(small_graph, small_xlow)
+        _, fi = search_batched(db, jnp.asarray(q), pca=small_pca)
+        fi = np.asarray(fi)
+        r_jax = float(np.mean([recall_at(fi[i], gt[i], 10)
+                               for i in range(len(q))]))
+        assert abs(r_jax - r_ref) <= 0.02
+    finally:
+        jax.clear_caches()
 
 
 # ----------------------------- cost model -----------------------------------

@@ -5,8 +5,7 @@ import os
 
 import numpy as np
 import pytest
-import hypothesis
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +14,8 @@ from repro.kernels import ref
 from repro.kernels.dist_l import dist_l_pallas
 from repro.kernels.ksort_l import ksort_l_pallas
 from repro.kernels.dist_h import dist_h_pallas
-from repro.kernels.fused_filter import fused_filter_pallas
+from repro.kernels.fused_filter import fused_expand_pallas, fused_filter_pallas
+from repro.kernels.merge_sorted import merge_sorted_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 
@@ -65,6 +65,79 @@ def test_fused_filter_sweep(B, M, dl, k):
     v0, i0 = ref.fused_filter_ref(x, q, k)
     np.testing.assert_allclose(v1, v0, rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(i1, i0)
+
+
+@pytest.mark.parametrize("B,M,dl,k", [(8, 32, 15, 16), (8, 16, 15, 3),
+                                      (16, 64, 16, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_expand_sweep(B, M, dl, k, dtype):
+    """Masked/thresholded expand kernel == ref oracle, incl. bf16
+    layout-(3) storage (distances still f32)."""
+    x, q = rnd((B, M, dl), dtype), rnd((B, dl))
+    valid = jnp.asarray(RNG.integers(0, 2, (B, M)), jnp.int32)
+    th = jnp.asarray(
+        np.where(RNG.random(B) < 0.5, 2.0, ref.INF), jnp.float32)
+    v1, i1 = fused_expand_pallas(x, q, valid, th[:, None], k,
+                                 block_b=8, interpret=True)
+    v0, i0 = ref.fused_expand_ref(x, q, valid.astype(bool), th, k)
+    np.testing.assert_allclose(v1, v0, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(i1, i0)
+
+
+def test_fused_expand_masks_and_threshold():
+    """Survivors = valid & below-threshold only; non-survivors sort last
+    with vals >= VALID_MAX."""
+    x, q = rnd((8, 16, 4)), rnd((8, 4))
+    valid = jnp.ones((8, 16), bool).at[:, 10:].set(False)
+    th = jnp.full((8,), 1.5, jnp.float32)
+    v, i = ref.fused_expand_ref(x, q, valid, th, 16)
+    d = np.asarray(ref.dist_l_ref(x, q))
+    surv = (d < 1.5) & np.asarray(valid)
+    got_surv = np.asarray(v) < ref.VALID_MAX
+    assert (got_surv.sum(1) == surv.sum(1)).all()
+    for b in range(8):
+        kept = np.asarray(i[b])[got_surv[b]]
+        assert set(kept.tolist()) == set(np.where(surv[b])[0].tolist())
+        assert np.all(np.diff(np.asarray(v[b])[got_surv[b]]) >= 0)
+
+
+@pytest.mark.parametrize("Na,Nb,k", [(36, 16, 36), (10, 16, 10),
+                                     (16, 16, 16), (64, 3, 64),
+                                     (32, 8, 20)])
+def test_merge_sorted_sweep(Na, Nb, k):
+    B = 8
+    a = np.sort(RNG.choice(RNG.standard_normal(16), (B, Na)), axis=1)
+    b = np.sort(RNG.choice(RNG.standard_normal(16), (B, Nb)), axis=1)
+    ia = jnp.asarray(RNG.integers(0, 999, (B, Na)), jnp.int32)
+    ib = jnp.asarray(RNG.integers(0, 999, (B, Nb)), jnp.int32)
+    a, b = jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+    d1, i1 = merge_sorted_pallas(a, ia, b, ib, k, block_b=8,
+                                 interpret=True)
+    d0, i0 = ref.merge_topk_sorted_ref(a, ia, b, ib, k)
+    np.testing.assert_allclose(d1, d0, rtol=1e-6)
+    np.testing.assert_array_equal(i1, i0)
+
+
+def test_merge_sorted_matches_full_sort():
+    """The O(ef+k) sorted merge == concat + stable full sort (a side
+    wins ties, then lower slot)."""
+    B, Na, Nb, k = 4, 24, 8, 24
+    a = np.sort(RNG.choice(RNG.standard_normal(8), (B, Na)), axis=1) \
+        .astype(np.float32)
+    b = np.sort(RNG.choice(RNG.standard_normal(8), (B, Nb)), axis=1) \
+        .astype(np.float32)
+    ia = RNG.integers(0, 999, (B, Na)).astype(np.int32)
+    ib = RNG.integers(0, 999, (B, Nb)).astype(np.int32)
+    d, i = ref.merge_topk_sorted_ref(jnp.asarray(a), jnp.asarray(ia),
+                                     jnp.asarray(b), jnp.asarray(ib), k)
+    for r in range(B):
+        alld = np.concatenate([a[r], b[r]])
+        alli = np.concatenate([ia[r], ib[r]])
+        side = np.r_[np.zeros(Na), np.ones(Nb)]
+        slot = np.r_[np.arange(Na), np.arange(Nb)]
+        order = np.lexsort((slot, side, alld))
+        np.testing.assert_allclose(np.asarray(d[r]), alld[order][:k])
+        np.testing.assert_array_equal(np.asarray(i[r]), alli[order][:k])
 
 
 @pytest.mark.parametrize("S,T,window", [(128, 128, 0), (128, 256, 0),

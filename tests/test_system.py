@@ -38,6 +38,42 @@ def test_batched_jax_search_matches_reference(small_dataset, small_graph,
     assert abs(r_jax - r_ref) < 0.08
 
 
+def test_batched_search_step_telemetry(small_dataset, small_graph,
+                                       small_pca, small_xlow):
+    """return_stats exposes per-query expansion counts: every query took
+    at least one layer-0 step and stayed within the per-layer budget."""
+    x, q, gt = small_dataset
+    cfg = small_graph.cfg
+    db = build_packed(small_graph, small_xlow)
+    _, _, stats = search_batched(db, jnp.asarray(q), pca=small_pca,
+                                 return_stats=True)
+    steps = np.asarray(stats["steps_per_layer"])   # [L, B], top first
+    assert steps.shape == (len(db.layers), len(q))
+    assert (steps >= 0).all()
+    assert (steps[-1] >= 1).all()                  # layer 0 always expands
+    for i, layer in enumerate(range(len(db.layers) - 1, -1, -1)):
+        assert steps[i].max() <= cfg.max_steps_for_layer(layer)
+    assert np.asarray(stats["steps_total"]).sum() == steps.sum()
+
+
+def test_bf16_layout3_recall_parity(small_dataset, small_graph, small_pca,
+                                    small_xlow):
+    """Layout (3) stored in bf16: half the inline-vector bytes, recall
+    within 0.02 of the f32 store."""
+    x, q, gt = small_dataset
+    db32 = build_packed(small_graph, small_xlow)
+    db16 = build_packed(small_graph, small_xlow, low_dtype="bfloat16")
+    assert db16.layers[0].packed_low.dtype == jnp.bfloat16
+    assert db16.bytes_layout3 < 0.75 * db32.bytes_layout3
+    rec = {}
+    for name, db in (("f32", db32), ("bf16", db16)):
+        _, fi = search_batched(db, jnp.asarray(q), pca=small_pca)
+        fi = np.asarray(fi)
+        rec[name] = float(np.mean([recall_at(fi[i], gt[i], 10)
+                                   for i in range(len(q))]))
+    assert abs(rec["bf16"] - rec["f32"]) <= 0.02
+
+
 def test_layout_memory_accounting(small_graph, small_xlow):
     """Layout (3) costs extra memory (paper: ~2.9x the dataset)."""
     db = build_packed(small_graph, small_xlow)
@@ -101,3 +137,21 @@ def test_vector_service(small_dataset, small_graph, small_pca, small_xlow):
     r = float(np.mean([recall_at(idx[i], gt[i], 10) for i in range(len(q))]))
     assert r > 0.75
     assert stats["p50_ms"] > 0
+    # the whole stream was served (underfull tail batch included) and
+    # pad lanes never leak into results or stats
+    assert idx.shape[0] == len(q)
+    assert svc.stats.queries == len(q)
+    assert len(svc.stats.latencies_ms) == len(q)
+
+
+def test_vector_service_underfull_batch_pads_with_entry(
+        small_dataset, small_graph, small_pca, small_xlow):
+    """An underfull batch returns the same answers as the same queries
+    inside a full batch (pad = entry point, not a repeated query)."""
+    x, q, gt = small_dataset
+    db = build_packed(small_graph, small_xlow)
+    svc = VectorSearchService(db, small_pca, batch_size=16)
+    _, fi_full = svc.query(q[:16])
+    _, fi_part = svc.query(q[:3])
+    np.testing.assert_array_equal(fi_part, fi_full[:3])
+    assert svc.stats.queries == 19
