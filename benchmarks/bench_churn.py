@@ -1,0 +1,105 @@
+"""Churn benchmark: recall@10 and QPS under a mixed insert/delete/query
+workload against the mutable index (beyond-paper: the paper's system is
+build-once; a production index absorbs updates while serving).
+
+Workload: start from the cached n_points index, then run ``rounds``
+rounds of {upsert one batch, delete half a batch of random live ids,
+serve one query batch}, timing each op class separately. Ends with a
+recall@10 measurement against exact brute force over the FINAL live set
+(so tombstones and the graph's post-churn quality are both in the
+number), plus the tombstone density and PCA-drift report.
+
+Rows (name,us_per_call,derived):
+  churn/upsert   — mean us per upserted vector; derived: vectors/s
+  churn/delete   — mean us per deleted id;     derived: ids/s
+  churn/query    — mean us per query;          derived: qps + p99 ms
+  churn/final    — 0; derived: recall@10, live size, tombstone frac,
+                   pca drift
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import emit, load_bench_db
+from repro.core.search_ref import recall_at
+from repro.data.vectors import make_sift_like
+from repro.index import MutableIndex
+from repro.serve.vector_service import VectorSearchService
+
+
+def main(n_points: int = 8_000, n_queries: int = 64, rounds: int = 8,
+         batch: int = 64, json_path: Optional[str] = None):
+    cfg, x, g, pca, x_low, q, gt = load_bench_db(n_points, n_queries)
+    idx = MutableIndex.from_graph(g, pca, seed=1)
+    # fresh vectors from the same generator family, disjoint seed
+    fresh = make_sift_like(rounds * cfg.insert_batch, seed=1234)
+    idx.reserve(n_points + len(fresh))           # no growth mid-run
+    svc = VectorSearchService(idx, batch_size=batch, ef0=cfg.ef0)
+    # warm the insert probe before timing (mirrors serving practice)
+    svc.upsert(fresh[:cfg.insert_batch])
+
+    rng = np.random.default_rng(7)
+    t_up = t_del = t_q = 0.0
+    n_up = n_del = n_q = 0
+    for r in range(1, rounds):
+        xb = fresh[r * cfg.insert_batch:(r + 1) * cfg.insert_batch]
+        t0 = time.perf_counter()
+        svc.upsert(xb)
+        t_up += time.perf_counter() - t0
+        n_up += len(xb)
+
+        live = idx.live_ids()
+        doomed = rng.choice(live, size=cfg.insert_batch // 2,
+                            replace=False)
+        t0 = time.perf_counter()
+        svc.delete(doomed)
+        t_del += time.perf_counter() - t0
+        n_del += len(doomed)
+
+        qb = q[(r * batch) % max(len(q) - batch, 1):][:batch]
+        if len(qb) < batch:
+            qb = q[:batch]
+        t0 = time.perf_counter()
+        svc.query(qb)
+        t_q += time.perf_counter() - t0
+        n_q += len(qb)
+
+    # final recall vs brute force over the live set
+    live = idx.live_ids()
+    gt_live = idx.live_ground_truth(q, cfg.recall_at)
+    _, fi = idx.search(q)
+    fi = np.asarray(fi)
+    rec = float(np.mean([recall_at(fi[i], gt_live[i], cfg.recall_at)
+                         for i in range(len(q))]))
+    drift = idx.pca_drift()
+    rows = [
+        ("churn/upsert", t_up / max(n_up, 1) * 1e6,
+         f"vecs_per_s={n_up / max(t_up, 1e-9):.0f}"),
+        ("churn/delete", t_del / max(n_del, 1) * 1e6,
+         f"ids_per_s={n_del / max(t_del, 1e-9):.0f}"),
+        ("churn/query", t_q / max(n_q, 1) * 1e6,
+         f"qps={n_q / max(t_q, 1e-9):.0f};"
+         f"p99_ms={svc.stats.percentile(99):.1f}"),
+        ("churn/final", 0.0,
+         f"recall@10={rec:.3f};live={len(live)};"
+         f"tombstone_frac={idx.tombstone_frac:.3f};"
+         f"pca_drift={drift['drift']:.4f}"),
+    ]
+    if json_path:
+        Path(json_path).write_text(json.dumps({
+            "bench": "churn", "n_points": n_points, "rounds": rounds,
+            "qps": n_q / max(t_q, 1e-9),
+            "upserts_per_s": n_up / max(t_up, 1e-9),
+            "recall_at_10": rec,
+            "tombstone_frac": idx.tombstone_frac,
+        }, indent=2) + "\n")
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

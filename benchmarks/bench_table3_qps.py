@@ -94,7 +94,7 @@ def main(n_points: int = 50_000, n_queries: int = 200,
                  f"qps={B / dt:.0f};recall@10={rec:.3f};"
                  f"steps_mean={steps_mean:.1f};steps_p99={steps_p99:.1f}"))
     if json_path:
-        Path(json_path).write_text(json.dumps({
+        entry = {
             "bench": "table3_qps",
             "n_points": n_points,
             "batch": B,
@@ -104,7 +104,20 @@ def main(n_points: int = 50_000, n_queries: int = 200,
             "steps_mean": steps_mean,
             "steps_p99": steps_p99,
             "steps_max": int(steps.max()),
-        }, indent=2) + "\n")
+        }
+        # append-only perf trajectory: latest entry at top level (the
+        # tracked number), prior --perf-smoke runs under "history"
+        p = Path(json_path)
+        history = []
+        if p.exists():
+            try:
+                prev = json.loads(p.read_text())
+                history = prev.pop("history", [])
+                history.append(prev)
+            except (ValueError, KeyError):
+                pass
+        p.write_text(json.dumps({**entry, "history": history},
+                                indent=2) + "\n")
     return emit(rows)
 
 

@@ -25,6 +25,9 @@ def main() -> None:
                          "database; writes BENCH_table3.json (QPS, "
                          "recall, mean/p99 steps) for the tracked perf "
                          "trajectory")
+    ap.add_argument("--churn", action="store_true",
+                    help="only the mutable-index churn benchmark "
+                         "(mixed insert/delete/query workload)")
     args = ap.parse_args()
     n_points = args.n_points or \
         (8_000 if args.fast or args.perf_smoke else 50_000)
@@ -32,9 +35,18 @@ def main() -> None:
     json_path = str(Path(__file__).resolve().parents[1]
                     / "BENCH_table3.json")
 
-    from benchmarks import (bench_fig2_kselect, bench_fig5_energy,
-                            bench_kernel_footprint, bench_pq_ablation,
-                            bench_table3_qps)
+    from benchmarks import (bench_churn, bench_fig2_kselect,
+                            bench_fig5_energy, bench_kernel_footprint,
+                            bench_pq_ablation, bench_table3_qps)
+
+    if args.churn:
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        # an explicit --n-points is honored; only the default shrinks
+        bench_churn.main(n_points=args.n_points or 8_000,
+                         n_queries=n_queries)
+        print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+        return
 
     if args.perf_smoke:
         print("name,us_per_call,derived")
@@ -57,6 +69,8 @@ def main() -> None:
         (bench_kernel_footprint, {}),
         (bench_pq_ablation, dict(n_points=n_points,
                                  n_queries=min(n_queries, 64))),
+        (bench_churn, dict(n_points=args.n_points or 8_000,
+                           n_queries=min(n_queries, 64))),
     ):
         try:
             mod.main(**kwargs)

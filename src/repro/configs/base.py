@@ -238,6 +238,20 @@ class PHNSWConfig:
     # dominates element throughput (measured: not on CPU; revisit per
     # backend via BENCH_table3.json).
     expand_width: int = 1
+    # ---- mutable index (src/repro/index/) ----
+    # top-k width of the on-device ef_construction probe that finds a
+    # new vector's neighborhood (wider than the serving k_schedule: the
+    # construction beam needs breadth, not latency)
+    ef_construction_k: int = 16
+    # upserts are chunked into device probes of this many vectors
+    insert_batch: int = 128
+    # compact() auto-triggers when deleted/live crosses this fraction
+    compact_tombstone_frac: float = 0.25
+    # PCA-drift report flags a refit when the frozen projection captures
+    # this much less variance on the live distribution than at fit time
+    pca_drift_tol: float = 0.10
+    # capacity floor for the power-of-two buffer growth schedule
+    min_capacity: int = 1024
 
     def k_for_layer(self, layer: int) -> int:
         return self.k_schedule[min(layer, len(self.k_schedule) - 1)]

@@ -1,0 +1,20 @@
+"""Shared numeric sentinels for the traversal path.
+
+One definition, imported by the kernels (``kernels/*.py``), the oracles
+(``kernels/ref.py``) and the batched engine (``core/search_jax.py``) —
+these three MUST agree bit-for-bit or masked slots stop round-tripping
+between kernel calls.
+
+``INF`` is deliberately a large FINITE f32 (not ``jnp.inf``) so
+arithmetic on padded/filtered slots never produces NaNs; callers test
+``d < VALID_MAX`` to detect real entries. ``NEG_INF`` plays the same
+role for attention logits.
+"""
+from __future__ import annotations
+
+# "filtered out / empty slot" distance sentinel on the traversal path
+INF = 3.4e38
+# validity threshold: any distance >= VALID_MAX is a masked slot
+VALID_MAX = 1e37
+# attention-logit mask value
+NEG_INF = -1e30

@@ -91,11 +91,13 @@ def distributed_search(mesh: Mesh, sdb: ShardedDB, queries, q_low,
         # leaves arrive with the leading shard dim = 1: squeeze it
         layers = [PackedLayer(adj=a[0], packed_low=p[0])
                   for a, p in zip(adj, packed_low)]
+        # the per-shard entry id is data (a traced scalar), which is
+        # exactly what PackedDB.entry now is — the shared descent in
+        # _search_batched_impl handles it directly
         db = PackedDB(layers=layers, low=low[0], high=high[0],
-                      entry=0, cfg=cfg)
-        # entry point is data-dependent per shard: emulate db.entry by
-        # seeding the search with the shard's entry id
-        fd, fi = _search_with_entry(db, q, ql, entry[0], ef0, ks)
+                      entry=entry[0], cfg=cfg)
+        fd, fi, _ = _search_batched_impl(db, q, ql, ef0=ef0,
+                                         k_schedule=ks)
         fi = jnp.where(fi >= 0, fi + offset[0], -1)
         # merge across shards: all-gather the per-shard top-ef
         fd_all = jax.lax.all_gather(fd, m_ax, axis=0)      # [P, B, ef]
@@ -119,19 +121,3 @@ def distributed_search(mesh: Mesh, sdb: ShardedDB, queries, q_low,
                    out_specs=out_specs, check_rep=False)
     return fn(sdb.adj, sdb.packed_low, sdb.low, sdb.high, sdb.entries,
               sdb.offsets, queries, q_low)
-
-
-def _search_with_entry(db: PackedDB, queries, q_low, entry, ef0, ks):
-    from repro.core.search_jax import search_layer_batched
-    cfg = db.cfg
-    B = queries.shape[0]
-    k_of = lambda l: ks[min(l, len(ks) - 1)]
-    ep = jnp.full((B, 1), entry, jnp.int32)
-    ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), queries)
-    for layer in range(len(db.layers) - 1, 0, -1):
-        ep_d, ep, _ = search_layer_batched(
-            db, layer, queries, q_low, ep_d, ep,
-            ef=cfg.ef_for_layer(layer), k=k_of(layer))
-    fd, fi, _ = search_layer_batched(db, 0, queries, q_low, ep_d, ep,
-                                     ef=ef0, k=k_of(0))
-    return fd, fi

@@ -106,34 +106,49 @@ def _select_heuristic(x, cand, m):
     return selected
 
 
+def sample_levels(n: int, cfg: PHNSWConfig,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Geometric level assignment (mL = 1/ln(M)), capped at the config's
+    layer count — shared by the one-shot builder and online inserts."""
+    mL = 1.0 / math.log(cfg.M)
+    return np.minimum(
+        (-np.log(rng.uniform(1e-12, 1.0, size=n)) * mL).astype(np.int64),
+        cfg.n_layers - 1)
+
+
+def add_link(x: np.ndarray, adj_layer: np.ndarray, i: int, j: int) -> bool:
+    """Add j to i's neighbor list in ``adj_layer`` ([N, M_l], -1 pad);
+    when overfull, re-select the list with the diversity heuristic
+    (hnswlib behavior — plain furthest-eviction strands nodes and breaks
+    graph connectivity). Returns True iff i's row changed."""
+    row = adj_layer[i]
+    free = np.where(row < 0)[0]
+    if len(free):
+        row[free[0]] = j
+        return True
+    cand_ids = np.append(row, j)
+    ds = np.sum((x[cand_ids] - x[i]) ** 2, axis=1)
+    order = np.argsort(ds)
+    cand = [(float(ds[o]), int(cand_ids[o])) for o in order]
+    sel = _select_heuristic(x, cand, len(row))
+    if len(sel) == len(row) and (row == sel).all():
+        return False
+    row[:] = -1
+    row[:len(sel)] = sel
+    return True
+
+
 def build_hnsw(x: np.ndarray, cfg: PHNSWConfig, *, seed: int = 0,
                verbose: bool = False) -> HNSWGraph:
     n, dim = x.shape
     rng = np.random.default_rng(seed)
-    mL = 1.0 / math.log(cfg.M)
-    levels = np.minimum(
-        (-np.log(rng.uniform(1e-12, 1.0, size=n)) * mL).astype(np.int64),
-        cfg.n_layers - 1)
+    levels = sample_levels(n, cfg, rng)
     n_layers = int(levels.max()) + 1
     adj = [np.full((n, cfg.degree(l)), -1, np.int32)
            for l in range(n_layers)]
 
     def connect(i, j, layer):
-        """Add j to i's neighbor list; when overfull, re-select the list
-        with the diversity heuristic (hnswlib behavior — plain
-        furthest-eviction strands nodes and breaks graph connectivity)."""
-        row = adj[layer][i]
-        free = np.where(row < 0)[0]
-        if len(free):
-            row[free[0]] = j
-            return
-        cand_ids = np.append(row, j)
-        ds = np.sum((x[cand_ids] - x[i]) ** 2, axis=1)
-        order = np.argsort(ds)
-        cand = [(float(ds[o]), int(cand_ids[o])) for o in order]
-        sel = _select_heuristic(x, cand, len(row))
-        row[:] = -1
-        row[:len(sel)] = sel
+        add_link(x, adj[layer], i, j)
 
     entry = 0
     top = int(levels[0])

@@ -33,6 +33,7 @@ backend this repo targets.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
@@ -42,9 +43,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PHNSWConfig
+from repro.constants import INF as _INF, VALID_MAX
 from repro.core.graph import HNSWGraph
 from repro.kernels import ops
-from repro.kernels.ref import INF as _INF, VALID_MAX
 
 INF = jnp.float32(_INF)
 
@@ -57,12 +58,26 @@ class PackedLayer:
 
 @dataclass
 class PackedDB:
-    """Device-resident database in the paper's layout (3)."""
+    """Device-resident database in the paper's layout (3).
+
+    ``entry`` is a pytree DATA field (a scalar, traced under jit), not
+    metadata: the mutable-index subsystem re-points the entry when a new
+    top-level node is inserted, and a metadata entry would key the jit
+    cache — every entry change would recompile the search program.
+
+    ``deleted`` is an optional word-packed tombstone bitmap,
+    ``[ceil(N/32)] int32`` (bit i of word i>>5 = node i is deleted).
+    ``None`` (the default, a structurally static distinction) means "no
+    tombstones ever": the engine then compiles the plain accept path.
+    When present, deleted nodes are TRAVERSED (they stay in the
+    candidate frontier, their neighbors are expanded) but never RETURNED
+    (they are excluded from the result list F on the output layer)."""
     layers: List[PackedLayer]
     low: jax.Array          # [N, dl]
     high: jax.Array         # [N, D]
     entry: int
     cfg: PHNSWConfig
+    deleted: Optional[jax.Array] = None   # [ceil(N/32)] int32 or None
 
     @property
     def bytes_layout3(self) -> int:
@@ -91,8 +106,15 @@ class PackedDB:
 jax.tree_util.register_dataclass(
     PackedLayer, data_fields=["adj", "packed_low"], meta_fields=[])
 jax.tree_util.register_dataclass(
-    PackedDB, data_fields=["layers", "low", "high"],
-    meta_fields=["entry", "cfg"])
+    PackedDB, data_fields=["layers", "low", "high", "entry", "deleted"],
+    meta_fields=["cfg"])
+
+
+def _tombstone_bit(deleted, ids):
+    """Gather the tombstone bit for an int32 id array (any shape).
+    Negative ids (padding) read word 0 harmlessly; callers mask them."""
+    safe = jnp.maximum(ids, 0)
+    return (jnp.take(deleted, safe // 32) >> (safe % 32)) & 1 != 0
 
 
 def build_packed(g: HNSWGraph, x_low: np.ndarray,
@@ -142,7 +164,8 @@ def _rank_sort_with_payload(d, p):
 def search_layer_batched(db: PackedDB, layer: int, q_high, q_low,
                          start_d, start_i, *, ef: int, k: int,
                          max_steps: Optional[int] = None,
-                         expand_width: Optional[int] = None):
+                         expand_width: Optional[int] = None,
+                         filter_deleted: bool = False):
     """One layer of Algorithm 1 for a batch of queries.
 
     start_d/start_i: [B, E] entry candidates (high-dim dists, idx),
@@ -154,6 +177,13 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, q_low,
     d > F.max can never re-qualify (F.max only shrinks). W-fold fewer
     while_loop trips; each trip's gathers/kernels widen instead.
 
+    ``filter_deleted`` (static; requires ``db.deleted``) applies the
+    tombstone semantics: deleted nodes enter the candidate frontier C
+    (and the C_pca threshold heap) and are expanded like any node, but
+    are excluded from the result list F — so F.max, the acceptance
+    bound, is computed over LIVE nodes only and the traversal keeps
+    digging until ef live results converge.
+
     Returns (F_dist [B, ef], F_idx [B, ef] ascending, steps [B] int32 =
     per-query expansion count before that query froze)."""
     B = q_high.shape[0]
@@ -164,12 +194,28 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, q_low,
     CAP = max(ef + kk, 8)
     steps = max_steps or db.cfg.max_steps_for_layer(layer)
     iters = -(-steps // W)                       # expansion budget / W
+    if filter_deleted:
+        assert db.deleted is not None, "filter_deleted needs db.deleted"
 
     # --- fixed-capacity SORTED state ---
     pad = CAP - start_d.shape[1]
     C_d = jnp.pad(start_d, ((0, 0), (0, pad)), constant_values=INF)
     C_i = jnp.pad(start_i, ((0, 0), (0, pad)), constant_values=-1)
-    F_d, F_i = C_d[:, :ef], C_i[:, :ef]        # best ef of the start set
+    if filter_deleted:
+        # seed F with the LIVE subset of the start set (the routing
+        # layers above may hand us tombstoned entry points: legal to
+        # traverse from, illegal to return)
+        tomb0 = _tombstone_bit(db.deleted, start_i) | (start_i < 0)
+        s_d, s_i = _rank_sort_with_payload(
+            jnp.where(tomb0, INF, start_d),
+            jnp.where(tomb0, -1, start_i))
+        epad = max(ef - s_d.shape[1], 0)
+        F_d = jnp.pad(s_d, ((0, 0), (0, epad)),
+                      constant_values=INF)[:, :ef]
+        F_i = jnp.pad(s_i, ((0, 0), (0, epad)),
+                      constant_values=-1)[:, :ef]
+    else:
+        F_d, F_i = C_d[:, :ef], C_i[:, :ef]    # best ef of the start set
     # visited bitmap, the ASIC's SPM bitmap verbatim: one bit per node,
     # packed into int32 words; membership = one word gather per
     # candidate, insert = scatter-add of (disjoint) bit masks
@@ -241,20 +287,38 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, q_low,
             V, cw, jnp.where(valid, (1 << cb).astype(jnp.int32), 0))
         # -- accept: d < F.max or F not full (F starts padded with INF) --
         accept = dh < F_d[:, -1:]
-        # one stacked stable sort orders the acceptees by high-dim dist
-        # (rows 0..B-1, feeding F/C) and by low-dim dist (rows B..2B-1,
-        # feeding the C_pca threshold heap)
-        s2d, s2i = _rank_sort_with_payload(
-            jnp.concatenate([jnp.where(accept, dh, INF),
-                             jnp.where(accept, kv, INF)], 0),
-            jnp.concatenate([jnp.where(accept, cand, -1),
-                             jnp.zeros((B, kk), jnp.int32)], 0))
-        sd, si = s2d[:B], s2i[:B]
-        pv, zk = s2d[B:], s2i[B:]
+        if filter_deleted:
+            # tombstoned candidates are accepted into C (traversed) but
+            # masked out of the F feed (never returned); one extra
+            # stacked row keeps it a single sort
+            tomb = _tombstone_bit(db.deleted, cand)
+            okF = accept & ~tomb
+            s3d, s3i = _rank_sort_with_payload(
+                jnp.concatenate([jnp.where(okF, dh, INF),
+                                 jnp.where(accept, dh, INF),
+                                 jnp.where(accept, kv, INF)], 0),
+                jnp.concatenate([jnp.where(okF, cand, -1),
+                                 jnp.where(accept, cand, -1),
+                                 jnp.zeros((B, kk), jnp.int32)], 0))
+            fd_n, fi_n = s3d[:B], s3i[:B]
+            sd, si = s3d[B:2 * B], s3i[B:2 * B]
+            pv, zk = s3d[2 * B:], s3i[2 * B:]
+        else:
+            # one stacked stable sort orders the acceptees by high-dim
+            # dist (rows 0..B-1, feeding F/C) and by low-dim dist (rows
+            # B..2B-1, feeding the C_pca threshold heap)
+            s2d, s2i = _rank_sort_with_payload(
+                jnp.concatenate([jnp.where(accept, dh, INF),
+                                 jnp.where(accept, kv, INF)], 0),
+                jnp.concatenate([jnp.where(accept, cand, -1),
+                                 jnp.zeros((B, kk), jnp.int32)], 0))
+            sd, si = s2d[:B], s2i[:B]
+            fd_n, fi_n = sd, si
+            pv, zk = s2d[B:], s2i[B:]
         # -- fold into the three sorted frontiers: O(ef+k) sorted
         #    merges, each right-sized (element work, not op count, is
         #    what the CPU/TPU vector units pay for) --
-        F_d, F_i = ops.merge_topk_sorted(F_d, F_i, sd, si, ef)
+        F_d, F_i = ops.merge_topk_sorted(F_d, F_i, fd_n, fi_n, ef)
         C_d, C_i = ops.merge_topk_sorted(C_d, C_i, sd, si, CAP)
         Cp, _ = ops.merge_topk_sorted(Cp, jnp.zeros((B, k), jnp.int32),
                                       pv, zk, k)
@@ -275,14 +339,22 @@ def _search_batched_jit(db, queries, q_low, ef0, k_schedule):
 def search_batched(db: PackedDB, queries, q_low=None, *, pca=None,
                    ef0: Optional[int] = None,
                    k_schedule: Optional[Tuple[int, ...]] = None,
+                   entry: Optional[int] = None,
                    return_stats: bool = False):
     """Full multi-layer pHNSW search for a batch (jit'd).
     queries: [B, D] (device). Returns (dists [B, ef0], idx [B, ef0]);
     with ``return_stats=True`` also a dict with per-query expansion-step
     telemetry: ``steps_per_layer`` [n_layers, B] (top layer first) and
-    ``steps_total`` [B]."""
+    ``steps_total`` [B].
+
+    ``entry`` overrides the descent entry point (``db.entry`` by
+    default). Both the entry and the tombstone bitmap ``db.deleted`` are
+    DATA to the compiled program — changing either between calls never
+    recompiles."""
     if q_low is None:
         q_low = pca.transform_jnp(queries).astype(jnp.float32)
+    if entry is not None:
+        db = dataclasses.replace(db, entry=entry)
     fd, fi, steps = _search_batched_jit(db, queries, q_low,
                                         ef0 or db.cfg.ef0,
                                         k_schedule or db.cfg.k_schedule)
@@ -295,11 +367,16 @@ def search_batched(db: PackedDB, queries, q_low=None, *, pca=None,
 def _search_batched_impl(db: PackedDB, queries, q_low, *,
                          ef0: Optional[int] = None,
                          k_schedule: Optional[Tuple[int, ...]] = None):
+    """The traced body (also called directly inside shard_map by
+    ``core/distributed.py``). The upper routing layers never filter
+    tombstones — a deleted node is a fine descent waypoint — the output
+    layer (0) does, iff the db carries a bitmap."""
     cfg = db.cfg
     B = queries.shape[0]
     ks = k_schedule or cfg.k_schedule
     k_of = lambda l: ks[min(l, len(ks) - 1)]
-    ep = jnp.full((B, 1), db.entry, jnp.int32)
+    ep = jnp.broadcast_to(
+        jnp.asarray(db.entry, jnp.int32).reshape(()), (B, 1))
     ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), queries)
     n_layers = len(db.layers)
     steps = []
@@ -309,6 +386,7 @@ def _search_batched_impl(db: PackedDB, queries, q_low, *,
             ef=cfg.ef_for_layer(layer), k=k_of(layer))
         steps.append(st)
     fd, fi, st = search_layer_batched(db, 0, queries, q_low, ep_d, ep,
-                                      ef=ef0 or cfg.ef0, k=k_of(0))
+                                      ef=ef0 or cfg.ef0, k=k_of(0),
+                                      filter_deleted=db.deleted is not None)
     steps.append(st)
     return fd, fi, jnp.stack(steps)

@@ -76,15 +76,22 @@ def _d2_rows(x, q):
 
 def _hnsw_layer(g: HNSWGraph, q: np.ndarray, eps: List[int], ef: int,
                 layer: int, st: SearchStats,
-                hw_mode: bool = False) -> List[Tuple[float, int]]:
+                hw_mode: bool = False,
+                deleted: Optional[np.ndarray] = None) -> List[Tuple[float, int]]:
     """hw_mode=True models the HNSW-Std accelerator baseline ([5],[6] as
     characterized in Section IV-B2): the DMA fetches high-dim data for
     ALL M neighbors of the expanded node before the visited check (the
     V-list lives with the raw data in SPM), so fetch/distance counts are
     per-neighbor, not per-unvisited-neighbor. The traversal itself is
-    identical."""
+    identical.
+
+    ``deleted`` ([N] bool, optional): tombstone semantics — deleted
+    nodes are traversed (pushed to the candidate heap, expanded) but
+    never enter the result heap."""
     adj = g.layers[layer]
     dim = g.x.shape[1]
+    live = (lambda e: True) if deleted is None \
+        else (lambda e: not deleted[e])
     visited = set(eps)
     cand = []
     best = []
@@ -94,10 +101,11 @@ def _hnsw_layer(g: HNSWGraph, q: np.ndarray, eps: List[int], ef: int,
         st.rand_accesses += 1
         st.rand_bytes += dim * F32
         heapq.heappush(cand, (d, e))
-        heapq.heappush(best, (-d, e))
+        if live(e):
+            heapq.heappush(best, (-d, e))
     while cand:
         d_c, c = heapq.heappop(cand)
-        d_f = -best[0][0]
+        d_f = -best[0][0] if best else np.inf
         if d_c > d_f and len(best) >= ef:
             break
         st.expansions += 1
@@ -119,19 +127,22 @@ def _hnsw_layer(g: HNSWGraph, q: np.ndarray, eps: List[int], ef: int,
             continue
         ds = _d2_rows(g.x[new], q)
         for d_e, e in zip(ds, new):
-            d_f = -best[0][0]
+            d_f = -best[0][0] if best else np.inf
             if d_e < d_f or len(best) < ef:
                 heapq.heappush(cand, (float(d_e), e))
-                heapq.heappush(best, (-float(d_e), e))
-                st.f_updates += 1
-                if len(best) > ef:
-                    heapq.heappop(best)
-                    st.evictions += 1
+                if live(e):
+                    heapq.heappush(best, (-float(d_e), e))
+                    st.f_updates += 1
+                    if len(best) > ef:
+                        heapq.heappop(best)
+                        st.evictions += 1
     return sorted([(-d, e) for d, e in best])
 
 
 def search_hnsw(g: HNSWGraph, q: np.ndarray, *, ef0: Optional[int] = None,
-                hw_mode: bool = False) -> Tuple[np.ndarray, SearchStats]:
+                hw_mode: bool = False,
+                deleted: Optional[np.ndarray] = None
+                ) -> Tuple[np.ndarray, SearchStats]:
     cfg = g.cfg
     st = SearchStats()
     ep = [g.entry]
@@ -140,7 +151,9 @@ def search_hnsw(g: HNSWGraph, q: np.ndarray, *, ef0: Optional[int] = None,
         res = _hnsw_layer(g, q, ep, cfg.ef_for_layer(layer), layer, st,
                           hw_mode)
         ep = [res[0][1]]
-    res = _hnsw_layer(g, q, ep, ef0 or cfg.ef0, 0, st, hw_mode)
+    # only the output layer filters tombstones; upper layers just route
+    res = _hnsw_layer(g, q, ep, ef0 or cfg.ef0, 0, st, hw_mode,
+                      deleted=deleted)
     return np.array([e for _, e in res], np.int64), st
 
 
@@ -151,11 +164,14 @@ def search_hnsw(g: HNSWGraph, q: np.ndarray, *, ef0: Optional[int] = None,
 def _phnsw_layer(g: HNSWGraph, x_low: np.ndarray, q: np.ndarray,
                  q_pca: np.ndarray, eps: List[int], ef: int, k: int,
                  layer: int, st: SearchStats,
-                 layout: Literal["packed", "separate"]) -> List[Tuple[float, int]]:
+                 layout: Literal["packed", "separate"],
+                 deleted: Optional[np.ndarray] = None) -> List[Tuple[float, int]]:
     adj = g.layers[layer]
     M = adj.shape[1]
     dim = g.x.shape[1]
     d_low = x_low.shape[1]
+    live = (lambda e: True) if deleted is None \
+        else (lambda e: not deleted[e])
     visited = set(eps)
     C: List[Tuple[float, int]] = []      # candidate min-heap (high-dim dist)
     F: List[Tuple[float, int]] = []      # final max-heap (neg high-dim dist)
@@ -168,11 +184,12 @@ def _phnsw_layer(g: HNSWGraph, x_low: np.ndarray, q: np.ndarray,
         dl = _d2(x_low[e], q_pca)
         st.dist_low += 1
         heapq.heappush(C, (d, e))
-        heapq.heappush(F, (-d, e))
+        if live(e):
+            heapq.heappush(F, (-d, e))
         heapq.heappush(C_pca, (-dl, e))
     while C:
         d_c, c = heapq.heappop(C)
-        d_f = -F[0][0]
+        d_f = -F[0][0] if F else np.inf
         if d_c > d_f and len(F) >= ef:
             break                                     # lines 7-8
         st.expansions += 1
@@ -214,11 +231,12 @@ def _phnsw_layer(g: HNSWGraph, x_low: np.ndarray, q: np.ndarray,
             d_f = -F[0][0] if F else np.inf
             if d_m < d_f or len(F) < ef:
                 heapq.heappush(C, (d_m, m))
-                heapq.heappush(F, (-d_m, m))
-                st.f_updates += 1
-                if len(F) > ef:
-                    heapq.heappop(F)
-                    st.evictions += 1
+                if live(m):
+                    heapq.heappush(F, (-d_m, m))
+                    st.f_updates += 1
+                    if len(F) > ef:
+                        heapq.heappop(F)
+                        st.evictions += 1
                 # C_pca_tmp: bounded-k low-dim threshold heap (line 20/24)
                 heapq.heappush(C_pca, (-dl_m, m))
                 if len(C_pca) > k:
@@ -229,7 +247,9 @@ def _phnsw_layer(g: HNSWGraph, x_low: np.ndarray, q: np.ndarray,
 def search_phnsw(g: HNSWGraph, x_low: np.ndarray, pca: PCA, q: np.ndarray,
                  *, layout: Literal["packed", "separate"] = "packed",
                  k_schedule: Optional[Tuple[int, ...]] = None,
-                 ef0: Optional[int] = None) -> Tuple[np.ndarray, SearchStats]:
+                 ef0: Optional[int] = None,
+                 deleted: Optional[np.ndarray] = None
+                 ) -> Tuple[np.ndarray, SearchStats]:
     cfg = g.cfg
     st = SearchStats()
     q_pca = pca.transform(q[None])[0].astype(np.float32)
@@ -241,8 +261,9 @@ def search_phnsw(g: HNSWGraph, x_low: np.ndarray, pca: PCA, q: np.ndarray,
         res = _phnsw_layer(g, x_low, q, q_pca, ep, cfg.ef_for_layer(layer),
                            k_of(layer), layer, st, layout)
         ep = [res[0][1]]
+    # tombstones filter only at the output layer (upper layers route)
     res = _phnsw_layer(g, x_low, q, q_pca, ep, ef0 or cfg.ef0, k_of(0), 0,
-                       st, layout)
+                       st, layout, deleted=deleted)
     return np.array([e for _, e in res], np.int64), st
 
 
@@ -257,17 +278,20 @@ def recall_at(found: np.ndarray, truth: np.ndarray, at: int) -> float:
 
 def run_queries(g: HNSWGraph, queries: np.ndarray, truth: np.ndarray,
                 *, algo: str = "phnsw", x_low=None, pca=None,
-                layout="packed", k_schedule=None, hw_mode: bool = False):
+                layout="packed", k_schedule=None, hw_mode: bool = False,
+                deleted: Optional[np.ndarray] = None):
     """Run all queries; returns (mean recall@cfg.recall_at, total stats)."""
     cfg = g.cfg
     tot = SearchStats()
     recs = []
     for i, q in enumerate(queries):
         if algo == "hnsw":
-            found, st = search_hnsw(g, q, hw_mode=hw_mode)
+            found, st = search_hnsw(g, q, hw_mode=hw_mode,
+                                    deleted=deleted)
         else:
             found, st = search_phnsw(g, x_low, pca, q, layout=layout,
-                                     k_schedule=k_schedule)
+                                     k_schedule=k_schedule,
+                                     deleted=deleted)
         tot.add(st)
         recs.append(recall_at(found, truth[i], cfg.recall_at))
     return float(np.mean(recs)), tot

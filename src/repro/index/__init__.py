@@ -1,0 +1,3 @@
+from repro.index.mutable import MutableIndex
+
+__all__ = ["MutableIndex"]

@@ -1,0 +1,546 @@
+"""Mutable pHNSW index: online upserts, tombstone deletes, compaction,
+snapshot/restore — a living index on top of the packed layout-(3)
+representation (DESIGN.md § Mutable index).
+
+The paper builds its database once (C phase) and only accelerates
+search; HNSW itself, though, is natively incremental (Malkov & Yashunin
+Alg. 1 *is* the insert procedure). This module makes the device-resident
+``PackedDB`` mutable without ever giving up the fixed-shape compiled
+search program:
+
+* **Capacity padding.** All buffers are allocated at a power-of-two
+  capacity (``>= cfg.min_capacity``). Inserts fill pre-allocated slots;
+  only when capacity is exhausted do the buffers double (one recompile
+  per doubling, O(log N) ever). Pad slots have no adjacency (never
+  traversed) and are additionally marked in the tombstone bitmap (never
+  returned).
+* **Batched insert.** A new vector's ef_construction neighborhood is
+  found ON DEVICE by the same fused S-phase kernels the serving path
+  uses (``fused_expand`` / ``ksort_l`` via ``search_layer_batched``),
+  one probe per insert sub-batch, always padded to a fixed probe width.
+  Only the cheap degree-bounded bidirectional linking (the diversity
+  heuristic) runs on the host, followed by an incremental layout-(3)
+  refresh of exactly the adjacency rows that changed.
+* **Tombstone deletes.** Deletes flip a bit in a word-packed bitmap that
+  ships with the ``PackedDB``; deleted nodes keep routing traffic
+  (traversed) but are excluded from results (never returned). Same
+  shapes, same compiled program.
+* **Compaction.** When tombstone density crosses
+  ``cfg.compact_tombstone_frac``, the graph is repaired (each live
+  node's dead neighbors are replaced by live 2-hop candidates under the
+  diversity heuristic), ids are remapped dense, buffers reallocated at
+  the shrunk capacity, and a PCA-drift report says whether the frozen
+  projection still captures the live distribution.
+* **Snapshot/restore.** The whole index (vectors, adjacency, levels,
+  tombstones, PCA) round-trips through one ``.npz``.
+
+Every mutation publishes a NEW ``PackedDB`` value under a bumped
+``epoch`` — readers holding the previous epoch keep a consistent frozen
+view (functional arrays), and serving swaps atomically.
+"""
+from __future__ import annotations
+
+import functools
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PHNSWConfig
+from repro.constants import VALID_MAX
+from repro.core.graph import (HNSWGraph, _select_heuristic, add_link,
+                              build_hnsw, sample_levels)
+from repro.core.pca import PCA, fit_pca
+from repro.core.search_jax import (PackedDB, PackedLayer, search_batched,
+                                   search_layer_batched)
+from repro.kernels import ops
+
+
+def _next_pow2(n: int, floor: int) -> int:
+    """Smallest power of two >= max(n, floor, 32). The floor itself is
+    rounded up to a power of two — a non-pow2 ``cfg.min_capacity`` must
+    not break the capacity invariant (doubling preserves any stray
+    factor, and the bitmap packing needs 32 | cap)."""
+    cap = 32
+    while cap < max(int(floor), n):
+        cap *= 2
+    return cap
+
+
+def _pack_bitmap(flags: np.ndarray) -> np.ndarray:
+    """bool [cap] (cap % 32 == 0) -> int32 words [cap // 32], bit i of
+    word i >> 5 = flags[i] (the engine's ``_tombstone_bit`` layout)."""
+    cap = len(flags)
+    words = np.zeros(cap // 32, np.uint32)
+    ids = np.nonzero(flags)[0].astype(np.uint32)
+    np.bitwise_or.at(words, ids // 32, np.uint32(1) << (ids % 32))
+    return words.view(np.int32)
+
+
+def _pad_rows_pow2(rows: np.ndarray) -> np.ndarray:
+    """Pad a dirty-row id list to a power-of-two length (repeating the
+    last id — an idempotent re-set) so the eager ``.at[rows].set``
+    scatters only ever see O(log N) distinct shapes."""
+    n = max(len(rows), 1)
+    b = 1
+    while b < n:
+        b *= 2
+    return np.pad(rows, (0, b - len(rows)), mode="edge") if len(rows) \
+        else np.zeros(1, np.int64)
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "k"))
+def _probe_jit(db, queries, q_low, ef, k):
+    """On-device neighborhood probe for a batch of to-be-inserted
+    vectors: the serving traversal run at every layer with the
+    construction beam (ef = ef_construction), each layer's full top-ef
+    seeding the next (richer than the serial ef=1 descent). Tombstoned
+    nodes are filtered at EVERY layer here — new nodes must never link
+    to the dead. Returns ([L, B, ef] dists, [L, B, ef] ids), bottom
+    layer FIRST (out[l] = layer l)."""
+    B = queries.shape[0]
+    ep = jnp.broadcast_to(
+        jnp.asarray(db.entry, jnp.int32).reshape(()), (B, 1))
+    ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), queries)
+    out_d, out_i = [], []
+    for layer in range(len(db.layers) - 1, -1, -1):
+        fd, fi, _ = search_layer_batched(
+            db, layer, queries, q_low, ep_d, ep, ef=ef, k=k,
+            max_steps=2 * ef + 16, filter_deleted=True)
+        out_d.append(fd)
+        out_i.append(fi)
+        ep_d, ep = fd, fi
+    return jnp.stack(out_d[::-1]), jnp.stack(out_i[::-1])
+
+
+class MutableIndex:
+    """Mutable pHNSW index over capacity-padded device buffers.
+
+    Host-side numpy mirrors hold the authoritative graph; the device
+    holds the packed layout-(3) snapshot published as ``self.db`` (a
+    ``PackedDB``) under a monotonically increasing ``self.epoch``.
+    """
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    def __init__(self, cfg: PHNSWConfig, pca: PCA, x: np.ndarray,
+                 x_low: np.ndarray, levels: np.ndarray,
+                 adj: Sequence[np.ndarray], entry: int,
+                 deleted: Optional[np.ndarray] = None, *, seed: int = 0,
+                 epoch: int = 0):
+        """Build from UNPADDED arrays ([n] rows); pads to capacity and
+        publishes. Prefer the ``from_graph`` / ``build`` / ``load``
+        classmethods."""
+        n = len(x)
+        cap = _next_pow2(n, cfg.min_capacity)
+        self.cfg, self.pca = cfg, pca
+        self.n, self.cap = n, cap
+        self.entry = int(entry)
+        self.epoch = epoch
+        self.rng = np.random.default_rng(seed)
+        D, dl = x.shape[1], x_low.shape[1]
+        self.x = np.zeros((cap, D), np.float32)
+        self.x[:n] = x
+        self.x_low = np.zeros((cap, dl), np.float32)
+        self.x_low[:n] = x_low
+        self.levels = np.full(cap, -1, np.int64)
+        self.levels[:n] = levels
+        # tombstones: real deletions in [:n]; pad slots are born deleted
+        self.deleted = np.ones(cap, bool)
+        self.deleted[:n] = deleted[:n] if deleted is not None else False
+        self.n_deleted = int(self.deleted[:n].sum())
+        self.adj: List[np.ndarray] = []
+        for l in range(cfg.n_layers):
+            a = np.full((cap, cfg.degree(l)), -1, np.int32)
+            if l < len(adj):
+                a[:n] = adj[l][:n]
+            self.adj.append(a)
+        self.top = max(int(self.levels[:n].max()), 0)
+        # old-id -> new-id map of the most recent compaction (None until
+        # one happens); compaction renumbers the public id space
+        self.last_remap: Optional[np.ndarray] = None
+        self._publish_full()
+
+    @classmethod
+    def from_graph(cls, g: HNSWGraph, pca: PCA, *, seed: int = 0
+                   ) -> "MutableIndex":
+        """Adopt a one-shot ``build_hnsw`` graph as the mutable seed."""
+        x_low = pca.transform(g.x).astype(np.float32)
+        return cls(g.cfg, pca, g.x, x_low, g.levels, g.layers, g.entry,
+                   seed=seed)
+
+    @classmethod
+    def build(cls, x: np.ndarray, cfg: PHNSWConfig, *, seed: int = 0
+              ) -> "MutableIndex":
+        """Fit PCA + host-build the seed graph + adopt it."""
+        pca = fit_pca(x, cfg.d_low)
+        g = build_hnsw(x, cfg, seed=seed)
+        return cls.from_graph(g, pca, seed=seed + 1)
+
+    # ------------------------------------------------------------------
+    # device publication (epoch-versioned, functional)
+    # ------------------------------------------------------------------
+
+    def _packed_rows(self, layer: int, rows: np.ndarray) -> np.ndarray:
+        """Layout-(3) inline-vector refresh for a set of adjacency rows:
+        re-gather each row's neighbor low-dim vectors."""
+        a = self.adj[layer][rows]                      # [R, M]
+        safe = np.where(a >= 0, a, 0)
+        packed = self.x_low[safe]                      # [R, M, dl]
+        packed[a < 0] = 0.0
+        return packed
+
+    def _publish_full(self) -> None:
+        """Rebuild every device buffer (init / growth / compaction /
+        top-layer change — anything that changes shapes or layer count)."""
+        dt = jnp.dtype(self.cfg.low_dtype)
+        n_pub = self.top + 1
+        all_rows = np.arange(self.cap)
+        self._dev_adj = [jnp.asarray(self.adj[l]) for l in range(n_pub)]
+        self._dev_packed = [jnp.asarray(self._packed_rows(l, all_rows), dt)
+                            for l in range(n_pub)]
+        self._dev_low = jnp.asarray(self.x_low, dt)
+        self._dev_high = jnp.asarray(self.x)
+        self._dev_deleted = jnp.asarray(_pack_bitmap(self.deleted))
+        self._swap()
+
+    def _publish_incremental(self, dirty: List[set], new_ids: np.ndarray,
+                             deleted_ids: Optional[np.ndarray] = None
+                             ) -> None:
+        """Refresh only what changed: new vector rows, dirty adjacency
+        rows (+ their inline packed vectors), and exactly the tombstone
+        words whose bits flipped (``new_ids`` clear their pad-slot bits;
+        ``deleted_ids`` set theirs)."""
+        dt = jnp.dtype(self.cfg.low_dtype)
+        if len(new_ids):
+            rows = _pad_rows_pow2(np.asarray(new_ids))
+            self._dev_high = self._dev_high.at[rows].set(
+                jnp.asarray(self.x[rows]))
+            self._dev_low = self._dev_low.at[rows].set(
+                jnp.asarray(self.x_low[rows], dt))
+        for l in range(self.top + 1):
+            if not dirty[l]:
+                continue
+            rows = _pad_rows_pow2(np.fromiter(sorted(dirty[l]), np.int64,
+                                              len(dirty[l])))
+            self._dev_adj[l] = self._dev_adj[l].at[rows].set(
+                jnp.asarray(self.adj[l][rows]))
+            self._dev_packed[l] = self._dev_packed[l].at[rows].set(
+                jnp.asarray(self._packed_rows(l, rows), dt))
+        changed = np.concatenate(
+            [np.asarray(new_ids, np.int64),
+             np.asarray(deleted_ids, np.int64)
+             if deleted_ids is not None else np.empty(0, np.int64)])
+        if len(changed):
+            words = _pad_rows_pow2(np.unique(changed // 32))
+            w_host = np.stack([
+                _pack_bitmap(self.deleted[w * 32:(w + 1) * 32])[0]
+                for w in words])
+            self._dev_deleted = self._dev_deleted.at[words].set(
+                jnp.asarray(w_host))
+        self._swap()
+
+    def _swap(self) -> None:
+        """Atomically publish a new epoch's PackedDB (plain attribute
+        assignment; previous epochs stay valid frozen views)."""
+        layers = [PackedLayer(adj=a, packed_low=p)
+                  for a, p in zip(self._dev_adj, self._dev_packed)]
+        self.epoch += 1
+        self._db = PackedDB(layers=layers, low=self._dev_low,
+                            high=self._dev_high, entry=self.entry,
+                            cfg=self.cfg, deleted=self._dev_deleted)
+
+    @property
+    def db(self) -> PackedDB:
+        """The current epoch's device snapshot."""
+        return self._db
+
+    @property
+    def n_live(self) -> int:
+        return self.n - self.n_deleted
+
+    @property
+    def tombstone_frac(self) -> float:
+        return self.n_deleted / max(self.n, 1)
+
+    def live_ids(self) -> np.ndarray:
+        """Ids of live (allocated, non-tombstoned) nodes, ascending —
+        the id space results are drawn from."""
+        return np.nonzero(~self.deleted[:self.n])[0]
+
+    def live_ground_truth(self, q: np.ndarray, at: int) -> np.ndarray:
+        """Exact top-``at`` neighbors of each query over the LIVE set,
+        as mutable-index ids ([len(q), at]) — the yardstick every
+        recall-under-churn measurement shares."""
+        from repro.data.vectors import brute_force_topk
+        live = self.live_ids()
+        return live[brute_force_topk(self.x[live], q, at)]
+
+    # ------------------------------------------------------------------
+    # upsert
+    # ------------------------------------------------------------------
+
+    def upsert(self, xs: np.ndarray,
+               ids: Optional[np.ndarray] = None) -> np.ndarray:
+        """Insert vectors; with ``ids`` given, tombstone those ids first
+        (replace semantics). Returns the new internal ids."""
+        if ids is not None:
+            self.delete(ids, auto_compact=False)
+        xs = np.asarray(xs, np.float32)
+        out = []
+        bb = self.cfg.insert_batch
+        for i in range(0, len(xs), bb):
+            out.append(self._insert_batch(xs[i:i + bb]))
+        return np.concatenate(out) if out else np.empty(0, np.int64)
+
+    def reserve(self, capacity: int) -> None:
+        """Pre-grow buffers to ``capacity`` (rounded up to a power of
+        two): pay the one growth recompile now, before traffic, instead
+        of mid-upsert."""
+        if capacity > self.cap:
+            self._grow(capacity)
+            self._publish_full()
+
+    def _grow(self, need: int) -> None:
+        new_cap = _next_pow2(need, self.cap * 2)
+        pad = new_cap - self.cap
+        self.x = np.concatenate(
+            [self.x, np.zeros((pad, self.x.shape[1]), np.float32)])
+        self.x_low = np.concatenate(
+            [self.x_low, np.zeros((pad, self.x_low.shape[1]), np.float32)])
+        self.levels = np.concatenate(
+            [self.levels, np.full(pad, -1, np.int64)])
+        self.deleted = np.concatenate([self.deleted, np.ones(pad, bool)])
+        self.adj = [np.concatenate(
+            [a, np.full((pad, a.shape[1]), -1, np.int32)])
+            for a in self.adj]
+        self.cap = new_cap
+
+    def _insert_batch(self, xb: np.ndarray) -> np.ndarray:
+        b = len(xb)
+        grew = False
+        if self.n + b > self.cap:
+            self._grow(self.n + b)
+            grew = True
+        ids = np.arange(self.n, self.n + b)
+        lvls = sample_levels(b, self.cfg, self.rng)
+        xl = self.pca.transform(xb).astype(np.float32)
+
+        # --- on-device neighborhood probe (pre-batch snapshot; padded
+        # to the fixed probe width so the compiled program is reused) ---
+        bb = self.cfg.insert_batch
+        qx, ql = xb, xl
+        if b < bb:
+            qx = np.concatenate(
+                [qx, np.broadcast_to(self.x[self.entry], (bb - b,
+                                                          qx.shape[1]))])
+            ql = np.concatenate(
+                [ql, np.broadcast_to(self.x_low[self.entry],
+                                     (bb - b, ql.shape[1]))])
+        fd, fi = _probe_jit(self._db, jnp.asarray(qx), jnp.asarray(ql),
+                            self.cfg.ef_construction,
+                            self.cfg.ef_construction_k)
+        fd, fi = np.asarray(fd), np.asarray(fi)      # [Lpub, bb, efc]
+        n_probe = fd.shape[0]
+
+        # --- host state for the batch (before linking, so intra-batch
+        # peers are visible as candidates) ---
+        self.x[ids] = xb
+        self.x_low[ids] = xl
+        self.levels[ids] = lvls
+        self.deleted[ids] = False
+        self.n += b
+
+        # --- degree-bounded bidirectional linking (diversity heuristic),
+        # serial within the batch to mirror the one-shot builder ---
+        dirty: List[set] = [set() for _ in range(self.cfg.n_layers)]
+        top_changed = False
+        for j in range(b):
+            i = int(ids[j])
+            l_i = int(lvls[j])
+            for l in range(min(l_i, self.top), -1, -1):
+                cand: Dict[int, float] = {}
+                if l < n_probe:
+                    for d, c in zip(fd[l, j], fi[l, j]):
+                        if c >= 0 and d < VALID_MAX:
+                            cand[int(c)] = float(d)
+                # intra-batch peers inserted earlier (the probe's
+                # snapshot predates the batch, so it cannot see them)
+                for p in ids[:j]:
+                    p = int(p)
+                    if self.levels[p] >= l and p not in cand:
+                        diff = self.x[p] - xb[j]
+                        cand[p] = float(np.dot(diff, diff))
+                if not cand:
+                    continue
+                ordered = sorted((d, c) for c, d in cand.items())
+                sel = _select_heuristic(self.x, ordered,
+                                        self.cfg.degree(l))
+                self.adj[l][i, :] = -1
+                self.adj[l][i, :len(sel)] = sel
+                dirty[l].add(i)
+                for e in sel:
+                    if add_link(self.x, self.adj[l], int(e), i):
+                        dirty[l].add(int(e))
+            if l_i > self.top:
+                self.top = l_i
+                self.entry = i
+                top_changed = True
+
+        if grew or top_changed:
+            self._publish_full()
+        else:
+            self._publish_incremental(dirty, ids)
+        return ids
+
+    # ------------------------------------------------------------------
+    # delete / compaction
+    # ------------------------------------------------------------------
+
+    def delete(self, ids: np.ndarray, *, auto_compact: bool = True) -> int:
+        """Tombstone ids (idempotent; out-of-range ids — e.g. stale
+        after a compaction shrank the id space — are ignored). The nodes
+        keep routing traffic but never appear in results. Returns the
+        number newly deleted; triggers compaction past
+        ``cfg.compact_tombstone_frac``."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        ids = ids[(ids >= 0) & (ids < self.n)]
+        ids = np.unique(ids[~self.deleted[ids]])
+        if len(ids) == 0:
+            return 0
+        self.deleted[ids] = True
+        self.n_deleted += len(ids)
+        self._publish_incremental([set() for _ in self.adj],
+                                  np.empty(0, np.int64),
+                                  deleted_ids=ids)
+        if auto_compact and \
+                self.tombstone_frac >= self.cfg.compact_tombstone_frac:
+            self.compact()
+        return len(ids)
+
+    def compact(self) -> dict:
+        """Physically drop tombstoned nodes: splice live 2-hop candidates
+        over dead neighbors (diversity heuristic), remap ids dense,
+        reallocate at the shrunk power-of-two capacity, and re-publish.
+
+        COMPACTION RENUMBERS THE ID SPACE: ids handed out before it are
+        stale afterward. The report's ``"remap"`` array (old id -> new
+        id, -1 for dropped) — also kept as ``self.last_remap`` — lets
+        callers re-resolve any ids they hold; `delete()` ignores stale
+        out-of-range ids rather than crashing.
+
+        Returns a report including the remap and the PCA-drift check."""
+        n_before, frac_before = self.n, self.tombstone_frac
+        live = ~self.deleted[:self.n]
+        n_live = int(live.sum())
+        if n_live == 0:
+            raise ValueError("compact() on a fully-deleted index")
+        drift = self.pca_drift()
+
+        # --- graph repair: replace dead neighbors with live 2-hop ---
+        for l in range(self.top + 1):
+            A = self.adj[l]
+            deg = A.shape[1]
+            has_dead = np.zeros(self.n, bool)
+            valid = A[:self.n] >= 0
+            safe = np.where(valid, A[:self.n], 0)
+            has_dead[live] = (valid & self.deleted[safe])[live].any(axis=1)
+            for i in np.nonzero(has_dead)[0]:
+                nb = A[i][A[i] >= 0]
+                keep = [int(e) for e in nb if not self.deleted[e]]
+                cand = set(keep)
+                for e in nb:
+                    if self.deleted[e]:
+                        for f in A[e][A[e] >= 0]:
+                            f = int(f)
+                            if f != i and not self.deleted[f]:
+                                cand.add(f)
+                if not cand:
+                    A[i, :] = -1
+                    continue
+                cl = np.fromiter(cand, np.int64, len(cand))
+                ds = np.sum((self.x[cl] - self.x[i]) ** 2, axis=1)
+                ordered = sorted(zip(ds.tolist(), cl.tolist()))
+                sel = _select_heuristic(self.x, ordered, deg)
+                A[i, :] = -1
+                A[i, :len(sel)] = sel
+
+        # --- dense remap + reallocation ---
+        remap = np.full(self.n, -1, np.int64)
+        remap[live] = np.arange(n_live)
+        x = self.x[:self.n][live]
+        x_low = self.x_low[:self.n][live]
+        levels = self.levels[:self.n][live]
+        adj = []
+        for l in range(self.cfg.n_layers):
+            A = self.adj[l][:self.n][live]
+            A = np.where(A >= 0, remap[np.where(A >= 0, A, 0)], -1)
+            adj.append(A.astype(np.int32))
+        lv_top = int(levels.max())
+        entry_cands = np.nonzero(levels == lv_top)[0]
+        self.__init__(self.cfg, self.pca, x, x_low, levels, adj,
+                      int(entry_cands[0]), seed=int(
+                          self.rng.integers(0, 2**31 - 1)),
+                      epoch=self.epoch)
+        self.last_remap = remap
+        return {"n_before": n_before, "n_after": self.n,
+                "tombstone_frac_before": frac_before,
+                "capacity": self.cap, "remap": remap,
+                "pca_drift": drift}
+
+    def pca_drift(self) -> dict:
+        """How much variance of the LIVE distribution the frozen
+        projection still captures, vs. what it captured at fit time.
+        A large drop means inserts moved the data manifold and the
+        low-dim filter is losing selectivity — refit offline."""
+        live = ~self.deleted[:self.n]
+        xc = self.x[:self.n][live] - self.pca.mean
+        tot = float((xc * xc).sum())
+        proj = xc @ self.pca.components
+        captured = float((proj * proj).sum()) / max(tot, 1e-12)
+        fit = float(self.pca.explained.sum())
+        return {"captured_live": captured, "captured_fit": fit,
+                "drift": fit - captured,
+                "refit_recommended": bool(
+                    fit - captured > self.cfg.pca_drift_tol)}
+
+    # ------------------------------------------------------------------
+    # search / snapshot
+    # ------------------------------------------------------------------
+
+    def search(self, queries: np.ndarray, **kw):
+        """Convenience: batched search over the current epoch."""
+        return search_batched(self._db, jnp.asarray(queries),
+                              pca=self.pca, **kw)
+
+    def save(self, path) -> None:
+        """Snapshot the whole index (graph + vectors + tombstones + PCA)
+        to one npz."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        np.savez_compressed(
+            path, n=self.n, entry=self.entry, epoch=self.epoch,
+            n_layers=self.cfg.n_layers,
+            x=self.x[:self.n], x_low=self.x_low[:self.n],
+            levels=self.levels[:self.n], deleted=self.deleted[:self.n],
+            pca_mean=self.pca.mean, pca_components=self.pca.components,
+            pca_explained=self.pca.explained,
+            **{f"adj{l}": self.adj[l][:self.n]
+               for l in range(self.cfg.n_layers)})
+
+    @classmethod
+    def load(cls, path, cfg: PHNSWConfig, *, seed: int = 0
+             ) -> "MutableIndex":
+        z = np.load(path)
+        pca = PCA(mean=z["pca_mean"], components=z["pca_components"],
+                  explained=z["pca_explained"])
+        n_layers = int(z["n_layers"])
+        idx = cls(cfg, pca, z["x"], z["x_low"], z["levels"],
+                  [z[f"adj{l}"] for l in range(n_layers)],
+                  int(z["entry"]), deleted=z["deleted"], seed=seed,
+                  epoch=int(z["epoch"]))
+        return idx

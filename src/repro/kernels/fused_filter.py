@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import INF
+from repro.constants import INF
 
 
 def _fused_kernel(x_ref, q_ref, val_ref, idx_ref, *, k: int):

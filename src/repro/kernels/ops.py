@@ -14,6 +14,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.constants import VALID_MAX  # noqa: F401  (re-export: callers
+# of fused_expand test returned vals against this sentinel)
 from repro.kernels import ref
 from repro.kernels.dist_l import dist_l_pallas
 from repro.kernels.ksort_l import ksort_l_pallas
@@ -117,7 +119,7 @@ def fused_expand(x, q, valid, th, k: int):
     mask + C_pca threshold + kSort.L) in a single kernel.
     x: [B, M, dl]; q: [B, dl]; valid: [B, M] bool; th: [B] f32.
     Returns (vals [B, k] ascending, idx [B, k]); filtered-out slots get
-    vals >= ref.VALID_MAX."""
+    vals >= constants.VALID_MAX."""
     if _use_ref():
         return ref.fused_expand_ref(x, q, valid, th, k)
     bb = _pick_block_b(x.shape[0],

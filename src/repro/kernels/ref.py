@@ -9,13 +9,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
-
-# Sentinel for "filtered out / empty slot" distances on the traversal
-# path. Deliberately a large FINITE f32 (not jnp.inf) so arithmetic on
-# padded slots never produces NaNs; callers test ``d < VALID_MAX``.
-INF = 3.4e38
-VALID_MAX = 1e37
+# Sentinels live in repro.constants (shared with the engine); the
+# re-export keeps ``ref.INF`` / ``ref.VALID_MAX`` spelling working for
+# kernels and tests.
+from repro.constants import INF, NEG_INF, VALID_MAX
 
 
 # ---------------------------------------------------------------------------

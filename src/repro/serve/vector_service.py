@@ -4,24 +4,40 @@ system (single-query ASIC -> batched TPU service).
 Requests accumulate into fixed-size batches (the compiled search program
 has a static batch dim); underfull batches are padded with the entry
 point and results trimmed. Tracks QPS and latency percentiles.
+
+Backed by either a frozen ``PackedDB`` (read-only serving, the seed
+behavior) or a ``MutableIndex`` (live serving): ``upsert`` / ``delete``
+mutate the index and atomically swap the published epoch's device
+snapshot under the running service. The swap is a plain attribute
+assignment of an immutable ``PackedDB`` value — in-flight batches finish
+on the epoch they started on, the next batch sees the new one, and in
+steady state no shape changes, so the compiled program is reused across
+the swap (zero recompiles). The two NON-steady-state events that do
+recompile — capacity doubling (pre-pay with ``MutableIndex.reserve``)
+and an insert drawing a level above the current top layer (adds a
+device layer; probability ~M^-(top+1) per insert) — are each O(log N)
+over an index's lifetime; see DESIGN.md § Mutable index.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.pca import PCA
 from repro.core.search_jax import PackedDB, search_batched
+from repro.index import MutableIndex
 
 
 @dataclass
 class ServiceStats:
     latencies_ms: List[float] = field(default_factory=list)
     queries: int = 0
+    upserts: int = 0
+    deletes: int = 0
     started: float = field(default_factory=time.monotonic)
 
     @property
@@ -35,22 +51,75 @@ class ServiceStats:
 
 
 class VectorSearchService:
-    def __init__(self, db: PackedDB, pca: PCA, *, batch_size: int = 64,
+    def __init__(self, db: Union[PackedDB, MutableIndex],
+                 pca: Optional[PCA] = None, *, batch_size: int = 64,
                  ef0: Optional[int] = None):
-        self.db, self.pca = db, pca
+        if isinstance(db, MutableIndex):
+            self.index: Optional[MutableIndex] = db
+            self.db = db.db
+            pca = pca or db.pca
+        else:
+            self.index = None
+            self.db = db
+        if pca is None:
+            raise ValueError("pca is required when serving a PackedDB")
+        self.pca = pca
         self.batch = batch_size
-        self.ef0 = ef0 or db.cfg.ef0
-        # pad row for underfull batches: the entry point's vector — its
-        # search terminates in O(1) steps, so pad lanes never drag the
-        # batch (padding with a caller query would re-run it)
-        self._pad_row = np.asarray(db.high[db.entry])[None].astype(
-            np.float32)
+        self.ef0 = ef0 or self.db.cfg.ef0
+        self.epoch = self.index.epoch if self.index else 0
+        self._refresh_pad_row()
         # warm the compiled program, then reset stats so compile time
         # and the warmup batch never pollute QPS/latency percentiles
         self.stats = ServiceStats()
-        dummy = np.zeros((batch_size, db.high.shape[1]), np.float32)
+        dummy = np.zeros((batch_size, self.db.high.shape[1]), np.float32)
         self._run(dummy)
         self.stats = ServiceStats()
+
+    def _refresh_pad_row(self):
+        # pad row for underfull batches: the entry point's vector — its
+        # search terminates in O(1) steps, so pad lanes never drag the
+        # batch (padding with a caller query would re-run it)
+        self._pad_row = np.asarray(
+            self.db.high[int(self.db.entry)])[None].astype(np.float32)
+
+    # ------------------------------------------------------------------
+    # mutation (MutableIndex-backed services only)
+    # ------------------------------------------------------------------
+
+    def _swap(self):
+        """Atomically publish the index's current epoch to the serving
+        path (attribute assignment of an immutable snapshot)."""
+        self.db = self.index.db
+        self.epoch = self.index.epoch
+        self._refresh_pad_row()
+
+    def upsert(self, vectors: np.ndarray,
+               ids: Optional[np.ndarray] = None) -> np.ndarray:
+        """Insert (or, with ``ids``, replace) vectors; swaps the serving
+        snapshot to the new epoch. Returns the new internal ids."""
+        if self.index is None:
+            raise RuntimeError("upsert() needs a MutableIndex-backed "
+                               "service (got a frozen PackedDB)")
+        new_ids = self.index.upsert(np.asarray(vectors, np.float32),
+                                    ids=ids)
+        self.stats.upserts += len(new_ids)
+        self._swap()
+        return new_ids
+
+    def delete(self, ids: np.ndarray) -> int:
+        """Tombstone ids; deleted ids never appear in results from the
+        swapped epoch onward. Returns the number newly deleted."""
+        if self.index is None:
+            raise RuntimeError("delete() needs a MutableIndex-backed "
+                               "service (got a frozen PackedDB)")
+        n = self.index.delete(ids)
+        self.stats.deletes += n
+        self._swap()
+        return n
+
+    # ------------------------------------------------------------------
+    # query path
+    # ------------------------------------------------------------------
 
     def _run(self, q: np.ndarray):
         ql = self.pca.transform(q).astype(np.float32)

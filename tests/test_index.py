@@ -1,0 +1,191 @@
+"""Mutable-index subsystem: online upserts, tombstone deletes,
+compaction, PCA drift, snapshot/restore, and the serving integration
+(epoch-versioned atomic swap). The churn acceptance scenario (8k index,
++25% upserts, 10% deletes, recall parity with a from-scratch rebuild,
+zero steady-state recompiles) lives in tests/test_system.py."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.search_jax import build_packed, search_batched
+from repro.core.search_ref import recall_at, search_phnsw
+from repro.data.vectors import make_queries, make_sift_like
+from repro.index import MutableIndex
+from repro.serve.vector_service import VectorSearchService
+
+
+@pytest.fixture()
+def mut_index(small_graph, small_pca):
+    # fresh per test: every test mutates it
+    return MutableIndex.from_graph(small_graph, small_pca, seed=1)
+
+
+def _live_recall(idx, q, at=10):
+    """Recall of idx.search against brute force over the live set."""
+    gt = idx.live_ground_truth(q, at)
+    _, fi = idx.search(q)
+    fi = np.asarray(fi)
+    return float(np.mean([recall_at(fi[i], gt[i], at)
+                          for i in range(len(q))])), fi
+
+
+def test_capacity_padding_invariants(mut_index):
+    idx = mut_index
+    assert idx.cap >= idx.n and idx.cap & (idx.cap - 1) == 0
+    # pad slots: born deleted, unlinked, level -1
+    assert idx.deleted[idx.n:].all()
+    assert (idx.levels[idx.n:] == -1).all()
+    for a in idx.adj:
+        assert (a[idx.n:] == -1).all()
+    # published device buffers are capacity-sized
+    assert idx.db.high.shape[0] == idx.cap
+    assert idx.db.deleted.shape[0] == idx.cap // 32
+
+
+def test_insert_finds_new_vectors(mut_index, small_dataset):
+    idx = mut_index
+    x, _, _ = small_dataset
+    rng = np.random.default_rng(9)
+    x_new = make_sift_like(300, seed=77)
+    n0, epoch0 = idx.n, idx.epoch
+    ids = idx.upsert(x_new)
+    assert idx.n == n0 + 300 and len(ids) == 300
+    assert idx.epoch > epoch0
+    # querying AT the inserted vectors must surface their ids
+    _, fi = idx.search(x_new[:32])
+    hits = (np.asarray(fi)[:, 0] == ids[:32])
+    assert hits.mean() > 0.9
+    # overall recall on the mixed live set stays high
+    q = make_queries(np.concatenate([x, x_new]), 32, seed=10)
+    rec, _ = _live_recall(idx, q)
+    assert rec > 0.85
+
+
+def test_delete_tombstone_semantics(mut_index, small_dataset, small_graph,
+                                    small_pca, small_xlow):
+    idx = mut_index
+    x, q, gt = small_dataset
+    dels = np.unique(gt[:, :3].ravel())      # delete many true neighbors
+    idx.delete(dels, auto_compact=False)
+    _, fi = idx.search(q)
+    fi = np.asarray(fi)
+    assert not np.isin(fi, dels).any()
+    assert (fi < idx.n).all()                # pad slots never returned
+    # deleted nodes are traversed: recall vs the LIVE ground truth holds
+    rec, _ = _live_recall(idx, q)
+    assert rec > 0.85
+    # host reference implements the same semantics
+    deleted = np.zeros(len(x), bool)
+    deleted[dels] = True
+    found, _ = search_phnsw(small_graph, small_xlow, small_pca, q[0],
+                            deleted=deleted)
+    assert not np.isin(found, dels).any()
+
+
+def test_delete_entry_point_still_routes(mut_index, small_dataset):
+    idx = mut_index
+    _, q, _ = small_dataset
+    entry = idx.entry
+    idx.delete([entry], auto_compact=False)
+    rec, fi = _live_recall(idx, q)
+    assert not (fi == entry).any()
+    assert rec > 0.85
+
+
+def test_growth_is_power_of_two_and_reserve(mut_index):
+    idx = mut_index
+    cap0 = idx.cap
+    x_new = make_sift_like(cap0 - idx.n + 1, seed=5)   # force one growth
+    idx.upsert(x_new)
+    assert idx.cap == 2 * cap0
+    idx.reserve(idx.cap * 4 + 1)
+    assert idx.cap == cap0 * 16
+    assert idx.deleted[idx.n:].all()
+
+
+def test_compact_trigger_and_remap(small_graph, small_pca, small_dataset):
+    import dataclasses
+    cfg = dataclasses.replace(small_graph.cfg, compact_tombstone_frac=0.2)
+    g = dataclasses.replace(small_graph, cfg=cfg)
+    idx = MutableIndex.from_graph(g, small_pca, seed=1)
+    _, q, _ = small_dataset
+    n0 = idx.n
+    rng = np.random.default_rng(0)
+    doomed = rng.choice(n0, size=int(0.25 * n0), replace=False)
+    idx.delete(doomed)                       # crosses 0.2 -> auto-compact
+    assert idx.n_deleted == 0 and idx.n == n0 - len(doomed)
+    assert idx.cap & (idx.cap - 1) == 0
+    rec, fi = _live_recall(idx, q)
+    assert (fi[fi >= 0] < idx.n).all()       # dense remapped id space
+    assert rec > 0.8                         # graph repair kept recall
+    # compaction renumbers ids and surfaces the remap: dropped ids map
+    # to -1, survivors to their dense slot
+    remap = idx.last_remap
+    assert remap is not None and len(remap) == n0
+    assert (remap[doomed] == -1).all()
+    assert (np.sort(remap[remap >= 0]) == np.arange(idx.n)).all()
+    # stale ids (>= the shrunk n) are ignored, not a crash
+    assert idx.delete(np.asarray([n0 - 1, n0, 10 ** 6])) == 0
+
+
+def test_pca_drift_flags_distribution_shift(mut_index):
+    idx = mut_index
+    rep0 = idx.pca_drift()
+    assert not rep0["refit_recommended"]
+    # inserts far off the fitted manifold (full-rank uniform noise);
+    # 1k of them against 4k on-manifold points drop the captured
+    # variance well past the refit tolerance
+    rng = np.random.default_rng(3)
+    x_off = rng.uniform(0, 220, size=(1000, idx.x.shape[1])) \
+        .astype(np.float32)
+    idx.upsert(x_off)
+    rep1 = idx.pca_drift()
+    assert rep1["captured_live"] < rep0["captured_live"]
+    assert rep1["refit_recommended"]
+
+
+def test_snapshot_restore_roundtrip(mut_index, small_dataset, tmp_path):
+    idx = mut_index
+    _, q, _ = small_dataset
+    idx.upsert(make_sift_like(100, seed=8))
+    idx.delete(np.arange(50), auto_compact=False)
+    idx.save(tmp_path / "snap.npz")
+    idx2 = MutableIndex.load(tmp_path / "snap.npz", idx.cfg, seed=2)
+    assert idx2.n == idx.n and idx2.entry == idx.entry
+    assert idx2.n_deleted == idx.n_deleted
+    _, fi = idx.search(q)
+    _, fi2 = idx2.search(q)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(fi2))
+    # the restored index keeps absorbing upserts
+    ids = idx2.upsert(make_sift_like(20, seed=9))
+    assert len(ids) == 20
+
+
+def test_service_upsert_delete_epoch_swap(small_graph, small_pca,
+                                          small_dataset):
+    x, q, gt = small_dataset
+    idx = MutableIndex.from_graph(small_graph, small_pca, seed=1)
+    svc = VectorSearchService(idx, batch_size=16)
+    e0 = svc.epoch
+    _, fi_before = svc.query(q[:16])
+    x_new = make_sift_like(60, seed=12)
+    ids = svc.upsert(x_new)
+    assert svc.epoch > e0
+    # new vectors are immediately servable
+    _, fi_new = svc.query(x_new[:16])
+    assert (fi_new[:, 0] == ids[:16]).mean() > 0.9
+    # deletes take effect on the next batch
+    victim = np.asarray(fi_before[:, 0])
+    svc.delete(victim)
+    _, fi_after = svc.query(q[:16])
+    assert not np.isin(fi_after, victim).any()
+    assert svc.stats.upserts == 60 and svc.stats.deletes == len(
+        np.unique(victim))
+    # frozen PackedDB service refuses mutation
+    db = build_packed(small_graph, small_pca.transform(x)
+                      .astype(np.float32))
+    frozen = VectorSearchService(db, small_pca, batch_size=16)
+    with pytest.raises(RuntimeError):
+        frozen.upsert(x_new)
+    with pytest.raises(RuntimeError):
+        frozen.delete([0])

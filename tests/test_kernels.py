@@ -140,6 +140,56 @@ def test_merge_sorted_matches_full_sort():
         np.testing.assert_array_equal(np.asarray(i[r]), alli[order][:k])
 
 
+def test_merge_sorted_edge_cases():
+    """Duplicate distances (a side wins ties, then lower slot), an
+    all-INF b list (output == a), and k=1 — the degenerate shapes the
+    traversal hits on empty frontiers and the distributed merge hits
+    with ef=1 upper layers."""
+    from repro.constants import INF
+    from repro.kernels import ops
+    # duplicate distances across and within lists: deterministic order
+    d_a = jnp.asarray([[1.0, 1.0, 2.0]], jnp.float32)
+    i_a = jnp.asarray([[0, 1, 2]], jnp.int32)
+    d_b = jnp.asarray([[1.0, 2.0]], jnp.float32)
+    i_b = jnp.asarray([[10, 11]], jnp.int32)
+    d, i = ops.merge_topk_sorted(d_a, i_a, d_b, i_b, 5)
+    np.testing.assert_allclose(np.asarray(d[0]), [1.0, 1.0, 1.0, 2.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(i[0]), [0, 1, 10, 2, 11])
+    # all-INF b list: output is exactly a (the no-new-candidates step)
+    d_inf = jnp.full((1, 2), INF, jnp.float32)
+    i_inf = jnp.full((1, 2), -1, jnp.int32)
+    d, i = ops.merge_topk_sorted(d_a, i_a, d_inf, i_inf, 3)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_a))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_a))
+    # both all-INF: k output slots stay (INF, -1)
+    d, i = ops.merge_topk_sorted(d_inf, i_inf, d_inf, i_inf, 2)
+    assert (np.asarray(d) >= ref.VALID_MAX).all()
+    np.testing.assert_array_equal(np.asarray(i), [[-1, -1]])
+    # k=1: the single smallest, a side on ties
+    d, i = ops.merge_topk_sorted(d_a, i_a, d_b, i_b, 1)
+    np.testing.assert_allclose(np.asarray(d), [[1.0]])
+    np.testing.assert_array_equal(np.asarray(i), [[0]])
+    # k=1 against the pallas kernel path too
+    d8 = jnp.tile(d_a, (8, 1))
+    i8 = jnp.tile(i_a, (8, 1))
+    db8 = jnp.tile(d_b, (8, 1))
+    ib8 = jnp.tile(i_b, (8, 1))
+    dp, ip = merge_sorted_pallas(d8, i8, db8, ib8, 1, block_b=8,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(dp), np.ones((8, 1)))
+    np.testing.assert_array_equal(np.asarray(ip), np.zeros((8, 1)))
+
+
+def test_sentinels_single_source():
+    """The INF/VALID_MAX sentinels have exactly one definition
+    (repro.constants), re-exported bit-identically everywhere."""
+    from repro import constants
+    from repro.core import search_jax
+    assert ref.INF is constants.INF
+    assert ref.VALID_MAX is constants.VALID_MAX
+    assert float(search_jax.INF) == float(np.float32(constants.INF))
+
+
 @pytest.mark.parametrize("S,T,window", [(128, 128, 0), (128, 256, 0),
                                         (256, 256, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
