@@ -24,16 +24,22 @@ from pathlib import Path
 from typing import Optional
 
 import numpy as np
-import jax.numpy as jnp
 
-from benchmarks.common import emit, load_bench_db
+from benchmarks.common import batched_filter_ab, emit, load_bench_db
 from repro.core.cost_model import table3, hw_variant_stats
-from repro.core.search_jax import build_packed, search_batched
-from repro.core.search_ref import recall_at, run_queries
+from repro.core.search_jax import build_packed
+from repro.core.search_ref import run_queries
 
 
 def main(n_points: int = 50_000, n_queries: int = 200,
-         json_path: Optional[str] = None):
+         json_path: Optional[str] = None, filter_kind: str = "pca",
+         deferred: bool = False, rerank_mult: Optional[int] = None):
+    """``filter_kind``/``deferred``/``rerank_mult`` select the filter
+    stage and re-rank mode of the measured batched row (the CPU
+    reference and cost-model rows stay on the paper's PCA
+    configuration). The tracked BENCH_table3.json entry is only
+    written for the canonical pca/per-step configuration and embeds a
+    pca/pq/none/deferred A/B (``filters``)."""
     cfg, x, g, pca, x_low, q, gt = load_bench_db(n_points, n_queries)
     rows = []
 
@@ -71,39 +77,47 @@ def main(n_points: int = 50_000, n_queries: int = 200,
                  f"bytes={db.bytes_layout3};vs_raw="
                  f"{db.bytes_layout3 / raw:.2f}x"))
 
-    # --- batched JAX engine (beyond paper), measured ---
+    # --- batched JAX engine (beyond paper), measured; the filter stage
+    # and rerank mode are pluggable (core/filters.py), and the single
+    # measurement protocol lives in common.batched_filter_ab ---
     B = min(64, len(q))
-    qd = jnp.asarray(q[:B])
-    search_batched(db, qd, pca=pca)[1].block_until_ready()   # compile
-    t0 = time.perf_counter()
-    reps = 5
-    for _ in range(reps):
-        _, fi = search_batched(db, qd, pca=pca)
-    fi.block_until_ready()
-    dt = (time.perf_counter() - t0) / reps
-    fi = np.asarray(fi)
-    rec = float(np.mean([recall_at(fi[i], gt[i], cfg.recall_at)
-                         for i in range(B)]))
-    # per-query expansion-step telemetry (convoy diagnostics: the batch
-    # convoys on its slowest lane, so p99 steps ~ batch wall-clock)
-    _, _, st_b = search_batched(db, qd, pca=pca, return_stats=True)
-    steps = np.asarray(st_b["steps_total"])
-    steps_mean, steps_p99 = float(steps.mean()), \
-        float(np.percentile(steps, 99))
-    rows.append(("table3/pHNSW-JAX-batched", dt / B * 1e6,
-                 f"qps={B / dt:.0f};recall@10={rec:.3f};"
-                 f"steps_mean={steps_mean:.1f};steps_p99={steps_p99:.1f}"))
+    m = batched_filter_ab(cfg, x, g, pca, q, gt, batch=B, reps=5,
+                          rerank_mult=rerank_mult,
+                          modes=[(filter_kind, deferred)])[0]
+    rows.append((f"table3/pHNSW-JAX-batched/{m['name']}",
+                 m["us_per_query"],
+                 f"qps={m['qps']:.0f};recall@10={m['recall']:.3f};"
+                 f"steps_mean={m['steps_mean']:.1f};"
+                 f"steps_p99={m['steps_p99']:.1f};"
+                 f"dist_h_mean={m['dist_h_mean']:.1f}"))
+    # the tracked perf trajectory pins the canonical configuration
+    if json_path and (filter_kind != "pca" or deferred):
+        json_path = None
     if json_path:
+        # filter-stage A/B on the same graph/queries, embedded in the
+        # tracked entry (pca / pq / none / pca-deferred)
+        ab = batched_filter_ab(cfg, x, g, pca, q, gt, batch=B)
+        rows.extend((f"table3/filter_ab/{a['name']}",
+                     a["us_per_query"],
+                     f"qps={a['qps']:.0f};recall@10={a['recall']:.3f};"
+                     f"dist_h_mean={a['dist_h_mean']:.1f};"
+                     f"bytes_per_vec={a['bytes_per_vec']}")
+                    for a in ab)
         entry = {
             "bench": "table3_qps",
             "n_points": n_points,
             "batch": B,
-            "qps": B / dt,
-            "us_per_query": dt / B * 1e6,
-            "recall_at_10": rec,
-            "steps_mean": steps_mean,
-            "steps_p99": steps_p99,
-            "steps_max": int(steps.max()),
+            "qps": m["qps"],
+            "us_per_query": m["us_per_query"],
+            "recall_at_10": m["recall"],
+            "steps_mean": m["steps_mean"],
+            "steps_p99": m["steps_p99"],
+            "steps_max": m["steps_max"],
+            "dist_h_mean": m["dist_h_mean"],
+            "filters": {a["name"]: {k: a[k] for k in
+                                    ("qps", "recall", "dist_h_mean",
+                                     "bytes_per_vec", "rerank_mult")}
+                        for a in ab},
         }
         # append-only perf trajectory: latest entry at top level (the
         # tracked number), prior --perf-smoke runs under "history"

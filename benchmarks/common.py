@@ -37,6 +37,76 @@ def load_bench_db(n_points: int = 50_000, n_queries: int = 200):
     return cfg, x, g, pca, x_low, q, gt
 
 
+def make_bench_filter(kind: str, cfg, x, pca):
+    """The filter used by the batched benchmarks: adopt the cached PCA
+    for "pca", fit PQ/identity from cfg (smoke-speed training: 4 Lloyd
+    iterations is recall-equivalent on the 8-50k benches). "pq<N>"
+    (e.g. "pq64") overrides cfg.pq_n_sub — the matched-byte-budget
+    arms of the ablation."""
+    import dataclasses
+    from repro.core.filters import PCAFilter, make_filter
+    if kind == "pca":
+        return PCAFilter(pca, low_dtype=cfg.low_dtype)
+    n_sub = cfg.pq_n_sub
+    if kind.startswith("pq") and kind != "pq":
+        kind, n_sub = "pq", int(kind[2:])
+    return make_filter(dataclasses.replace(cfg, filter_kind=kind,
+                                           pq_n_sub=n_sub,
+                                           pq_train_iters=4), x)
+
+
+def batched_filter_ab(cfg, x, g, pca, q, gt, *, batch: int = 64,
+                      reps: int = 3, rerank_mult=None, modes=None):
+    """Apples-to-apples batched-engine A/B across filter stages: same
+    graph, same queries, same compiled traversal — only the filter
+    payload/kernel (and optionally the rerank mode) swaps. Returns one
+    dict per mode: qps, recall@cfg.recall_at, mean Dist.H evals/query,
+    step telemetry, payload bytes/vec."""
+    import time as _time
+    import numpy as _np
+    import jax.numpy as jnp
+    from repro.core.search_jax import build_packed, search_batched
+    from repro.core.search_ref import recall_at
+
+    modes = modes or [("pca", False), ("pq", False), ("none", False),
+                      ("pca", True)]
+    B = min(batch, len(q))
+    qd = jnp.asarray(q[:B])
+    filt_cache, db_cache = {}, {}       # payload depends only on kind
+    out = []
+    for kind, deferred in modes:
+        if kind not in filt_cache:
+            filt_cache[kind] = make_bench_filter(kind, cfg, x, pca)
+            db_cache[kind] = build_packed(g, filt_cache[kind].encode(x),
+                                          filt=filt_cache[kind])
+        filt, db = filt_cache[kind], db_cache[kind]
+        rm = int(rerank_mult or cfg.rerank_mult)
+        kw = dict(filt=filt, deferred=deferred, rerank_mult=rm)
+        search_batched(db, qd, **kw)[1].block_until_ready()   # compile
+        t0 = _time.perf_counter()
+        for _ in range(reps):
+            _, fi = search_batched(db, qd, **kw)
+        fi.block_until_ready()
+        dt = (_time.perf_counter() - t0) / reps
+        fi = _np.asarray(fi)
+        rec = float(_np.mean([recall_at(fi[i], gt[i], cfg.recall_at)
+                              for i in range(B)]))
+        _, _, stc = search_batched(db, qd, return_stats=True, **kw)
+        dhe = float(_np.asarray(stc["dist_h_evals"]).mean())
+        steps = _np.asarray(stc["steps_total"])
+        out.append({
+            "name": kind + ("-deferred" if deferred else ""),
+            "qps": B / dt, "us_per_query": dt / B * 1e6,
+            "recall": rec, "dist_h_mean": dhe,
+            "steps_mean": float(steps.mean()),
+            "steps_p99": float(_np.percentile(steps, 99)),
+            "steps_max": int(steps.max()),
+            "bytes_per_vec": filt.bytes_per_vec,
+            "rerank_mult": rm if deferred else 1,
+        })
+    return out
+
+
 def emit(rows):
     """Print the required ``name,us_per_call,derived`` CSV rows."""
     for name, us, derived in rows:

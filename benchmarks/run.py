@@ -28,6 +28,18 @@ def main() -> None:
     ap.add_argument("--churn", action="store_true",
                     help="only the mutable-index churn benchmark "
                          "(mixed insert/delete/query workload)")
+    ap.add_argument("--filter", choices=("pca", "pq", "none"),
+                    default="pca", dest="filter_kind",
+                    help="filter stage for the measured batched row "
+                         "(core/filters.py); the tracked "
+                         "BENCH_table3.json entry is only written for "
+                         "the canonical pca/per-step configuration")
+    ap.add_argument("--deferred", action="store_true",
+                    help="deferred re-ranking: traverse on filter "
+                         "distances, one batched Dist.H per query")
+    ap.add_argument("--rerank-mult", type=int, default=None,
+                    help="deferred-rerank candidate multiplier "
+                         "(default: cfg.rerank_mult)")
     args = ap.parse_args()
     n_points = args.n_points or \
         (8_000 if args.fast or args.perf_smoke else 50_000)
@@ -52,8 +64,12 @@ def main() -> None:
         print("name,us_per_call,derived")
         t0 = time.time()
         bench_table3_qps.main(n_points=n_points, n_queries=n_queries,
-                              json_path=json_path)
-        print(f"# wrote {json_path}", file=sys.stderr)
+                              json_path=json_path,
+                              filter_kind=args.filter_kind,
+                              deferred=args.deferred,
+                              rerank_mult=args.rerank_mult)
+        if args.filter_kind == "pca" and not args.deferred:
+            print(f"# wrote {json_path}", file=sys.stderr)
         print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
         return
 
@@ -62,7 +78,10 @@ def main() -> None:
     # BENCH_table3.json tracks the fixed --perf-smoke configuration
     # only; full runs at other sizes must not overwrite it
     for mod, kwargs in (
-        (bench_table3_qps, dict(n_points=n_points, n_queries=n_queries)),
+        (bench_table3_qps, dict(n_points=n_points, n_queries=n_queries,
+                                filter_kind=args.filter_kind,
+                                deferred=args.deferred,
+                                rerank_mult=args.rerank_mult)),
         (bench_fig2_kselect, dict(n_points=n_points,
                                   n_queries=min(n_queries, 100))),
         (bench_fig5_energy, dict(n_points=n_points, n_queries=n_queries)),

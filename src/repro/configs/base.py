@@ -220,6 +220,25 @@ class PHNSWConfig:
     ef_construction: int = 100
     recall_at: int = 10
     dtype: str = "float32"
+    # ---- filter stage (core/filters.py) ----
+    # which low-cost filter ranks candidates before (or instead of)
+    # high-dim re-ranking: "pca" (the paper's dense low-dim projection),
+    # "pq" (Flash-style product quantization, scored via an on-device
+    # ADC gather-accumulate kernel), or "none" (filter bypass: every
+    # neighbor goes straight to Dist.H — the HNSW-Std behavior, kept as
+    # a first-class measured baseline)
+    filter_kind: str = "pca"
+    # PQ filter shape: n_sub subspaces x 256 centroids = n_sub bytes/vec
+    pq_n_sub: int = 16
+    pq_train_iters: int = 8
+    # ---- re-ranking mode ----
+    # "deferred" traverses purely on filter distances and re-ranks only
+    # the final list in high dim: ONE batched Dist.H call per query
+    # instead of k per expansion step. rerank_mult widens the layer-0
+    # result list to rerank_mult * ef0 filter-space candidates before
+    # that single re-rank — the recall-vs-Dist.H-traffic knob.
+    deferred_rerank: bool = False
+    rerank_mult: int = 3
     # storage dtype of the inline low-dim vectors in layout (3)
     # ("bfloat16" halves the dominant HBM stream and the paper's ~2.9x
     # memory blow-up; distances still accumulate in f32)

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.core.search_ref import SearchStats
 
@@ -76,6 +76,11 @@ class ProcessorConfig:
     static_power_w: float = 0.050
 
     def compute_cycles(self, st: SearchStats, dim: int, d_low: int) -> Dict:
+        """``d_low`` is the per-point filter pipeline depth: d_low dims
+        for the PCA filter, n_sub table lookups for PQ, the full dim
+        for the identity bypass — pass ``FilterSpec.cost_dims`` (or use
+        ``query_cost(..., filt=...)``) so the modeled compute stays
+        honest across filters."""
         c = {}
         c["dist_l"] = math.ceil(st.dist_low / self.dist_lanes) * d_low
         c["ksort_l"] = st.ksort_calls * self.ksort_cycles
@@ -122,10 +127,22 @@ class QueryCost:
         return self.dram_pj / max(self.total_pj, 1e-12)
 
 
-def query_cost(st: SearchStats, *, n_queries: int, dim: int, d_low: int,
-               dram: DramConfig, proc: ProcessorConfig = PROCESSOR
+def query_cost(st: SearchStats, *, n_queries: int, dim: int,
+               d_low: Optional[int] = None, dram: DramConfig,
+               proc: ProcessorConfig = PROCESSOR, filt=None
                ) -> QueryCost:
-    """Cost of ONE query given aggregate stats over ``n_queries``."""
+    """Cost of ONE query given aggregate stats over ``n_queries``.
+
+    The filter payload is priced generically: DRAM traffic arrives in
+    the stats already weighted by the active filter's bytes/vector
+    (``FilterSpec.bytes_per_vec`` — e.g. ``PQCodebook.bytes_per_vec``
+    for PQ codes), and the filter-distance compute depth comes from
+    ``filt.cost_dims`` when ``filt`` is given (``d_low`` is the
+    PCA-era spelling, kept for the seed callers)."""
+    if filt is not None:
+        d_low = filt.cost_dims
+    if d_low is None:
+        raise ValueError("query_cost needs d_low or filt")
     per = SearchStats(**{k: v / n_queries for k, v in st.as_dict().items()})
     cyc = proc.compute_cycles(per, dim, d_low)
     compute_ns = sum(cyc.values()) / proc.freq_ghz

@@ -96,8 +96,8 @@ def distributed_search(mesh: Mesh, sdb: ShardedDB, queries, q_low,
         # _search_batched_impl handles it directly
         db = PackedDB(layers=layers, low=low[0], high=high[0],
                       entry=entry[0], cfg=cfg)
-        fd, fi, _ = _search_batched_impl(db, q, ql, ef0=ef0,
-                                         k_schedule=ks)
+        fd, fi, _, _ = _search_batched_impl(db, q, ql, ef0=ef0,
+                                            k_schedule=ks)
         fi = jnp.where(fi >= 0, fi + offset[0], -1)
         # merge across shards: all-gather the per-shard top-ef
         fd_all = jax.lax.all_gather(fd, m_ax, axis=0)      # [P, B, ef]

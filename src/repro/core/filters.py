@@ -1,0 +1,236 @@
+"""Pluggable filter stage for the pHNSW traversal pipeline.
+
+The paper's core idea is a *filter stage*: a cheap per-neighbor score
+(PCA-projected distance) prunes candidates before expensive high-dim
+re-ranking. This module makes that stage a first-class component with
+three interchangeable implementations behind one contract:
+
+  * ``PCAFilter``  — the paper's dense low-dim projection (Dist.L).
+  * ``PQFilter``   — Flash [15]-style product quantization: uint8 codes
+    scored by an on-device ADC gather-accumulate kernel.
+  * ``IdentityFilter`` — filter bypass: every neighbor goes straight to
+    Dist.H (the HNSW-Std behavior, kept as a measured baseline).
+
+A ``FilterSpec`` owns (DESIGN.md § Filter-stage contract):
+
+  * its **build-time payload** (``encode``): the per-vector rows stored
+    in ``PackedDB.low`` and inlined per-neighbor in layout (3)
+    (``PackedLayer.packed_low``) — dense f32/bf16 low-dim rows for PCA,
+    uint8 codes for PQ, a zero-width array for identity;
+  * its **per-query preparation** (``prepare`` / ``prepare_jnp``): PCA
+    projection of the query vs. construction of the [S, 256] ADC
+    lookup table (identity needs none);
+  * its **device expand kernel** (``expand``): the fused
+    Dist.L+mask+threshold+kSort.L kernel for PCA, the fused ADC kernel
+    for PQ (the engine bypasses the kernel entirely for identity);
+  * its **cost-model pricing**: ``bytes_per_vec`` (layout-(3) inline
+    payload bytes, the dominant sequential-burst stream) and
+    ``cost_dims`` (per-point filter-distance pipeline depth).
+
+``search_ref`` uses ``dists`` (the host numpy oracle) so the reference
+and batched engines share one filter definition per kind.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import PHNSWConfig
+from repro.core.pca import PCA, fit_pca
+from repro.core.pq import (PQCodebook, adc_table_batch, encode_pq,
+                           train_pq)
+from repro.kernels import ops
+
+
+class FilterSpec:
+    """Contract shared by the three filter kinds. ``kind`` is the
+    static string that keys the compiled search program (a structural
+    property: each kind compiles a different expand pipeline)."""
+
+    kind: str = "?"
+
+    # --- build-time payload -------------------------------------------------
+    def encode(self, x: np.ndarray) -> np.ndarray:
+        """x [N, D] -> payload rows [N, P] (host array; P may be 0)."""
+        raise NotImplementedError
+
+    @property
+    def payload_dtype(self) -> np.dtype:
+        raise NotImplementedError
+
+    @property
+    def bytes_per_vec(self) -> int:
+        """Layout-(3) inline payload bytes per vector (DRAM pricing)."""
+        raise NotImplementedError
+
+    @property
+    def cost_dims(self) -> int:
+        """Per-point filter-distance pipeline depth for the processor
+        cost model (d_low for PCA, n_sub table lookups for PQ)."""
+        raise NotImplementedError
+
+    # --- per-query preparation ----------------------------------------------
+    def prepare(self, q: np.ndarray) -> np.ndarray:
+        """q [B, D] -> host per-query filter data (f32)."""
+        raise NotImplementedError
+
+    def prepare_jnp(self, q):
+        """Device-side ``prepare`` (jnp in, jnp out)."""
+        raise NotImplementedError
+
+    # --- host distance oracle (search_ref) ----------------------------------
+    def dists(self, qprep_row: np.ndarray, payload: np.ndarray
+              ) -> np.ndarray:
+        """One query's filter distances: qprep_row = prepare(q)[i],
+        payload [M, P] -> [M] f32."""
+        raise NotImplementedError
+
+    # --- device expand kernel (search_jax) ----------------------------------
+    def expand(self, nb_payload, qprep, valid, th, k: int):
+        """The fused expansion filter stage for this kind (see
+        ``ops.fused_expand`` / ``ops.pq_adc_expand``)."""
+        raise NotImplementedError
+
+
+@dataclass
+class PCAFilter(FilterSpec):
+    """The paper's filter: dense projection to d_low dims."""
+    pca: PCA
+    low_dtype: str = "float32"   # device storage dtype of the payload
+
+    kind = "pca"
+
+    def encode(self, x):
+        return self.pca.transform(x).astype(np.float32)
+
+    @property
+    def payload_dtype(self):
+        return np.dtype(np.float32)
+
+    @property
+    def bytes_per_vec(self):
+        return self.pca.d_low * jnp.dtype(self.low_dtype).itemsize
+
+    @property
+    def cost_dims(self):
+        return self.pca.d_low
+
+    def prepare(self, q):
+        return self.pca.transform(q).astype(np.float32)
+
+    def prepare_jnp(self, q):
+        return self.pca.transform_jnp(q).astype(jnp.float32)
+
+    def dists(self, qprep_row, payload):
+        d = payload.astype(np.float32) - qprep_row
+        return np.einsum("ij,ij->i", d, d)
+
+    def expand(self, nb_payload, qprep, valid, th, k):
+        return ops.fused_expand(nb_payload, qprep, valid, th, k)
+
+
+@dataclass
+class PQFilter(FilterSpec):
+    """Flash-style PQ filter: n_sub uint8 codes per vector, scored with
+    per-query ADC lookup tables."""
+    cb: PQCodebook
+    _cents_jnp: Optional[jnp.ndarray] = field(
+        default=None, init=False, repr=False, compare=False)
+
+    kind = "pq"
+
+    def encode(self, x):
+        return encode_pq(self.cb, x)
+
+    @property
+    def payload_dtype(self):
+        return np.dtype(np.uint8)
+
+    @property
+    def bytes_per_vec(self):
+        return self.cb.bytes_per_vec
+
+    @property
+    def cost_dims(self):
+        return self.cb.n_sub
+
+    def prepare(self, q):
+        return adc_table_batch(self.cb, q)
+
+    def prepare_jnp(self, q):
+        # codebook uploaded once (same caching story as PCA.transform_jnp)
+        if self._cents_jnp is None:
+            self._cents_jnp = jnp.asarray(self.cb.centroids)
+        B = q.shape[0]
+        qs = q.astype(jnp.float32).reshape(B, self.cb.n_sub, 1,
+                                           self.cb.dsub)
+        return jnp.sum((qs - self._cents_jnp[None]) ** 2, axis=-1)
+
+    def dists(self, qprep_row, payload):
+        S = qprep_row.shape[0]
+        return qprep_row[np.arange(S)[None, :],
+                         payload.astype(np.int64)].sum(1)
+
+    def expand(self, nb_payload, qprep, valid, th, k):
+        return ops.pq_adc_expand(nb_payload, qprep, valid, th, k)
+
+
+@dataclass
+class IdentityFilter(FilterSpec):
+    """Filter bypass: no payload, no per-query prep, no expand kernel.
+    The engine skips the C_pca stage entirely and ranks every valid
+    neighbor in high dim — HNSW-Std as a pluggable baseline. Its
+    'filter distance' IS the high-dim distance, so deferred re-ranking
+    degenerates to per-step behavior (with a wider final list)."""
+    dim: int = 0                 # high dim, for cost_dims
+
+    kind = "none"
+
+    def encode(self, x):
+        return np.zeros((len(x), 0), np.float32)
+
+    @property
+    def payload_dtype(self):
+        return np.dtype(np.float32)
+
+    @property
+    def bytes_per_vec(self):
+        return 0
+
+    @property
+    def cost_dims(self):
+        return self.dim
+
+    def prepare(self, q):
+        return q.astype(np.float32)[:, :0]     # [B, 0] — unused
+
+    def prepare_jnp(self, q):
+        return q.astype(jnp.float32)[:, :0]
+
+    def dists(self, qprep_row, payload):
+        raise RuntimeError("identity filter has no filter distances; "
+                           "the engine ranks in high dim directly")
+
+    def expand(self, nb_payload, qprep, valid, th, k):
+        raise RuntimeError("identity filter bypasses the expand kernel")
+
+
+def make_filter(cfg: PHNSWConfig, x: np.ndarray, *,
+                pca: Optional[PCA] = None, seed: int = 0) -> FilterSpec:
+    """Fit the filter selected by ``cfg.filter_kind`` on the dataset.
+    A pre-fit ``pca`` is adopted (avoids double fits when callers
+    already hold one)."""
+    if cfg.filter_kind == "pca":
+        return PCAFilter(pca or fit_pca(x, cfg.d_low),
+                         low_dtype=cfg.low_dtype)
+    if cfg.filter_kind == "pq":
+        n_train = min(len(x), 20_000)
+        cb = train_pq(x[:n_train], cfg.pq_n_sub,
+                      iters=cfg.pq_train_iters, seed=seed)
+        return PQFilter(cb)
+    if cfg.filter_kind == "none":
+        return IdentityFilter(dim=x.shape[1])
+    raise ValueError(f"unknown filter kind {cfg.filter_kind!r}")

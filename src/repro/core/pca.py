@@ -8,8 +8,8 @@ sharded on the mesh. The transform keeps distances approximately:
 underestimate true distances — the property the filter relies on."""
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Tuple
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -20,6 +20,14 @@ class PCA:
     mean: np.ndarray        # [D]
     components: np.ndarray  # [D, d_low]  (orthonormal columns)
     explained: np.ndarray   # [d_low] fraction of variance per component
+    # device-array cache for transform_jnp: wrapping mean/components with
+    # jnp.asarray on every call re-pays a host->device transfer per
+    # query batch; the projection matrices are frozen after fit, so they
+    # are uploaded once and reused (excluded from ==/repr)
+    _mean_jnp: Optional[jnp.ndarray] = field(
+        default=None, init=False, repr=False, compare=False)
+    _components_jnp: Optional[jnp.ndarray] = field(
+        default=None, init=False, repr=False, compare=False)
 
     @property
     def d_low(self) -> int:
@@ -29,7 +37,10 @@ class PCA:
         return (x - self.mean) @ self.components
 
     def transform_jnp(self, x):
-        return (x - jnp.asarray(self.mean)) @ jnp.asarray(self.components)
+        if self._mean_jnp is None:
+            self._mean_jnp = jnp.asarray(self.mean)
+            self._components_jnp = jnp.asarray(self.components)
+        return (x - self._mean_jnp) @ self._components_jnp
 
     def inverse(self, z):
         return z @ self.components.T + self.mean

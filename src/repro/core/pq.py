@@ -89,6 +89,15 @@ def adc_table(cb: PQCodebook, q: np.ndarray) -> np.ndarray:
     return tabs
 
 
+def adc_table_batch(cb: PQCodebook, q: np.ndarray) -> np.ndarray:
+    """Batched ADC tables: q [B, D] -> [B, n_sub, 256] f32 — the
+    per-query preparation of the PQ filter (the PQ analogue of the PCA
+    projection)."""
+    B, d = q.shape
+    qs = q.astype(np.float32).reshape(B, cb.n_sub, 1, cb.dsub)
+    return ((qs - cb.centroids[None]) ** 2).sum(-1)
+
+
 def adc_distances(tabs: np.ndarray, codes: np.ndarray) -> np.ndarray:
     """codes: [N, M] -> approximate squared distances [N]."""
     return tabs[np.arange(tabs.shape[0])[None, :], codes].sum(1)

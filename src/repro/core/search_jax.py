@@ -71,13 +71,20 @@ class PackedDB:
     tombstones ever": the engine then compiles the plain accept path.
     When present, deleted nodes are TRAVERSED (they stay in the
     candidate frontier, their neighbors are expanded) but never RETURNED
-    (they are excluded from the result list F on the output layer)."""
+    (they are excluded from the result list F on the output layer).
+
+    ``filter_kind`` is METADATA (static): which filter stage the
+    payload in ``low`` / ``packed_low`` belongs to — "pca" (dense
+    low-dim rows), "pq" (uint8 ADC codes) or "none" (zero-width bypass
+    payload). Each kind compiles a different expand pipeline, so it is
+    structural by design (core/filters.py owns the payload contract)."""
     layers: List[PackedLayer]
-    low: jax.Array          # [N, dl]
+    low: jax.Array          # [N, P] filter payload rows (P may be 0)
     high: jax.Array         # [N, D]
     entry: int
     cfg: PHNSWConfig
     deleted: Optional[jax.Array] = None   # [ceil(N/32)] int32 or None
+    filter_kind: str = "pca"
 
     @property
     def bytes_layout3(self) -> int:
@@ -107,7 +114,7 @@ jax.tree_util.register_dataclass(
     PackedLayer, data_fields=["adj", "packed_low"], meta_fields=[])
 jax.tree_util.register_dataclass(
     PackedDB, data_fields=["layers", "low", "high", "entry", "deleted"],
-    meta_fields=["cfg"])
+    meta_fields=["cfg", "filter_kind"])
 
 
 def _tombstone_bit(deleted, ids):
@@ -117,16 +124,27 @@ def _tombstone_bit(deleted, ids):
     return (jnp.take(deleted, safe // 32) >> (safe % 32)) & 1 != 0
 
 
-def build_packed(g: HNSWGraph, x_low: np.ndarray,
-                 *, low_dtype: Optional[str] = None,
+def build_packed(g: HNSWGraph, x_low: Optional[np.ndarray] = None,
+                 *, filt=None, low_dtype: Optional[str] = None,
                  drop_empty_layers: bool = True) -> PackedDB:
-    """``low_dtype`` overrides ``g.cfg.low_dtype`` (layout-(3) storage
-    dtype of the inline low-dim vectors; distances still run in f32).
-    ``drop_empty_layers`` skips all-padding top layers (the level
-    assignment rarely reaches cfg.n_layers at small N) so the search
-    never runs a while_loop over an empty graph layer; pass False when
-    layer counts must stay uniform (e.g. stacking shards)."""
-    dt = jnp.dtype(low_dtype or g.cfg.low_dtype)
+    """``x_low`` is the filter payload ([N, P] rows — dense low-dim
+    vectors for the default PCA filter); passing ``filt`` (a
+    ``core.filters.FilterSpec``) instead encodes the payload from the
+    filter and stamps its kind onto the db ("pca" assumed otherwise).
+    ``low_dtype`` overrides ``g.cfg.low_dtype`` (layout-(3) storage
+    dtype of the inline PCA vectors; distances still run in f32; PQ
+    codes always store uint8). ``drop_empty_layers`` skips all-padding
+    top layers (the level assignment rarely reaches cfg.n_layers at
+    small N) so the search never runs a while_loop over an empty graph
+    layer; pass False when layer counts must stay uniform (e.g.
+    stacking shards)."""
+    fkind = filt.kind if filt is not None else "pca"
+    if x_low is None:
+        if filt is None:
+            raise ValueError("build_packed needs x_low or filt")
+        x_low = filt.encode(g.x)
+    dt = jnp.dtype(low_dtype or g.cfg.low_dtype) if fkind == "pca" \
+        else jnp.dtype(x_low.dtype)
     adjs = list(g.layers)
     if drop_empty_layers:
         while len(adjs) > 1 and not (adjs[-1] >= 0).any():
@@ -134,12 +152,13 @@ def build_packed(g: HNSWGraph, x_low: np.ndarray,
     layers = []
     for adj in adjs:
         safe = np.where(adj >= 0, adj, 0)
-        packed = x_low[safe]                       # [N, M, dl]
-        packed[adj < 0] = 0.0
+        packed = x_low[safe]                       # [N, M, P]
+        packed[adj < 0] = 0
         layers.append(PackedLayer(adj=jnp.asarray(adj),
                                   packed_low=jnp.asarray(packed, dt)))
     return PackedDB(layers=layers, low=jnp.asarray(x_low, dt),
-                    high=jnp.asarray(g.x), entry=g.entry, cfg=g.cfg)
+                    high=jnp.asarray(g.x), entry=g.entry, cfg=g.cfg,
+                    filter_kind=fkind)
 
 
 def _rank_sort_with_payload(d, p):
@@ -161,15 +180,25 @@ def _rank_sort_with_payload(d, p):
     return sd, sp
 
 
-def search_layer_batched(db: PackedDB, layer: int, q_high, q_low,
+def search_layer_batched(db: PackedDB, layer: int, q_high, qprep,
                          start_d, start_i, *, ef: int, k: int,
                          max_steps: Optional[int] = None,
                          expand_width: Optional[int] = None,
-                         filter_deleted: bool = False):
+                         filter_deleted: bool = False,
+                         deferred: bool = False):
     """One layer of Algorithm 1 for a batch of queries.
 
-    start_d/start_i: [B, E] entry candidates (high-dim dists, idx),
-    ASCENDING — the previous layer's output already is.
+    ``qprep`` is the active filter's per-query data (PCA-projected
+    query [B, dl] for "pca", ADC lookup tables [B, S, 256] for "pq",
+    a zero-width dummy for "none" — see core/filters.py); the filter
+    kind itself is static on ``db.filter_kind`` and selects the expand
+    pipeline: the fused Dist.L kernel, the fused PQ ADC kernel, or the
+    filter bypass (every valid neighbor goes straight to Dist.H and the
+    C_pca threshold stage disappears from the compiled program).
+
+    start_d/start_i: [B, E] entry candidates ASCENDING (high-dim dists
+    normally; FILTER-space dists when ``deferred``) — the previous
+    layer's output already is.
 
     Each loop iteration pops the W = expand_width nearest frontier
     candidates (slots 0..W-1 of the sorted C) and expands them jointly —
@@ -184,13 +213,26 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, q_low,
     bound, is computed over LIVE nodes only and the traversal keeps
     digging until ef live results converge.
 
+    ``deferred`` (static) traverses purely on filter distances: no
+    high-dim gathers or Dist.H inside the loop — C, F and the
+    acceptance bound all live in filter space, and the caller re-ranks
+    the final F list in high dim once. A no-op for the identity filter
+    (its filter distance IS the high-dim distance).
+
     Returns (F_dist [B, ef], F_idx [B, ef] ascending, steps [B] int32 =
-    per-query expansion count before that query froze)."""
+    per-query expansion count before that query froze, dist_h [B]
+    int32 = per-query Dist.H evaluations inside this layer)."""
     B = q_high.shape[0]
     lay = db.layers[layer]
     N = db.high.shape[0]
+    M = lay.adj.shape[1]
     W = expand_width or db.cfg.expand_width
-    kk = W * k                                   # survivors per iteration
+    fkind = db.filter_kind
+    if fkind == "none":
+        kk = W * M          # filter bypass: every neighbor is a candidate
+        deferred = False    # filter space == high-dim space
+    else:
+        kk = W * k                               # survivors per iteration
     CAP = max(ef + kk, 8)
     steps = max_steps or db.cfg.max_steps_for_layer(layer)
     iters = -(-steps // W)                       # expansion budget / W
@@ -224,19 +266,22 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, q_low,
     sw, sb = start_i // 32, start_i % 32
     V = jax.vmap(lambda v, w, m: v.at[w].add(m))(
         V, sw, jnp.where(start_i >= 0, (1 << sb).astype(jnp.int32), 0))
-    # C_pca threshold heap (k-bounded low-dim dists of accepted
-    # candidates, ascending; Cp[-1] is the filter threshold f_pca)
+    # C_pca threshold heap (k-bounded filter dists of accepted
+    # candidates, ascending; Cp[-1] is the filter threshold f_pca).
+    # The identity filter has no threshold stage — Cp stays a constant
+    # INF row and its merge is elided from the compiled program.
     Cp = jnp.full((B, k), INF)
     done = jnp.zeros((B,), bool)
     nsteps = jnp.zeros((B,), jnp.int32)
-    state = (jnp.int32(0), C_d, C_i, F_d, F_i, V, Cp, done, nsteps)
+    dhe = jnp.zeros((B,), jnp.int32)
+    state = (jnp.int32(0), C_d, C_i, F_d, F_i, V, Cp, done, nsteps, dhe)
 
     def cond(state):
-        t, *_, done, _ns = state
+        t, *_, done, _ns, _de = state
         return (t < iters) & ~done.all()
 
     def body(state):
-        t, C_d, C_i, F_d, F_i, V, Cp, done, nsteps = state
+        t, C_d, C_i, F_d, F_i, V, Cp, done, nsteps, dhe = state
         # -- pop the W nearest candidates: slots 0..W-1 of sorted C --
         d_w, c_w = C_d[:, :W], C_i[:, :W]
         # termination is monotone (F.max only shrinks, the popped min
@@ -256,137 +301,225 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, q_low,
         # -- step 2: W row gathers = paper layout (3) bursts --
         nb_i = jnp.take(lay.adj, c_safe.reshape(-1), axis=0) \
             .reshape(B, -1)                             # [B, W*M]
-        nb_low = jnp.take(lay.packed_low, c_safe.reshape(-1), axis=0) \
-            .reshape(B, nb_i.shape[1], -1)              # [B, W*M, dl]
-        # -- fused expand: Dist.L + mask + f_pca threshold + kSort.L --
-        th = Cp[:, -1]
-        M = lay.adj.shape[1]
-        kv, ki = ops.fused_expand(
-            nb_low, q_low,
-            (nb_i >= 0) & jnp.repeat(exp, M, axis=1), th, kk)
-        cand = jnp.take_along_axis(nb_i, ki, axis=1)    # [B, W*k]
-        valid = (kv < VALID_MAX) & (cand >= 0)
+        nb_mask = (nb_i >= 0) & jnp.repeat(exp, M, axis=1)
+        if fkind == "none":
+            # filter bypass: every valid neighbor is a candidate (slot
+            # order = adjacency order); no payload gather, no kernel
+            cand, kv = nb_i, None
+            valid = nb_mask
+        else:
+            nb_pay = jnp.take(lay.packed_low, c_safe.reshape(-1),
+                              axis=0).reshape(B, nb_i.shape[1], -1)
+            # -- fused expand: filter dist (Dist.L or PQ ADC) + mask +
+            #    f_pca threshold + kSort.L in one kernel --
+            th = Cp[:, -1]
+            if fkind == "pca":
+                kv, ki = ops.fused_expand(nb_pay, qprep, nb_mask, th, kk)
+            else:
+                kv, ki = ops.pq_adc_expand(nb_pay, qprep, nb_mask, th, kk)
+            cand = jnp.take_along_axis(nb_i, ki, axis=1)    # [B, W*k]
+            valid = (kv < VALID_MAX) & (cand >= 0)
         # -- visited check: one bit gather per candidate --
         cw, cb = jnp.maximum(cand, 0) // 32, jnp.maximum(cand, 0) % 32
         seen = (jnp.take_along_axis(V, cw, axis=1) >> cb) & 1 != 0
         if W > 1:
             # intra-iteration dedup (the W neighbor lists may overlap;
-            # keep the first occurrence)
+            # keep the first occurrence); a single list holds distinct
+            # ids on every path, including the bypass
             jj = jnp.arange(kk, dtype=jnp.int32)
             dup = ((cand[:, :, None] == cand[:, None, :])
                    & (jj[None, :, None] > jj[None, None, :])
                    & valid[:, None, :]).any(-1)
             seen |= dup
         valid &= ~seen
-        # -- step 3: W*k irregular high-dim fetches + Dist.H --
-        xh = jnp.take(db.high, jnp.maximum(cand, 0), axis=0)
-        dh = jnp.where(valid, ops.dist_h(xh, q_high), INF)    # Dist.H
+        if deferred and fkind != "none":
+            # -- deferred re-rank: traverse on FILTER distances; no
+            #    high-dim gather, no Dist.H inside the loop --
+            dh = jnp.where(valid, kv, INF)
+        else:
+            # -- step 3: kk irregular high-dim fetches + Dist.H --
+            xh = jnp.take(db.high, jnp.maximum(cand, 0), axis=0)
+            dh = jnp.where(valid, ops.dist_h(xh, q_high), INF)  # Dist.H
+            dhe = dhe + valid.sum(axis=1, dtype=jnp.int32)
         # -- mark visited: disjoint bit masks (valid slots are distinct
         #    ids, so mod-2^32 add == bitwise or) --
         V = jax.vmap(lambda v, w, m: v.at[w].add(m))(
             V, cw, jnp.where(valid, (1 << cb).astype(jnp.int32), 0))
         # -- accept: d < F.max or F not full (F starts padded with INF) --
         accept = dh < F_d[:, -1:]
+        # one stacked stable sort orders the acceptees for every
+        # frontier feed; which rows exist depends on the static mode:
+        #   * okF row (tombstoned masked out) only under filter_deleted
+        #   * a separate kv row for the C_pca heap only when the
+        #     traversal orders by Dist.H (per-step pca/pq) — in
+        #     deferred mode dh IS kv, and the bypass has no C_pca
+        rows_d = [jnp.where(accept, dh, INF)]
+        rows_i = [jnp.where(accept, cand, -1)]
         if filter_deleted:
             # tombstoned candidates are accepted into C (traversed) but
-            # masked out of the F feed (never returned); one extra
-            # stacked row keeps it a single sort
+            # masked out of the F feed (never returned)
             tomb = _tombstone_bit(db.deleted, cand)
             okF = accept & ~tomb
-            s3d, s3i = _rank_sort_with_payload(
-                jnp.concatenate([jnp.where(okF, dh, INF),
-                                 jnp.where(accept, dh, INF),
-                                 jnp.where(accept, kv, INF)], 0),
-                jnp.concatenate([jnp.where(okF, cand, -1),
-                                 jnp.where(accept, cand, -1),
-                                 jnp.zeros((B, kk), jnp.int32)], 0))
-            fd_n, fi_n = s3d[:B], s3i[:B]
-            sd, si = s3d[B:2 * B], s3i[B:2 * B]
-            pv, zk = s3d[2 * B:], s3i[2 * B:]
-        else:
-            # one stacked stable sort orders the acceptees by high-dim
-            # dist (rows 0..B-1, feeding F/C) and by low-dim dist (rows
-            # B..2B-1, feeding the C_pca threshold heap)
-            s2d, s2i = _rank_sort_with_payload(
-                jnp.concatenate([jnp.where(accept, dh, INF),
-                                 jnp.where(accept, kv, INF)], 0),
-                jnp.concatenate([jnp.where(accept, cand, -1),
-                                 jnp.zeros((B, kk), jnp.int32)], 0))
-            sd, si = s2d[:B], s2i[:B]
-            fd_n, fi_n = sd, si
-            pv, zk = s2d[B:], s2i[B:]
-        # -- fold into the three sorted frontiers: O(ef+k) sorted
-        #    merges, each right-sized (element work, not op count, is
-        #    what the CPU/TPU vector units pay for) --
+            rows_d.insert(0, jnp.where(okF, dh, INF))
+            rows_i.insert(0, jnp.where(okF, cand, -1))
+        need_kv_row = fkind != "none" and not deferred
+        if need_kv_row:
+            rows_d.append(jnp.where(accept, kv, INF))
+            rows_i.append(jnp.zeros((B, kk), jnp.int32))
+        s_d, s_i = _rank_sort_with_payload(jnp.concatenate(rows_d, 0),
+                                           jnp.concatenate(rows_i, 0))
+        r = B if filter_deleted else 0
+        sd, si = s_d[r:r + B], s_i[r:r + B]          # C feed (dh order)
+        fd_n, fi_n = (s_d[:B], s_i[:B]) if filter_deleted else (sd, si)
+        # -- fold into the sorted frontiers: O(ef+k) sorted merges,
+        #    each right-sized (element work, not op count, is what the
+        #    CPU/TPU vector units pay for) --
         F_d, F_i = ops.merge_topk_sorted(F_d, F_i, fd_n, fi_n, ef)
         C_d, C_i = ops.merge_topk_sorted(C_d, C_i, sd, si, CAP)
-        Cp, _ = ops.merge_topk_sorted(Cp, jnp.zeros((B, k), jnp.int32),
-                                      pv, zk, k)
+        if fkind != "none":
+            # C_pca feed: the accepted candidates' filter dists — their
+            # own sort row per-step, the dh row itself when deferred
+            pv = s_d[r + B:] if need_kv_row else sd
+            Cp, _ = ops.merge_topk_sorted(
+                Cp, jnp.zeros((B, k), jnp.int32), pv,
+                jnp.zeros((B, pv.shape[1]), jnp.int32), k)
         nsteps = nsteps + exp.sum(axis=1, dtype=jnp.int32)
-        return (t + 1, C_d, C_i, F_d, F_i, V, Cp, done, nsteps)
+        return (t + 1, C_d, C_i, F_d, F_i, V, Cp, done, nsteps, dhe)
 
     out = jax.lax.while_loop(cond, body, state)
-    _, _, _, F_d, F_i, _, _, _, nsteps = out
-    return F_d, F_i, nsteps
+    _, _, _, F_d, F_i, _, _, _, nsteps, dhe = out
+    return F_d, F_i, nsteps, dhe
 
 
-@functools.partial(jax.jit, static_argnames=("ef0", "k_schedule"))
-def _search_batched_jit(db, queries, q_low, ef0, k_schedule):
-    return _search_batched_impl(db, queries, q_low, ef0=ef0,
-                                k_schedule=k_schedule)
+@functools.partial(jax.jit, static_argnames=("ef0", "k_schedule",
+                                             "deferred", "rerank_mult"))
+def _search_batched_jit(db, queries, qprep, ef0, k_schedule, deferred,
+                        rerank_mult):
+    return _search_batched_impl(db, queries, qprep, ef0=ef0,
+                                k_schedule=k_schedule, deferred=deferred,
+                                rerank_mult=rerank_mult)
 
 
-def search_batched(db: PackedDB, queries, q_low=None, *, pca=None,
+def search_batched(db: PackedDB, queries, qprep=None, *, pca=None,
+                   filt=None,
                    ef0: Optional[int] = None,
                    k_schedule: Optional[Tuple[int, ...]] = None,
                    entry: Optional[int] = None,
-                   return_stats: bool = False):
+                   return_stats: bool = False,
+                   deferred: Optional[bool] = None,
+                   rerank_mult: Optional[int] = None):
     """Full multi-layer pHNSW search for a batch (jit'd).
     queries: [B, D] (device). Returns (dists [B, ef0], idx [B, ef0]);
-    with ``return_stats=True`` also a dict with per-query expansion-step
-    telemetry: ``steps_per_layer`` [n_layers, B] (top layer first) and
-    ``steps_total`` [B].
+    with ``return_stats=True`` also a dict with per-query telemetry:
+    ``steps_per_layer`` [n_layers, B] (top layer first), ``steps_total``
+    [B] and ``dist_h_evals`` [B] (high-dim distance evaluations — the
+    quantity deferred re-ranking trades recall against).
+
+    ``qprep`` is the active filter's per-query data; leave it None and
+    pass ``filt`` (a ``core.filters.FilterSpec``) or ``pca`` (the
+    PCA-filter convenience, the seed API) to compute it here. The
+    identity filter needs neither.
+
+    ``deferred`` / ``rerank_mult`` select the re-ranking mode (defaults
+    from ``db.cfg.deferred_rerank`` / ``db.cfg.rerank_mult``): deferred
+    traverses on filter distances only and re-ranks the final
+    ``rerank_mult * ef0`` candidates in high dim with ONE batched
+    Dist.H call per query.
 
     ``entry`` overrides the descent entry point (``db.entry`` by
     default). Both the entry and the tombstone bitmap ``db.deleted`` are
     DATA to the compiled program — changing either between calls never
     recompiles."""
-    if q_low is None:
-        q_low = pca.transform_jnp(queries).astype(jnp.float32)
+    if filt is not None and filt.kind != db.filter_kind:
+        raise ValueError(f"filter mismatch: db carries a "
+                         f"{db.filter_kind!r} payload, filt is "
+                         f"{filt.kind!r}")
+    if qprep is None:
+        if filt is not None:
+            qprep = filt.prepare_jnp(queries)
+        elif pca is not None:
+            qprep = pca.transform_jnp(queries).astype(jnp.float32)
+        elif db.filter_kind == "none":
+            qprep = queries[:, :0].astype(jnp.float32)
+        else:
+            raise ValueError("qprep, filt or pca required for the "
+                             f"{db.filter_kind!r} filter")
     if entry is not None:
         db = dataclasses.replace(db, entry=entry)
-    fd, fi, steps = _search_batched_jit(db, queries, q_low,
-                                        ef0 or db.cfg.ef0,
-                                        k_schedule or db.cfg.k_schedule)
+    if deferred is None:
+        deferred = db.cfg.deferred_rerank
+    if rerank_mult is None:
+        rerank_mult = db.cfg.rerank_mult
+    # normalize the no-op combinations BEFORE they key the jit cache:
+    # deferred is defined as a no-op for the identity filter, and
+    # rerank_mult only exists inside deferred mode — without this a
+    # caller varying either knob recompiles a bit-identical program
+    if db.filter_kind == "none":
+        deferred = False
+    if not deferred:
+        rerank_mult = 1
+    fd, fi, steps, dhe = _search_batched_jit(
+        db, queries, qprep, ef0 or db.cfg.ef0,
+        k_schedule or db.cfg.k_schedule, bool(deferred), int(rerank_mult))
     if return_stats:
         return fd, fi, {"steps_per_layer": steps,
-                        "steps_total": steps.sum(axis=0)}
+                        "steps_total": steps.sum(axis=0),
+                        "dist_h_evals": dhe}
     return fd, fi
 
 
-def _search_batched_impl(db: PackedDB, queries, q_low, *,
+def _search_batched_impl(db: PackedDB, queries, qprep, *,
                          ef0: Optional[int] = None,
-                         k_schedule: Optional[Tuple[int, ...]] = None):
+                         k_schedule: Optional[Tuple[int, ...]] = None,
+                         deferred: bool = False, rerank_mult: int = 1):
     """The traced body (also called directly inside shard_map by
     ``core/distributed.py``). The upper routing layers never filter
     tombstones — a deleted node is a fine descent waypoint — the output
-    layer (0) does, iff the db carries a bitmap."""
+    layer (0) does, iff the db carries a bitmap.
+
+    Deferred mode runs the whole descent in filter space (the entry is
+    scored against the payload, every layer traverses on filter
+    distances, layer 0 keeps ``rerank_mult * ef0`` candidates) and
+    finishes with a single batched Dist.H over the final list."""
     cfg = db.cfg
     B = queries.shape[0]
     ks = k_schedule or cfg.k_schedule
     k_of = lambda l: ks[min(l, len(ks) - 1)]
     ep = jnp.broadcast_to(
         jnp.asarray(db.entry, jnp.int32).reshape(()), (B, 1))
-    ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), queries)
+    deferred = deferred and db.filter_kind != "none"
+    if deferred:
+        pay = jnp.take(db.low, ep, axis=0)              # [B, 1, P]
+        if db.filter_kind == "pca":
+            ep_d = ops.dist_l(pay, qprep)
+        else:
+            ep_d = ops.pq_adc(pay, qprep)
+        dhe = jnp.zeros((B,), jnp.int32)
+    else:
+        ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), queries)
+        dhe = jnp.ones((B,), jnp.int32)
     n_layers = len(db.layers)
     steps = []
     for layer in range(n_layers - 1, 0, -1):
-        ep_d, ep, st = search_layer_batched(
-            db, layer, queries, q_low, ep_d, ep,
-            ef=cfg.ef_for_layer(layer), k=k_of(layer))
+        ep_d, ep, st, de = search_layer_batched(
+            db, layer, queries, qprep, ep_d, ep,
+            ef=cfg.ef_for_layer(layer), k=k_of(layer), deferred=deferred)
         steps.append(st)
-    fd, fi, st = search_layer_batched(db, 0, queries, q_low, ep_d, ep,
-                                      ef=ef0 or cfg.ef0, k=k_of(0),
-                                      filter_deleted=db.deleted is not None)
+        dhe = dhe + de
+    ef_out = ef0 or cfg.ef0
+    ef_run = ef_out * rerank_mult if deferred else ef_out
+    fd, fi, st, de = search_layer_batched(
+        db, 0, queries, qprep, ep_d, ep, ef=ef_run, k=k_of(0),
+        filter_deleted=db.deleted is not None, deferred=deferred)
     steps.append(st)
-    return fd, fi, jnp.stack(steps)
+    dhe = dhe + de
+    if deferred:
+        # the deferred high-dim re-rank: ONE batched Dist.H over the
+        # final filter-space list, then a single sort back to ef0
+        ok = fi >= 0
+        xh = jnp.take(db.high, jnp.maximum(fi, 0), axis=0)
+        dh = jnp.where(ok, ops.dist_h(xh, queries), INF)
+        dhe = dhe + ok.sum(axis=1, dtype=jnp.int32)
+        rd, ri = _rank_sort_with_payload(dh, jnp.where(ok, fi, -1))
+        fd, fi = rd[:, :ef_out], ri[:, :ef_out]
+    return fd, fi, jnp.stack(steps), dhe

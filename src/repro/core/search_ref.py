@@ -158,34 +158,47 @@ def search_hnsw(g: HNSWGraph, q: np.ndarray, *, ef0: Optional[int] = None,
 
 
 # ---------------------------------------------------------------------------
-# pHNSW Algorithm 1
+# pHNSW Algorithm 1, generalized over the pluggable filter stage
 # ---------------------------------------------------------------------------
 
-def _phnsw_layer(g: HNSWGraph, x_low: np.ndarray, q: np.ndarray,
-                 q_pca: np.ndarray, eps: List[int], ef: int, k: int,
-                 layer: int, st: SearchStats,
-                 layout: Literal["packed", "separate"],
-                 deleted: Optional[np.ndarray] = None) -> List[Tuple[float, int]]:
+def _filter_layer(g: HNSWGraph, filt, payload: np.ndarray, q: np.ndarray,
+                  qprep: np.ndarray, eps: List[int], ef: int, k: int,
+                  layer: int, st: SearchStats,
+                  layout: Literal["packed", "separate"],
+                  deleted: Optional[np.ndarray] = None,
+                  deferred: bool = False) -> List[Tuple[float, int]]:
+    """One Algorithm-1 layer for any ``core.filters.FilterSpec`` with a
+    real filter stage ("pca"/"pq"; the identity bypass routes through
+    ``_hnsw_layer`` instead).
+
+    Per-step mode (the paper): C/F are keyed on HIGH-dim distances,
+    the filter only prunes which neighbors get re-ranked. ``deferred``
+    keys the whole traversal (C, F, the acceptance bound) on FILTER
+    distances and computes no high-dim distance at all — the caller
+    re-ranks the final list once."""
     adj = g.layers[layer]
     M = adj.shape[1]
     dim = g.x.shape[1]
-    d_low = x_low.shape[1]
+    pb = filt.bytes_per_vec         # layout-(3) inline payload bytes
     live = (lambda e: True) if deleted is None \
         else (lambda e: not deleted[e])
     visited = set(eps)
-    C: List[Tuple[float, int]] = []      # candidate min-heap (high-dim dist)
-    F: List[Tuple[float, int]] = []      # final max-heap (neg high-dim dist)
-    C_pca: List[Tuple[float, int]] = []  # filter-threshold max-heap (neg low-dim)
+    C: List[Tuple[float, int]] = []      # candidate min-heap
+    F: List[Tuple[float, int]] = []      # final max-heap (neg dist)
+    C_pca: List[Tuple[float, int]] = []  # filter-threshold max-heap
     for e in eps:
-        d = _d2(g.x[e], q)
-        st.dist_high += 1
-        st.rand_accesses += 1
-        st.rand_bytes += dim * F32
-        dl = _d2(x_low[e], q_pca)
+        dl = float(filt.dists(qprep, payload[[e]])[0])
         st.dist_low += 1
-        heapq.heappush(C, (d, e))
+        if deferred:
+            key = dl
+        else:
+            key = _d2(g.x[e], q)
+            st.dist_high += 1
+            st.rand_accesses += 1
+            st.rand_bytes += dim * F32
+        heapq.heappush(C, (key, e))
         if live(e):
-            heapq.heappush(F, (-d, e))
+            heapq.heappush(F, (-key, e))
         heapq.heappush(C_pca, (-dl, e))
     while C:
         d_c, c = heapq.heappop(C)
@@ -196,20 +209,20 @@ def _phnsw_layer(g: HNSWGraph, x_low: np.ndarray, q: np.ndarray,
         neigh = adj[c]
         neigh = neigh[neigh >= 0]
         if layout == "packed":
-            # layout (3): indices + low-dim raw data in ONE burst
+            # layout (3): indices + inline payload in ONE burst
             st.seq_bursts += 1
-            st.seq_bytes += M * (IDX_BYTES + d_low * F32)
+            st.seq_bytes += M * (IDX_BYTES + pb)
         else:
-            # layout (4): index burst + M irregular low-dim fetches
+            # layout (4): index burst + M irregular payload fetches
             st.seq_bursts += 1
             st.seq_bytes += M * IDX_BYTES
             st.rand_accesses += len(neigh)
-            st.rand_bytes += len(neigh) * d_low * F32
+            st.rand_bytes += len(neigh) * pb
         if len(neigh) == 0:
             continue
-        # ---- step 2: low-dim distances + top-k filter (lines 10-13) ----
+        # ---- step 2: filter distances + top-k filter (lines 10-13) ----
         nl = [int(e) for e in neigh]
-        dls = _d2_rows(x_low[nl], q_pca)
+        dls = filt.dists(qprep, payload[nl])
         st.dist_low += len(nl)
         # threshold is only meaningful once the k-bounded heap is full
         f_pca = -C_pca[0][0] if len(C_pca) >= k else np.inf
@@ -217,54 +230,102 @@ def _phnsw_layer(g: HNSWGraph, x_low: np.ndarray, q: np.ndarray,
         st.ksort_calls += 1                           # kSort.L, 7 cycles
         keep.sort()                                   # deterministic top-k
         topk = keep[:k]
-        # ---- step 3: high-dim re-rank of the k survivors (lines 15-23) --
+        # ---- step 3: the k survivors — high-dim re-rank per step, or
+        # filter-space acceptance when deferred (lines 15-23) ----
         for dl_m, m in topk:
             st.visit_checks += 1
             if m in visited:
                 continue
             visited.add(m)
-            st.rand_accesses += 1                     # high-dim fetch
-            st.rand_bytes += dim * F32
-            d_m = _d2(g.x[m], q)
-            st.dist_high += 1
-            st.minh_calls += 1
+            if deferred:
+                key_m = dl_m
+            else:
+                st.rand_accesses += 1                 # high-dim fetch
+                st.rand_bytes += dim * F32
+                key_m = _d2(g.x[m], q)
+                st.dist_high += 1
+                st.minh_calls += 1
             d_f = -F[0][0] if F else np.inf
-            if d_m < d_f or len(F) < ef:
-                heapq.heappush(C, (d_m, m))
+            if key_m < d_f or len(F) < ef:
+                heapq.heappush(C, (key_m, m))
                 if live(m):
-                    heapq.heappush(F, (-d_m, m))
+                    heapq.heappush(F, (-key_m, m))
                     st.f_updates += 1
                     if len(F) > ef:
                         heapq.heappop(F)
                         st.evictions += 1
-                # C_pca_tmp: bounded-k low-dim threshold heap (line 20/24)
+                # C_pca_tmp: bounded-k filter threshold heap (line 20/24)
                 heapq.heappush(C_pca, (-dl_m, m))
                 if len(C_pca) > k:
                     heapq.heappop(C_pca)
     return sorted([(-d, e) for d, e in F])
 
 
-def search_phnsw(g: HNSWGraph, x_low: np.ndarray, pca: PCA, q: np.ndarray,
-                 *, layout: Literal["packed", "separate"] = "packed",
-                 k_schedule: Optional[Tuple[int, ...]] = None,
-                 ef0: Optional[int] = None,
-                 deleted: Optional[np.ndarray] = None
-                 ) -> Tuple[np.ndarray, SearchStats]:
+def search_filtered(g: HNSWGraph, filt, payload: Optional[np.ndarray],
+                    q: np.ndarray, *,
+                    layout: Literal["packed", "separate"] = "packed",
+                    k_schedule: Optional[Tuple[int, ...]] = None,
+                    ef0: Optional[int] = None,
+                    deleted: Optional[np.ndarray] = None,
+                    deferred: bool = False, rerank_mult: int = 1
+                    ) -> Tuple[np.ndarray, SearchStats]:
+    """Reference search under any filter x rerank combination — the
+    host oracle the batched engine is tested against.
+
+    ``payload = filt.encode(x)`` is passed in (encoded once per
+    database, like the graph). The identity filter routes to the plain
+    HNSW traversal (its 'filter distance' IS the high-dim distance, so
+    deferred mode is a no-op). Deferred mode widens the layer-0 result
+    list to ``rerank_mult * ef0`` filter-space candidates, then
+    re-ranks them with high-dim distances in one batch."""
     cfg = g.cfg
+    if filt.kind == "none":
+        return search_hnsw(g, q, ef0=ef0, deleted=deleted)
     st = SearchStats()
-    q_pca = pca.transform(q[None])[0].astype(np.float32)
+    qprep = filt.prepare(q[None])[0]
     ks = k_schedule or cfg.k_schedule
     k_of = lambda l: ks[min(l, len(ks) - 1)]
     ep = [g.entry]
     top = int(g.levels.max())
     for layer in range(top, 0, -1):
-        res = _phnsw_layer(g, x_low, q, q_pca, ep, cfg.ef_for_layer(layer),
-                           k_of(layer), layer, st, layout)
+        res = _filter_layer(g, filt, payload, q, qprep, ep,
+                            cfg.ef_for_layer(layer), k_of(layer), layer,
+                            st, layout, deferred=deferred)
         ep = [res[0][1]]
     # tombstones filter only at the output layer (upper layers route)
-    res = _phnsw_layer(g, x_low, q, q_pca, ep, ef0 or cfg.ef0, k_of(0), 0,
-                       st, layout, deleted=deleted)
-    return np.array([e for _, e in res], np.int64), st
+    ef_out = ef0 or cfg.ef0
+    ef_run = ef_out * rerank_mult if deferred else ef_out
+    res = _filter_layer(g, filt, payload, q, qprep, ep, ef_run, k_of(0),
+                        0, st, layout, deleted=deleted, deferred=deferred)
+    ids = np.array([e for _, e in res], np.int64)
+    if deferred and len(ids):
+        # the deferred high-dim re-rank: ONE batch of Dist.H over the
+        # final filter-space list (stable sort keeps the filter order
+        # on exact ties, mirroring the batched engine's slot order)
+        dim = g.x.shape[1]
+        dh = _d2_rows(g.x[ids], q)
+        st.dist_high += len(ids)
+        st.rand_accesses += len(ids)
+        st.rand_bytes += len(ids) * dim * F32
+        ids = ids[np.argsort(dh, kind="stable")][:ef_out]
+    return ids, st
+
+
+def search_phnsw(g: HNSWGraph, x_low: np.ndarray, pca: PCA, q: np.ndarray,
+                 *, layout: Literal["packed", "separate"] = "packed",
+                 k_schedule: Optional[Tuple[int, ...]] = None,
+                 ef0: Optional[int] = None,
+                 deleted: Optional[np.ndarray] = None,
+                 deferred: bool = False, rerank_mult: int = 1
+                 ) -> Tuple[np.ndarray, SearchStats]:
+    """The seed API: pHNSW with the paper's PCA filter (a thin wrapper
+    over ``search_filtered``)."""
+    from repro.core.filters import PCAFilter
+    filt = PCAFilter(pca, low_dtype=g.cfg.low_dtype)
+    return search_filtered(g, filt, x_low, q, layout=layout,
+                           k_schedule=k_schedule, ef0=ef0,
+                           deleted=deleted, deferred=deferred,
+                           rerank_mult=rerank_mult)
 
 
 # ---------------------------------------------------------------------------
@@ -279,8 +340,13 @@ def recall_at(found: np.ndarray, truth: np.ndarray, at: int) -> float:
 def run_queries(g: HNSWGraph, queries: np.ndarray, truth: np.ndarray,
                 *, algo: str = "phnsw", x_low=None, pca=None,
                 layout="packed", k_schedule=None, hw_mode: bool = False,
-                deleted: Optional[np.ndarray] = None):
-    """Run all queries; returns (mean recall@cfg.recall_at, total stats)."""
+                deleted: Optional[np.ndarray] = None,
+                filt=None, payload=None, deferred: bool = False,
+                rerank_mult: int = 1):
+    """Run all queries; returns (mean recall@cfg.recall_at, total
+    stats). ``algo="filtered"`` (with ``filt``/``payload``) runs the
+    generalized filter x rerank oracle; "phnsw"/"hnsw" keep the seed
+    behavior."""
     cfg = g.cfg
     tot = SearchStats()
     recs = []
@@ -288,10 +354,18 @@ def run_queries(g: HNSWGraph, queries: np.ndarray, truth: np.ndarray,
         if algo == "hnsw":
             found, st = search_hnsw(g, q, hw_mode=hw_mode,
                                     deleted=deleted)
+        elif algo == "filtered":
+            found, st = search_filtered(g, filt, payload, q,
+                                        layout=layout,
+                                        k_schedule=k_schedule,
+                                        deleted=deleted,
+                                        deferred=deferred,
+                                        rerank_mult=rerank_mult)
         else:
             found, st = search_phnsw(g, x_low, pca, q, layout=layout,
                                      k_schedule=k_schedule,
-                                     deleted=deleted)
+                                     deleted=deleted, deferred=deferred,
+                                     rerank_mult=rerank_mult)
         tot.add(st)
         recs.append(recall_at(found, truth[i], cfg.recall_at))
     return float(np.mean(recs)), tot

@@ -50,12 +50,22 @@ import jax.numpy as jnp
 
 from repro.configs.base import PHNSWConfig
 from repro.constants import VALID_MAX
+from repro.core.filters import (FilterSpec, IdentityFilter, PCAFilter,
+                                PQFilter, make_filter)
 from repro.core.graph import (HNSWGraph, _select_heuristic, add_link,
                               build_hnsw, sample_levels)
 from repro.core.pca import PCA, fit_pca
+from repro.core.pq import PQCodebook
 from repro.core.search_jax import (PackedDB, PackedLayer, search_batched,
                                    search_layer_batched)
 from repro.kernels import ops
+
+
+def _as_filter(f, cfg: PHNSWConfig) -> FilterSpec:
+    """Adopt a bare ``PCA`` (the seed API) as a ``PCAFilter``."""
+    if isinstance(f, PCA):
+        return PCAFilter(f, low_dtype=cfg.low_dtype)
+    return f
 
 
 def _next_pow2(n: int, floor: int) -> int:
@@ -92,7 +102,7 @@ def _pad_rows_pow2(rows: np.ndarray) -> np.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("ef", "k"))
-def _probe_jit(db, queries, q_low, ef, k):
+def _probe_jit(db, queries, qprep, ef, k):
     """On-device neighborhood probe for a batch of to-be-inserted
     vectors: the serving traversal run at every layer with the
     construction beam (ef = ef_construction), each layer's full top-ef
@@ -106,8 +116,8 @@ def _probe_jit(db, queries, q_low, ef, k):
     ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), queries)
     out_d, out_i = [], []
     for layer in range(len(db.layers) - 1, -1, -1):
-        fd, fi, _ = search_layer_batched(
-            db, layer, queries, q_low, ep_d, ep, ef=ef, k=k,
+        fd, fi, _, _ = search_layer_batched(
+            db, layer, queries, qprep, ep_d, ep, ef=ef, k=k,
             max_steps=2 * ef + 16, filter_deleted=True)
         out_d.append(fd)
         out_i.append(fi)
@@ -133,11 +143,17 @@ class MutableIndex:
                  deleted: Optional[np.ndarray] = None, *, seed: int = 0,
                  epoch: int = 0):
         """Build from UNPADDED arrays ([n] rows); pads to capacity and
-        publishes. Prefer the ``from_graph`` / ``build`` / ``load``
-        classmethods."""
+        publishes. ``pca`` may be a bare ``PCA`` (the seed API) or any
+        ``FilterSpec``; ``x_low`` is that filter's payload rows.
+        Prefer the ``from_graph`` / ``build`` / ``load`` classmethods."""
         n = len(x)
         cap = _next_pow2(n, cfg.min_capacity)
-        self.cfg, self.pca = cfg, pca
+        self.cfg = cfg
+        self.filt = _as_filter(pca, cfg)
+        # PCA-filter convenience (drift checks, seed callers); None for
+        # the other filter kinds
+        self.pca = self.filt.pca if isinstance(self.filt, PCAFilter) \
+            else None
         self.n, self.cap = n, cap
         self.entry = int(entry)
         self.epoch = epoch
@@ -145,7 +161,10 @@ class MutableIndex:
         D, dl = x.shape[1], x_low.shape[1]
         self.x = np.zeros((cap, D), np.float32)
         self.x[:n] = x
-        self.x_low = np.zeros((cap, dl), np.float32)
+        # host mirror of the filter payload (dtype is the filter's:
+        # f32 low-dim rows for PCA, uint8 codes for PQ, width 0 for
+        # identity); the name survives from the PCA-only engine
+        self.x_low = np.zeros((cap, dl), self.filt.payload_dtype)
         self.x_low[:n] = x_low
         self.levels = np.full(cap, -1, np.int64)
         self.levels[:n] = levels
@@ -166,20 +185,23 @@ class MutableIndex:
         self._publish_full()
 
     @classmethod
-    def from_graph(cls, g: HNSWGraph, pca: PCA, *, seed: int = 0
+    def from_graph(cls, g: HNSWGraph, pca, *, seed: int = 0
                    ) -> "MutableIndex":
-        """Adopt a one-shot ``build_hnsw`` graph as the mutable seed."""
-        x_low = pca.transform(g.x).astype(np.float32)
-        return cls(g.cfg, pca, g.x, x_low, g.levels, g.layers, g.entry,
+        """Adopt a one-shot ``build_hnsw`` graph as the mutable seed.
+        ``pca``: a fitted ``PCA`` or any ``FilterSpec``."""
+        filt = _as_filter(pca, g.cfg)
+        x_low = filt.encode(g.x)
+        return cls(g.cfg, filt, g.x, x_low, g.levels, g.layers, g.entry,
                    seed=seed)
 
     @classmethod
     def build(cls, x: np.ndarray, cfg: PHNSWConfig, *, seed: int = 0
               ) -> "MutableIndex":
-        """Fit PCA + host-build the seed graph + adopt it."""
-        pca = fit_pca(x, cfg.d_low)
+        """Fit the configured filter + host-build the seed graph +
+        adopt it."""
+        filt = make_filter(cfg, x, seed=seed)
         g = build_hnsw(x, cfg, seed=seed)
-        return cls.from_graph(g, pca, seed=seed + 1)
+        return cls.from_graph(g, filt, seed=seed + 1)
 
     # ------------------------------------------------------------------
     # device publication (epoch-versioned, functional)
@@ -194,10 +216,19 @@ class MutableIndex:
         packed[a < 0] = 0.0
         return packed
 
+    @property
+    def _dev_payload_dtype(self):
+        """Device storage dtype of the filter payload: cfg.low_dtype
+        for PCA (the bf16 layout-(3) option), the payload's own dtype
+        (uint8 codes / zero-width f32) otherwise."""
+        if self.filt.kind == "pca":
+            return jnp.dtype(self.cfg.low_dtype)
+        return jnp.dtype(self.x_low.dtype)
+
     def _publish_full(self) -> None:
         """Rebuild every device buffer (init / growth / compaction /
         top-layer change — anything that changes shapes or layer count)."""
-        dt = jnp.dtype(self.cfg.low_dtype)
+        dt = self._dev_payload_dtype
         n_pub = self.top + 1
         all_rows = np.arange(self.cap)
         self._dev_adj = [jnp.asarray(self.adj[l]) for l in range(n_pub)]
@@ -212,10 +243,12 @@ class MutableIndex:
                              deleted_ids: Optional[np.ndarray] = None
                              ) -> None:
         """Refresh only what changed: new vector rows, dirty adjacency
-        rows (+ their inline packed vectors), and exactly the tombstone
+        rows (+ their inline packed payload), and exactly the tombstone
         words whose bits flipped (``new_ids`` clear their pad-slot bits;
-        ``deleted_ids`` set theirs)."""
-        dt = jnp.dtype(self.cfg.low_dtype)
+        ``deleted_ids`` set theirs). Payload refresh is filter-generic:
+        whatever rows the active filter owns (low-dim vectors, PQ
+        codes) are re-gathered for the dirty adjacency rows."""
+        dt = self._dev_payload_dtype
         if len(new_ids):
             rows = _pad_rows_pow2(np.asarray(new_ids))
             self._dev_high = self._dev_high.at[rows].set(
@@ -252,7 +285,8 @@ class MutableIndex:
         self.epoch += 1
         self._db = PackedDB(layers=layers, low=self._dev_low,
                             high=self._dev_high, entry=self.entry,
-                            cfg=self.cfg, deleted=self._dev_deleted)
+                            cfg=self.cfg, deleted=self._dev_deleted,
+                            filter_kind=self.filt.kind)
 
     @property
     def db(self) -> PackedDB:
@@ -311,7 +345,8 @@ class MutableIndex:
         self.x = np.concatenate(
             [self.x, np.zeros((pad, self.x.shape[1]), np.float32)])
         self.x_low = np.concatenate(
-            [self.x_low, np.zeros((pad, self.x_low.shape[1]), np.float32)])
+            [self.x_low, np.zeros((pad, self.x_low.shape[1]),
+                                  self.x_low.dtype)])
         self.levels = np.concatenate(
             [self.levels, np.full(pad, -1, np.int64)])
         self.deleted = np.concatenate([self.deleted, np.ones(pad, bool)])
@@ -328,20 +363,19 @@ class MutableIndex:
             grew = True
         ids = np.arange(self.n, self.n + b)
         lvls = sample_levels(b, self.cfg, self.rng)
-        xl = self.pca.transform(xb).astype(np.float32)
+        xl = self.filt.encode(xb)
 
         # --- on-device neighborhood probe (pre-batch snapshot; padded
         # to the fixed probe width so the compiled program is reused) ---
         bb = self.cfg.insert_batch
-        qx, ql = xb, xl
+        qx = xb
         if b < bb:
             qx = np.concatenate(
                 [qx, np.broadcast_to(self.x[self.entry], (bb - b,
                                                           qx.shape[1]))])
-            ql = np.concatenate(
-                [ql, np.broadcast_to(self.x_low[self.entry],
-                                     (bb - b, ql.shape[1]))])
-        fd, fi = _probe_jit(self._db, jnp.asarray(qx), jnp.asarray(ql),
+        qprep = self.filt.prepare(qx)
+        fd, fi = _probe_jit(self._db, jnp.asarray(qx),
+                            jnp.asarray(qprep),
                             self.cfg.ef_construction,
                             self.cfg.ef_construction_k)
         fd, fi = np.asarray(fd), np.asarray(fi)      # [Lpub, bb, efc]
@@ -482,7 +516,7 @@ class MutableIndex:
             adj.append(A.astype(np.int32))
         lv_top = int(levels.max())
         entry_cands = np.nonzero(levels == lv_top)[0]
-        self.__init__(self.cfg, self.pca, x, x_low, levels, adj,
+        self.__init__(self.cfg, self.filt, x, x_low, levels, adj,
                       int(entry_cands[0]), seed=int(
                           self.rng.integers(0, 2**31 - 1)),
                       epoch=self.epoch)
@@ -496,7 +530,14 @@ class MutableIndex:
         """How much variance of the LIVE distribution the frozen
         projection still captures, vs. what it captured at fit time.
         A large drop means inserts moved the data manifold and the
-        low-dim filter is losing selectivity — refit offline."""
+        low-dim filter is losing selectivity — refit offline.
+        Only meaningful for the PCA filter; other kinds report no
+        drift (their refit criteria live elsewhere)."""
+        if self.pca is None:
+            return {"captured_live": None, "captured_fit": None,
+                    "drift": 0.0, "refit_recommended": False,
+                    "note": f"drift check n/a for filter "
+                            f"{self.filt.kind!r}"}
         live = ~self.deleted[:self.n]
         xc = self.x[:self.n][live] - self.pca.mean
         tot = float((xc * xc).sum())
@@ -515,20 +556,27 @@ class MutableIndex:
     def search(self, queries: np.ndarray, **kw):
         """Convenience: batched search over the current epoch."""
         return search_batched(self._db, jnp.asarray(queries),
-                              pca=self.pca, **kw)
+                              filt=self.filt, **kw)
 
     def save(self, path) -> None:
-        """Snapshot the whole index (graph + vectors + tombstones + PCA)
-        to one npz."""
+        """Snapshot the whole index (graph + vectors + tombstones +
+        filter payload + filter parameters) to one npz."""
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
+        fk = self.filt.kind
+        filt_arrays = {}
+        if fk == "pca":
+            filt_arrays = dict(pca_mean=self.pca.mean,
+                               pca_components=self.pca.components,
+                               pca_explained=self.pca.explained)
+        elif fk == "pq":
+            filt_arrays = dict(pq_centroids=self.filt.cb.centroids)
         np.savez_compressed(
             path, n=self.n, entry=self.entry, epoch=self.epoch,
-            n_layers=self.cfg.n_layers,
+            n_layers=self.cfg.n_layers, filter_kind=fk,
             x=self.x[:self.n], x_low=self.x_low[:self.n],
             levels=self.levels[:self.n], deleted=self.deleted[:self.n],
-            pca_mean=self.pca.mean, pca_components=self.pca.components,
-            pca_explained=self.pca.explained,
+            **filt_arrays,
             **{f"adj{l}": self.adj[l][:self.n]
                for l in range(self.cfg.n_layers)})
 
@@ -536,10 +584,18 @@ class MutableIndex:
     def load(cls, path, cfg: PHNSWConfig, *, seed: int = 0
              ) -> "MutableIndex":
         z = np.load(path)
-        pca = PCA(mean=z["pca_mean"], components=z["pca_components"],
-                  explained=z["pca_explained"])
+        fk = str(z["filter_kind"]) if "filter_kind" in z else "pca"
+        if fk == "pca":
+            filt = PCAFilter(
+                PCA(mean=z["pca_mean"], components=z["pca_components"],
+                    explained=z["pca_explained"]),
+                low_dtype=cfg.low_dtype)
+        elif fk == "pq":
+            filt = PQFilter(PQCodebook(centroids=z["pq_centroids"]))
+        else:
+            filt = IdentityFilter(dim=z["x"].shape[1])
         n_layers = int(z["n_layers"])
-        idx = cls(cfg, pca, z["x"], z["x_low"], z["levels"],
+        idx = cls(cfg, filt, z["x"], z["x_low"], z["levels"],
                   [z[f"adj{l}"] for l in range(n_layers)],
                   int(z["entry"]), deleted=z["deleted"], seed=seed,
                   epoch=int(z["epoch"]))

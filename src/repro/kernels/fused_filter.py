@@ -15,11 +15,13 @@ from jax.experimental import pallas as pl
 from repro.constants import INF
 
 
-def _fused_kernel(x_ref, q_ref, val_ref, idx_ref, *, k: int):
-    x = x_ref[...].astype(jnp.float32)                   # [bb, M, dl]
-    q = q_ref[...].astype(jnp.float32)                   # [bb, dl]
-    diff = x - q[:, None, :]
-    d = jnp.sum(diff * diff, axis=-1)                    # [bb, M] (Dist.L)
+def ksort_block(d, k: int):
+    """The comparison-matrix kSort.L as a kernel-body building block:
+    d [bb, M] -> (vals [bb, k] ascending, idx [bb, k]), ties -> lower
+    index. One definition shared by every fused kernel (here and
+    ``pq_adc.py``) — ``merge_topk_sorted``'s determinism depends on
+    this exact (dist, index) lexicographic order, so there must be a
+    single site to keep correct."""
     bb, M = d.shape
     ii = jax.lax.broadcasted_iota(jnp.int32, (M, M), 0)
     jj = jax.lax.broadcasted_iota(jnp.int32, (M, M), 1)
@@ -29,8 +31,17 @@ def _fused_kernel(x_ref, q_ref, val_ref, idx_ref, *, k: int):
     kk = jax.lax.broadcasted_iota(jnp.int32, (1, M, k), 2)
     onehot = rank[:, :, None] == kk
     im = jax.lax.broadcasted_iota(jnp.int32, (1, M, k), 1)
-    val_ref[...] = jnp.sum(jnp.where(onehot, d[:, :, None], 0.0), axis=1)
-    idx_ref[...] = jnp.sum(jnp.where(onehot, im, 0), axis=1).astype(jnp.int32)
+    vals = jnp.sum(jnp.where(onehot, d[:, :, None], 0.0), axis=1)
+    idx = jnp.sum(jnp.where(onehot, im, 0), axis=1).astype(jnp.int32)
+    return vals, idx
+
+
+def _fused_kernel(x_ref, q_ref, val_ref, idx_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)                   # [bb, M, dl]
+    q = q_ref[...].astype(jnp.float32)                   # [bb, dl]
+    diff = x - q[:, None, :]
+    d = jnp.sum(diff * diff, axis=-1)                    # [bb, M] (Dist.L)
+    val_ref[...], idx_ref[...] = ksort_block(d, k)
 
 
 def fused_filter_pallas(x, q, k: int, *, block_b: int = 8,
@@ -74,17 +85,7 @@ def _fused_expand_kernel(x_ref, q_ref, valid_ref, th_ref, val_ref, idx_ref,
     diff = x - q[:, None, :]
     d = jnp.sum(diff * diff, axis=-1)                    # Dist.L
     d = jnp.where(valid & (d < th), d, INF)              # filter
-    bb, M = d.shape
-    ii = jax.lax.broadcasted_iota(jnp.int32, (M, M), 0)
-    jj = jax.lax.broadcasted_iota(jnp.int32, (M, M), 1)
-    cmp = (d[:, :, None] > d[:, None, :]) \
-        | ((d[:, :, None] == d[:, None, :]) & (ii > jj)[None])
-    rank = jnp.sum(cmp.astype(jnp.int32), axis=-1)       # kSort.L
-    kk = jax.lax.broadcasted_iota(jnp.int32, (1, M, k), 2)
-    onehot = rank[:, :, None] == kk
-    im = jax.lax.broadcasted_iota(jnp.int32, (1, M, k), 1)
-    val_ref[...] = jnp.sum(jnp.where(onehot, d[:, :, None], 0.0), axis=1)
-    idx_ref[...] = jnp.sum(jnp.where(onehot, im, 0), axis=1).astype(jnp.int32)
+    val_ref[...], idx_ref[...] = ksort_block(d, k)       # kSort.L
 
 
 def fused_expand_pallas(x, q, valid, th, k: int, *, block_b: int = 8,

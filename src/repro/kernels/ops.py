@@ -22,6 +22,7 @@ from repro.kernels.ksort_l import ksort_l_pallas
 from repro.kernels.dist_h import dist_h_pallas
 from repro.kernels.fused_filter import fused_expand_pallas, fused_filter_pallas
 from repro.kernels.merge_sorted import merge_sorted_pallas
+from repro.kernels.pq_adc import pq_adc_expand_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 
@@ -131,6 +132,36 @@ def fused_expand(x, q, valid, th, k: int):
     v, i = fused_expand_pallas(xp, qp, vp, tp, k, block_b=bb,
                                interpret=_interpret())
     return v[:B], i[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def pq_adc_expand(codes, lut, valid, th, k: int):
+    """One traversal expansion's PQ filter stage (ADC gather-accumulate
+    + validity mask + C_pca threshold + kSort.L) in a single kernel —
+    the PQ analogue of ``fused_expand``.
+    codes: [B, M, S] integer PQ codes; lut: [B, S, 256] f32; valid:
+    [B, M] bool; th: [B] f32. Returns (vals [B, k] ascending, idx
+    [B, k]); filtered-out slots get vals >= constants.VALID_MAX."""
+    if _use_ref():
+        return ref.pq_adc_expand_ref(codes, lut, valid, th, k)
+    B, M, S = codes.shape
+    # the one-hot ADC contraction holds [bb, M, S, 256] in VMEM
+    bb = _pick_block_b(B, M * S * 256 + M * M)
+    cp, _ = _pad_batch(codes.astype(jnp.int32), bb)
+    lp, _ = _pad_batch(lut.astype(jnp.float32), bb)
+    vp, _ = _pad_batch(valid.astype(jnp.int32), bb)
+    tp, _ = _pad_batch(th[:, None].astype(jnp.float32), bb)
+    v, i = pq_adc_expand_pallas(cp, lp, vp, tp, k, block_b=bb,
+                                interpret=_interpret())
+    return v[:B], i[:B]
+
+
+@jax.jit
+def pq_adc(codes, lut):
+    """Plain batched ADC distances (no mask/sort): codes [B, K, S],
+    lut [B, S, 256] -> [B, K] f32. Used for entry-point scoring in
+    deferred-rerank traversal; tiny, so it always runs the jnp oracle."""
+    return ref.pq_adc_ref(codes, lut)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

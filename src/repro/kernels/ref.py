@@ -78,6 +78,32 @@ def fused_expand_ref(x, q, valid, th, k: int):
     return ksort_l_ref(d, k)
 
 
+def pq_adc_ref(codes, lut):
+    """Asymmetric-distance computation (the PQ filter's Dist.L):
+    d[b, m] = sum_s lut[b, s, codes[b, m, s]].
+
+    codes: [B, M, S] integer PQ codes; lut: [B, S, 256] f32 per-query
+    ADC tables -> [B, M] f32 approximate squared distances. The oracle
+    gathers (definitional); the Pallas kernel uses the gather-free
+    one-hot contraction (masked 0.0 lanes never change the sum; only
+    f32 association order can differ)."""
+    B, M, S = codes.shape
+    ct = jnp.transpose(codes.astype(jnp.int32), (0, 2, 1))     # [B, S, M]
+    picked = jnp.take_along_axis(lut.astype(jnp.float32), ct, axis=2)
+    return jnp.sum(jnp.transpose(picked, (0, 2, 1)), axis=-1)  # [B, M]
+
+
+def pq_adc_expand_ref(codes, lut, valid, th, k: int):
+    """The PQ filter's whole expansion step (ADC + adjacency/active
+    masking + C_pca threshold + kSort.L) — the PQ analogue of
+    ``fused_expand_ref``. codes: [B, M, S]; lut: [B, S, 256]; valid:
+    [B, M] bool; th: [B] f32. Returns (vals [B, k] ascending, idx
+    [B, k]); non-survivors carry vals >= VALID_MAX."""
+    d = pq_adc_ref(codes, lut)
+    d = jnp.where(valid & (d < th[:, None]), d, INF)
+    return ksort_l_ref(d, k)
+
+
 def merge_topk_sorted_ref(d_a, i_a, d_b, i_b, k: int):
     """Merge two ASCENDING-sorted (dist, idx) lists, keep the k smallest
     — the O((Na+k)·Nb) frontier merge (Nb = k small), vs concat +

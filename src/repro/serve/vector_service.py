@@ -27,6 +27,7 @@ from typing import List, Optional, Tuple, Union
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core.filters import FilterSpec, IdentityFilter, PCAFilter
 from repro.core.pca import PCA
 from repro.core.search_jax import PackedDB, search_batched
 from repro.index import MutableIndex
@@ -53,17 +54,29 @@ class ServiceStats:
 class VectorSearchService:
     def __init__(self, db: Union[PackedDB, MutableIndex],
                  pca: Optional[PCA] = None, *, batch_size: int = 64,
-                 ef0: Optional[int] = None):
+                 ef0: Optional[int] = None,
+                 filt: Optional[FilterSpec] = None):
+        """``filt`` (any ``core.filters.FilterSpec``) generalizes the
+        seed's ``pca`` argument; a MutableIndex brings its own filter.
+        A frozen identity-filter PackedDB needs neither."""
         if isinstance(db, MutableIndex):
             self.index: Optional[MutableIndex] = db
             self.db = db.db
-            pca = pca or db.pca
+            filt = filt or db.filt
         else:
             self.index = None
             self.db = db
-        if pca is None:
-            raise ValueError("pca is required when serving a PackedDB")
-        self.pca = pca
+        if filt is None:
+            if pca is not None:
+                filt = PCAFilter(pca, low_dtype=self.db.cfg.low_dtype)
+            elif self.db.filter_kind == "none":
+                filt = IdentityFilter(dim=self.db.high.shape[1])
+            else:
+                raise ValueError("filt (or pca) is required when "
+                                 "serving a PackedDB with the "
+                                 f"{self.db.filter_kind!r} filter")
+        self.filt = filt
+        self.pca = filt.pca if isinstance(filt, PCAFilter) else pca
         self.batch = batch_size
         self.ef0 = ef0 or self.db.cfg.ef0
         self.epoch = self.index.epoch if self.index else 0
@@ -122,9 +135,9 @@ class VectorSearchService:
     # ------------------------------------------------------------------
 
     def _run(self, q: np.ndarray):
-        ql = self.pca.transform(q).astype(np.float32)
-        fd, fi = search_batched(self.db, jnp.asarray(q), jnp.asarray(ql),
-                                ef0=self.ef0)
+        qprep = self.filt.prepare(q)
+        fd, fi = search_batched(self.db, jnp.asarray(q),
+                                jnp.asarray(qprep), ef0=self.ef0)
         return np.asarray(fd), np.asarray(fi)
 
     def query(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:

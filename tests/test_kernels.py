@@ -16,6 +16,7 @@ from repro.kernels.ksort_l import ksort_l_pallas
 from repro.kernels.dist_h import dist_h_pallas
 from repro.kernels.fused_filter import fused_expand_pallas, fused_filter_pallas
 from repro.kernels.merge_sorted import merge_sorted_pallas
+from repro.kernels.pq_adc import pq_adc_expand_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 
@@ -99,6 +100,58 @@ def test_fused_expand_masks_and_threshold():
         kept = np.asarray(i[b])[got_surv[b]]
         assert set(kept.tolist()) == set(np.where(surv[b])[0].tolist())
         assert np.all(np.diff(np.asarray(v[b])[got_surv[b]]) >= 0)
+
+
+def test_pq_adc_bit_equality_vs_numpy():
+    """The fused ADC kernel (one-hot gather-accumulate, interpret mode)
+    is BIT-EQUAL to the plain numpy ADC (`core.pq.adc_distances`) on
+    exactly-representable table values — the satellite acceptance for
+    the on-device PQ path. Integer-valued f32 tables make every
+    accumulation order exact, so any mismatch is a real indexing bug,
+    not summation noise."""
+    from repro.core.pq import adc_distances
+    B, M, S = 8, 32, 16
+    lut = jnp.asarray(RNG.integers(0, 1 << 16, (B, S, 256)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(0, 256, (B, M, S)), jnp.int32)
+    valid = jnp.ones((B, M), jnp.int32)
+    th = jnp.full((B, 1), ref.INF, jnp.float32)
+    v, i = pq_adc_expand_pallas(codes, lut, valid, th, M, block_b=8,
+                                interpret=True)
+    # numpy oracle: per query, ADC every code row then sort (ties -> idx)
+    for b in range(B):
+        want = adc_distances(np.asarray(lut[b]), np.asarray(codes[b]))
+        order = np.lexsort((np.arange(M), want))
+        np.testing.assert_array_equal(np.asarray(i[b]), order)
+        np.testing.assert_array_equal(np.asarray(v[b]), want[order])
+
+
+@pytest.mark.parametrize("B,M,S,k", [(8, 32, 16, 16), (8, 16, 8, 3),
+                                     (16, 64, 4, 8)])
+def test_pq_adc_expand_sweep(B, M, S, k):
+    """Fused PQ ADC expand kernel == jnp oracle across shapes, with
+    masking and thresholds active."""
+    lut = jnp.abs(rnd((B, S, 256), scale=2.0))
+    codes = jnp.asarray(RNG.integers(0, 256, (B, M, S)), jnp.int32)
+    valid = jnp.asarray(RNG.integers(0, 2, (B, M)), jnp.int32)
+    th = jnp.asarray(
+        np.where(RNG.random(B) < 0.5, float(S), ref.INF), jnp.float32)
+    v1, i1 = pq_adc_expand_pallas(codes, lut, valid, th[:, None], k,
+                                  block_b=8, interpret=True)
+    v0, i0 = ref.pq_adc_expand_ref(codes, lut, valid.astype(bool), th, k)
+    np.testing.assert_allclose(v1, v0, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(i1, i0)
+
+
+def test_pq_adc_ref_matches_numpy():
+    """The jnp ADC oracle (take_along_axis form) == core.pq's numpy
+    ADC on random float tables."""
+    from repro.core.pq import adc_distances
+    B, M, S = 4, 12, 8
+    lut = np.abs(RNG.standard_normal((B, S, 256))).astype(np.float32)
+    codes = RNG.integers(0, 256, (B, M, S)).astype(np.int32)
+    got = np.asarray(ref.pq_adc_ref(jnp.asarray(codes), jnp.asarray(lut)))
+    want = np.stack([adc_distances(lut[b], codes[b]) for b in range(B)])
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
 
 
 @pytest.mark.parametrize("Na,Nb,k", [(36, 16, 36), (10, 16, 10),
