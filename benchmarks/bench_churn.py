@@ -28,17 +28,29 @@ import numpy as np
 from benchmarks.common import emit, load_bench_db
 from repro.core.search_ref import recall_at
 from repro.data.vectors import make_sift_like
-from repro.index import MutableIndex
+from repro.index import MutableIndex, ShardedMutableIndex
 from repro.serve.vector_service import VectorSearchService
 
 
 def main(n_points: int = 8_000, n_queries: int = 64, rounds: int = 8,
-         batch: int = 64, json_path: Optional[str] = None):
+         batch: int = 64, json_path: Optional[str] = None,
+         n_shards: int = 1):
+    """``n_shards > 1`` runs the identical workload against a
+    ``ShardedMutableIndex`` (round-robin upsert routing, owner-offset
+    delete routing, stacked-snapshot republish per mutation) through
+    the same serving front."""
     cfg, x, g, pca, x_low, q, gt = load_bench_db(n_points, n_queries)
-    idx = MutableIndex.from_graph(g, pca, seed=1)
     # fresh vectors from the same generator family, disjoint seed
     fresh = make_sift_like(rounds * cfg.insert_batch, seed=1234)
-    idx.reserve(n_points + len(fresh))           # no growth mid-run
+    if n_shards > 1:
+        from repro.core.filters import PCAFilter
+        idx = ShardedMutableIndex.build(
+            x, cfg, n_shards, seed=1,
+            filt=PCAFilter(pca, low_dtype=cfg.low_dtype))
+        idx.reserve(-(-(n_points + len(fresh)) // n_shards))
+    else:
+        idx = MutableIndex.from_graph(g, pca, seed=1)
+        idx.reserve(n_points + len(fresh))       # no growth mid-run
     svc = VectorSearchService(idx, batch_size=batch, ef0=cfg.ef0)
     # warm the insert probe before timing (mirrors serving practice)
     svc.upsert(fresh[:cfg.insert_batch])

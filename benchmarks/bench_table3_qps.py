@@ -33,13 +33,18 @@ from repro.core.search_ref import run_queries
 
 def main(n_points: int = 50_000, n_queries: int = 200,
          json_path: Optional[str] = None, filter_kind: str = "pca",
-         deferred: bool = False, rerank_mult: Optional[int] = None):
+         deferred: bool = False, rerank_mult: Optional[int] = None,
+         n_shards: int = 1):
     """``filter_kind``/``deferred``/``rerank_mult`` select the filter
     stage and re-rank mode of the measured batched row (the CPU
     reference and cost-model rows stay on the paper's PCA
     configuration). The tracked BENCH_table3.json entry is only
-    written for the canonical pca/per-step configuration and embeds a
-    pca/pq/none/deferred A/B (``filters``)."""
+    written for the canonical pca/per-step single-shard configuration
+    and embeds a pca/pq/none/deferred A/B (``filters``).
+    ``n_shards > 1`` adds a measured DISTRIBUTED row (the same filter x
+    rerank mode over a P-way sharded build — the mesh collective path
+    when the host exposes >= P devices, the bit-equal single-device
+    shard loop otherwise)."""
     cfg, x, g, pca, x_low, q, gt = load_bench_db(n_points, n_queries)
     rows = []
 
@@ -90,8 +95,49 @@ def main(n_points: int = 50_000, n_queries: int = 200,
                  f"steps_mean={m['steps_mean']:.1f};"
                  f"steps_p99={m['steps_p99']:.1f};"
                  f"dist_h_mean={m['dist_h_mean']:.1f}"))
-    # the tracked perf trajectory pins the canonical configuration
-    if json_path and (filter_kind != "pca" or deferred):
+    # --- sharded engine row (core/distributed.py), same measurement
+    # protocol: the per-shard traversal + cross-shard merge, end to end
+    if n_shards > 1:
+        import time as _time
+        import jax
+        import jax.numpy as jnp
+        from benchmarks.common import make_bench_filter
+        from repro.core.distributed import (build_sharded,
+                                            distributed_search,
+                                            shard_search_host)
+        from repro.core.search_ref import recall_at
+        filt = make_bench_filter(filter_kind, cfg, x, pca)
+        sdb = build_sharded(x, cfg, filt, n_shards)
+        qd = jnp.asarray(q[:B])
+        qprep = filt.prepare_jnp(qd)
+        on_mesh = len(jax.devices()) >= n_shards
+        kw = dict(deferred=deferred,
+                  rerank_mult=int(rerank_mult or cfg.rerank_mult))
+        if on_mesh:
+            mesh = jax.make_mesh((1, n_shards), ("data", "model"))
+            run = lambda: distributed_search(mesh, sdb, qd, qprep, **kw)
+        else:
+            run = lambda: shard_search_host(sdb, qd, qprep, **kw)
+        run()[1].block_until_ready()                   # compile
+        t0 = _time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            _, fi = run()
+        fi.block_until_ready()
+        dt = (_time.perf_counter() - t0) / reps
+        fi = np.asarray(fi)
+        rec = float(np.mean([recall_at(fi[i], gt[i], cfg.recall_at)
+                             for i in range(B)]))
+        mode = filter_kind + ("-deferred" if deferred else "")
+        rows.append((f"table3/pHNSW-JAX-sharded/p{n_shards}-{mode}",
+                     dt / B * 1e6,
+                     f"qps={B / dt:.0f};recall@10={rec:.3f};"
+                     f"path={'mesh' if on_mesh else 'host'};"
+                     f"vs_1shard={m['qps'] / (B / dt):.2f}x_slowdown"))
+
+    # the tracked perf trajectory pins the canonical single-shard
+    # configuration
+    if json_path and (filter_kind != "pca" or deferred or n_shards > 1):
         json_path = None
     if json_path:
         # filter-stage A/B on the same graph/queries, embedded in the

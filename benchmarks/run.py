@@ -40,7 +40,21 @@ def main() -> None:
     ap.add_argument("--rerank-mult", type=int, default=None,
                     help="deferred-rerank candidate multiplier "
                          "(default: cfg.rerank_mult)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the database P ways and measure the "
+                         "distributed path (perf-smoke and churn "
+                         "benches); forces P simulated host devices so "
+                         "the mesh collective path runs, and never "
+                         "touches the tracked BENCH_table3.json entry")
     args = ap.parse_args()
+    if args.shards > 1:
+        # must precede the first jax import anywhere below
+        import os
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.shards}").strip()
     n_points = args.n_points or \
         (8_000 if args.fast or args.perf_smoke else 50_000)
     n_queries = 64 if args.fast or args.perf_smoke else 200
@@ -56,7 +70,7 @@ def main() -> None:
         t0 = time.time()
         # an explicit --n-points is honored; only the default shrinks
         bench_churn.main(n_points=args.n_points or 8_000,
-                         n_queries=n_queries)
+                         n_queries=n_queries, n_shards=args.shards)
         print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
         return
 
@@ -67,8 +81,10 @@ def main() -> None:
                               json_path=json_path,
                               filter_kind=args.filter_kind,
                               deferred=args.deferred,
-                              rerank_mult=args.rerank_mult)
-        if args.filter_kind == "pca" and not args.deferred:
+                              rerank_mult=args.rerank_mult,
+                              n_shards=args.shards)
+        if args.filter_kind == "pca" and not args.deferred \
+                and args.shards == 1:
             print(f"# wrote {json_path}", file=sys.stderr)
         print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
         return
@@ -81,7 +97,8 @@ def main() -> None:
         (bench_table3_qps, dict(n_points=n_points, n_queries=n_queries,
                                 filter_kind=args.filter_kind,
                                 deferred=args.deferred,
-                                rerank_mult=args.rerank_mult)),
+                                rerank_mult=args.rerank_mult,
+                                n_shards=args.shards)),
         (bench_fig2_kselect, dict(n_points=n_points,
                                   n_queries=min(n_queries, 100))),
         (bench_fig5_energy, dict(n_points=n_points, n_queries=n_queries)),
@@ -89,7 +106,8 @@ def main() -> None:
         (bench_pq_ablation, dict(n_points=n_points,
                                  n_queries=min(n_queries, 64))),
         (bench_churn, dict(n_points=args.n_points or 8_000,
-                           n_queries=min(n_queries, 64))),
+                           n_queries=min(n_queries, 64),
+                           n_shards=args.shards)),
     ):
         try:
             mod.main(**kwargs)

@@ -3,7 +3,8 @@ from repro.core.graph import HNSWGraph, build_hnsw, cached_graph
 from repro.core.filters import (FilterSpec, IdentityFilter, PCAFilter,
                                 PQFilter, make_filter)
 from repro.core.search_ref import (SearchStats, search_hnsw, search_phnsw,
-                                   search_filtered, run_queries, recall_at)
+                                   search_filtered, search_sharded,
+                                   run_queries, recall_at)
 from repro.core.search_jax import PackedDB, build_packed, search_batched
 from repro.core.cost_model import (DDR4, HBM, PROCESSOR, QueryCost,
                                    query_cost, table3, hw_variant_stats)
@@ -13,7 +14,7 @@ __all__ = [
     "PCA", "fit_pca", "HNSWGraph", "build_hnsw", "cached_graph",
     "FilterSpec", "IdentityFilter", "PCAFilter", "PQFilter",
     "make_filter", "SearchStats", "search_hnsw", "search_phnsw",
-    "search_filtered", "run_queries",
+    "search_filtered", "search_sharded", "run_queries",
     "recall_at", "PackedDB", "build_packed", "search_batched",
     "DDR4", "HBM", "PROCESSOR", "QueryCost", "query_cost", "table3",
     "hw_variant_stats", "select_schedule", "sweep_k0", "sweep_k1",

@@ -1,123 +1,386 @@
 """Distributed pHNSW: database sharded across the mesh (the paper's
 Section VI future work — "partitioning the billion-scale database into
 smaller parts while preserving efficient coordination" — built here as a
-first-class feature).
+first-class feature, at full feature parity with the single-shard
+engine: any filter kind, deferred re-ranking, tombstones).
 
 Scheme (scale-out ANN as deployed in practice):
-  * the dataset is partitioned into P shards along the ``model`` axis;
-    each shard gets its own independently-built HNSW graph (host-side,
-    embarrassingly parallel at build time);
+  * the dataset is partitioned into P shards along the ``model`` axis
+    (remainder vectors spread over the first ``n % P`` shards — no tail
+    is ever dropped); each shard gets its own independently-built HNSW
+    graph (host-side, embarrassingly parallel at build time) over ONE
+    shared filter (PCA projection / PQ codebook fitted on the full
+    dataset, so filter distances are comparable across shards);
   * queries are sharded along the ``data`` (+``pod``) axes and
     REPLICATED along ``model``;
   * every device runs the fixed-shape batched pHNSW search
     (search_jax) over its local shard — identical compiled program, no
-    cross-device traffic during traversal;
+    cross-device traffic during traversal; tombstones ride along as the
+    per-shard word-packed ``deleted`` bitmap (traversed, never
+    returned);
   * per-shard top-ef results are all-gathered over ``model`` and merged
-    with one kSort.L pass (global index = shard offset + local index).
+    with one kSort.L pass (global index = shard offset + local index);
+  * under DEFERRED re-ranking the per-shard traversal stays purely in
+    filter space and hands back the WIDE ``rerank_mult * ef0`` list;
+    the cross-shard merge happens on filter distances, and ONE global
+    batched Dist.H re-ranks the merged list — each shard scores only
+    the merged candidates it owns and a psum assembles the row
+    (total Dist.H evals per query = rerank_mult * ef0 across the whole
+    mesh, same as single-shard deferred).
 
-Collective cost per query batch: one all-gather of [P, B_local, ef]
-(dist, idx) pairs — a few KB; the traversal itself is communication-free.
+Collective cost per query batch: one all-gather of [P, B_local, E]
+(dist, idx) pairs (E = ef0, or rerank_mult*ef0 when deferred) plus,
+when deferred, one [B_local, E] psum — a few KB; the traversal itself
+is communication-free.
+
+``shard_search_host`` runs the IDENTICAL program without a mesh (a
+python loop over shards + the same merge/re-rank) — bit-equal to
+``distributed_search`` on any mesh, so single-device CI can lock down
+multi-shard semantics and the multi-device job only has to assert
+mesh == host.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import PHNSWConfig
+from repro.constants import INF as _INF
 from repro.core.graph import build_hnsw
-from repro.core.pca import PCA, fit_pca
+from repro.core.pca import PCA
 from repro.core.search_jax import (PackedDB, PackedLayer, build_packed,
+                                   pack_bitmap, _rank_sort_with_payload,
                                    _search_batched_impl)
 from repro.kernels import ops
+
+INF = jnp.float32(_INF)
+
+
+def shard_bounds(n: int, n_shards: int) -> List[Tuple[int, int]]:
+    """[start, end) per shard: ``n // P`` each, the ``n % P`` remainder
+    spread one-per-shard from the front — every vector is owned by
+    exactly one shard (the seed implementation silently dropped the
+    tail)."""
+    per, rem = divmod(n, n_shards)
+    out, start = [], 0
+    for s in range(n_shards):
+        size = per + (1 if s < rem else 0)
+        out.append((start, start + size))
+        start += size
+    assert start == n
+    return out
 
 
 @dataclass
 class ShardedDB:
-    """Stacked per-shard databases: every leaf has leading dim P."""
+    """Stacked per-shard databases: every leaf has leading dim P.
+    Shards may hold unequal counts (remainder distribution, per-shard
+    mutation); rows are padded to a uniform per-shard height — pad rows
+    have no adjacency and are never linked, so they are unreachable.
+    ``counts[s]`` is the live row span of shard s (ownership test for
+    the global deferred re-rank); ``offsets[s]`` maps local ids to the
+    global id space. ``deleted`` (optional) stacks the per-shard
+    word-packed tombstone bitmaps. ``filter_kind`` is METADATA, same
+    contract as ``PackedDB``."""
     adj: List[jax.Array]          # per layer: [P, N, M_l]
-    packed_low: List[jax.Array]   # per layer: [P, N, M_l, dl]
-    low: jax.Array                # [P, N, dl]
+    packed_low: List[jax.Array]   # per layer: [P, N, M_l, pl]
+    low: jax.Array                # [P, N, pl]
     high: jax.Array               # [P, N, D]
     entries: jax.Array            # [P] int32
     offsets: jax.Array            # [P] int32 global-id offset per shard
+    counts: jax.Array             # [P] int32 rows owned per shard
     cfg: PHNSWConfig
+    deleted: Optional[jax.Array] = None   # [P, ceil(N/32)] int32
+    filter_kind: str = "pca"
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.high.shape[0])
+
+    def shard_db(self, s) -> PackedDB:
+        """The PackedDB view of one shard (``s`` may be a traced index
+        inside jit; with integer 0 after shard_map it is the local
+        shard)."""
+        layers = [PackedLayer(adj=a[s], packed_low=p[s])
+                  for a, p in zip(self.adj, self.packed_low)]
+        return PackedDB(layers=layers, low=self.low[s], high=self.high[s],
+                        entry=self.entries[s], cfg=self.cfg,
+                        deleted=None if self.deleted is None
+                        else self.deleted[s],
+                        filter_kind=self.filter_kind)
 
 
-def build_sharded(x: np.ndarray, cfg: PHNSWConfig, pca: PCA,
-                  n_shards: int, *, seed: int = 0) -> ShardedDB:
+jax.tree_util.register_dataclass(
+    ShardedDB,
+    data_fields=["adj", "packed_low", "low", "high", "entries",
+                 "offsets", "counts", "deleted"],
+    meta_fields=["cfg", "filter_kind"])
+
+
+def _pad_rows(a: np.ndarray, n: int, fill) -> np.ndarray:
+    """Pad axis 0 of ``a`` to ``n`` rows with ``fill``."""
+    if a.shape[0] == n:
+        return a
+    pad = np.full((n - a.shape[0],) + a.shape[1:], fill, a.dtype)
+    return np.concatenate([a, pad])
+
+
+def build_sharded(x: np.ndarray, cfg: PHNSWConfig, filt, n_shards: int,
+                  *, deleted: Optional[np.ndarray] = None,
+                  graphs=None, seed: int = 0) -> ShardedDB:
+    """Partition ``x`` into ``n_shards`` (remainder distributed, no tail
+    dropped), build one HNSW graph per shard, and stack the packed
+    databases. ``filt`` is the SHARED filter — any
+    ``core.filters.FilterSpec`` fitted on the full dataset, or a bare
+    ``PCA`` (the seed API, adopted as a ``PCAFilter``). ``deleted``
+    ([n] bool, optional) seeds the per-shard tombstone bitmaps.
+    ``graphs`` (per-shard ``HNSWGraph`` over exactly the shard_bounds
+    partition) skips the builds — graphs are filter-independent, so
+    callers comparing filter kinds build once."""
+    from repro.core.filters import PCAFilter
+    if isinstance(filt, PCA):
+        filt = PCAFilter(filt, low_dtype=cfg.low_dtype)
     n = len(x)
-    per = n // n_shards
-    dbs = []
-    offsets = []
-    for s in range(n_shards):
-        xs = x[s * per:(s + 1) * per]
-        g = build_hnsw(xs, cfg, seed=seed + s)
-        xl = pca.transform(xs).astype(np.float32)
+    bounds = shard_bounds(n, n_shards)
+    n_max = max(e - s for s, e in bounds)
+    dbs, offs, cnts, dels = [], [], [], []
+    for s, (a, b) in enumerate(bounds):
+        xs = x[a:b]
+        if graphs is not None:
+            g = graphs[s]
+            assert len(g.x) == b - a, "graphs must match shard_bounds"
+        else:
+            g = build_hnsw(xs, cfg, seed=seed + s)
         # keep layer counts uniform across shards for stacking
-        dbs.append(build_packed(g, xl, drop_empty_layers=False))
-        offsets.append(s * per)
+        dbs.append(build_packed(g, filt.encode(xs), filt=filt,
+                                drop_empty_layers=False))
+        offs.append(a)
+        cnts.append(b - a)
+        if deleted is not None:
+            # pad slots marked deleted too (unreachable, but the bitmap
+            # shape must stack)
+            d = _pad_rows(deleted[a:b].astype(bool), n_max, True)
+            dels.append(pack_bitmap(d))
     stack = lambda xs: jnp.stack(xs)
     n_layers = len(dbs[0].layers)
     return ShardedDB(
-        adj=[stack([db.layers[l].adj for db in dbs])
-             for l in range(n_layers)],
-        packed_low=[stack([db.layers[l].packed_low for db in dbs])
+        adj=[stack([_pad_rows(np.asarray(db.layers[l].adj), n_max, -1)
+                    for db in dbs]) for l in range(n_layers)],
+        packed_low=[stack([_pad_rows(np.asarray(db.layers[l].packed_low),
+                                     n_max, 0) for db in dbs])
                     for l in range(n_layers)],
-        low=stack([db.low for db in dbs]),
-        high=stack([db.high for db in dbs]),
+        low=stack([_pad_rows(np.asarray(db.low), n_max, 0)
+                   for db in dbs]),
+        high=stack([_pad_rows(np.asarray(db.high), n_max, 0)
+                    for db in dbs]),
         entries=jnp.asarray([db.entry for db in dbs], jnp.int32),
-        offsets=jnp.asarray(offsets, jnp.int32),
+        offsets=jnp.asarray(offs, jnp.int32),
+        counts=jnp.asarray(cnts, jnp.int32),
         cfg=cfg,
+        deleted=None if deleted is None else stack(dels),
+        filter_kind=filt.kind,
     )
 
 
-def distributed_search(mesh: Mesh, sdb: ShardedDB, queries, q_low,
-                       *, ef0: int = 0, k_schedule=None):
-    """queries: [B, D] global. Returns (dists [B, ef0], GLOBAL idx)."""
+# ---------------------------------------------------------------------------
+# the shared per-shard + merge program (mesh and host paths run THE SAME
+# traced code — bit-equal by construction)
+# ---------------------------------------------------------------------------
+
+def _shard_lists(db: PackedDB, offset, queries, qprep, *, ef0, ks,
+                 deferred, rerank_mult):
+    """One shard's pre-merge candidate lists: ([B, E] dists ascending,
+    [B, E] GLOBAL ids). High-dim dists normally; the WIDE
+    (rerank_mult * ef0) filter-space list when deferred (the global
+    re-rank happens after the cross-shard merge)."""
+    fd, fi, _, _ = _search_batched_impl(
+        db, queries, qprep, ef0=ef0, k_schedule=ks, deferred=deferred,
+        rerank_mult=rerank_mult, final_rerank=False)
+    return fd, jnp.where(fi >= 0, fi + offset, -1)
+
+
+def _merge_lists(fd_all, fi_all, k: int):
+    """Cross-shard merge: [P, B, E] stacked per-shard ascending lists ->
+    the global top-k ([B, k] dists, [B, k] ids) with one kSort.L pass
+    (deterministic ties: lower shard, then lower slot)."""
+    Pn, B, E = fd_all.shape
+    fd_c = jnp.moveaxis(fd_all, 0, 1).reshape(B, Pn * E)
+    fi_c = jnp.moveaxis(fi_all, 0, 1).reshape(B, Pn * E)
+    vals, sel = ops.ksort_l(fd_c, k)
+    return vals, jnp.take_along_axis(fi_c, sel, axis=1)
+
+
+def _owned_dist_h(high, offset, count, gids, queries):
+    """One shard's contribution to the global deferred re-rank: Dist.H
+    for the merged candidates THIS shard owns, zeros elsewhere — the
+    cross-shard sum (psum / host loop) assembles the full row, so the
+    whole mesh pays exactly ONE batched Dist.H per query."""
+    own = (gids >= offset) & (gids < offset + count)
+    loc = jnp.where(own, gids - offset, 0)
+    xh = jnp.take(high, loc, axis=0)                     # [B, E, D]
+    return jnp.where(own, ops.dist_h(xh, queries), 0.0)
+
+
+def _global_rerank(md, mi, dh, ef0: int):
+    """Sort the merged list by the assembled high-dim dists (stable on
+    ties — same ``_rank_sort_with_payload`` as the single-shard deferred
+    re-rank) and trim to ef0."""
+    dh = jnp.where(mi >= 0, dh, INF)
+    rd, ri = _rank_sort_with_payload(dh, jnp.where(mi >= 0, mi, -1))
+    return rd[:, :ef0], ri[:, :ef0]
+
+
+def _normalize(sdb: ShardedDB, ef0, k_schedule, deferred, rerank_mult):
+    """Default + no-op normalization, mirroring ``search_batched`` so a
+    caller varying a dead knob never recompiles a bit-identical
+    program."""
     cfg = sdb.cfg
-    ef0 = ef0 or cfg.ef0
-    ks = k_schedule or cfg.k_schedule
+    ef0 = int(ef0 or cfg.ef0)
+    ks = tuple(k_schedule or cfg.k_schedule)
+    if deferred is None:
+        deferred = cfg.deferred_rerank
+    if rerank_mult is None:
+        rerank_mult = cfg.rerank_mult
+    if sdb.filter_kind == "none":
+        deferred = False
+    if not deferred:
+        rerank_mult = 1
+    return ef0, ks, bool(deferred), int(rerank_mult)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "ef0", "k_schedule",
+                                             "deferred", "rerank_mult"))
+def _mesh_search_jit(mesh, sdb, queries, qprep, ef0, k_schedule,
+                     deferred, rerank_mult):
     b_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     m_ax = "model"
+    has_del = sdb.deleted is not None
 
-    def local_search(adj, packed_low, low, high, entry, offset, q, ql):
+    def local_search(adj, packed_low, low, high, entry, offset, count,
+                     dele, q, qp):
         # leaves arrive with the leading shard dim = 1: squeeze it
-        layers = [PackedLayer(adj=a[0], packed_low=p[0])
-                  for a, p in zip(adj, packed_low)]
-        # the per-shard entry id is data (a traced scalar), which is
-        # exactly what PackedDB.entry now is — the shared descent in
-        # _search_batched_impl handles it directly
-        db = PackedDB(layers=layers, low=low[0], high=high[0],
-                      entry=entry[0], cfg=cfg)
-        fd, fi, _, _ = _search_batched_impl(db, q, ql, ef0=ef0,
-                                            k_schedule=ks)
-        fi = jnp.where(fi >= 0, fi + offset[0], -1)
-        # merge across shards: all-gather the per-shard top-ef
-        fd_all = jax.lax.all_gather(fd, m_ax, axis=0)      # [P, B, ef]
-        fi_all = jax.lax.all_gather(fi, m_ax, axis=0)
-        Pn, B, E = fd_all.shape
-        fd_c = jnp.moveaxis(fd_all, 0, 1).reshape(B, Pn * E)
-        fi_c = jnp.moveaxis(fi_all, 0, 1).reshape(B, Pn * E)
-        vals, sel = ops.ksort_l(fd_c, ef0)
-        return vals, jnp.take_along_axis(fi_c, sel, axis=1)
+        db = PackedDB(
+            layers=[PackedLayer(adj=a[0], packed_low=p[0])
+                    for a, p in zip(adj, packed_low)],
+            low=low[0], high=high[0], entry=entry[0], cfg=sdb.cfg,
+            deleted=dele[0] if has_del else None,
+            filter_kind=sdb.filter_kind)
+        fd, gi = _shard_lists(db, offset[0], q, qp, ef0=ef0,
+                              ks=k_schedule, deferred=deferred,
+                              rerank_mult=rerank_mult)
+        fd_all = jax.lax.all_gather(fd, m_ax, axis=0)      # [P, B, E]
+        gi_all = jax.lax.all_gather(gi, m_ax, axis=0)
+        E = fd.shape[1]
+        md, mi = _merge_lists(fd_all, gi_all, E)
+        if deferred:
+            dh = jax.lax.psum(
+                _owned_dist_h(high[0], offset[0], count[0], mi, q), m_ax)
+            return _global_rerank(md, mi, dh, ef0)
+        return md, mi
 
     n_l = len(sdb.adj)
+    q_spec = P(b_ax, None)
+    qp_spec = P(b_ax, *([None] * (qprep.ndim - 1)))
     in_specs = (
         [P(m_ax, None, None)] * n_l,          # adj
         [P(m_ax, None, None, None)] * n_l,    # packed_low
         P(m_ax, None, None), P(m_ax, None, None),
-        P(m_ax), P(m_ax),
-        P(b_ax, None), P(b_ax, None),
+        P(m_ax), P(m_ax), P(m_ax),
+        P(m_ax, None) if has_del else P(),
+        q_spec, qp_spec,
     )
     out_specs = (P(b_ax, None), P(b_ax, None))
     fn = shard_map(local_search, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_rep=False)
+    dele = sdb.deleted if has_del else jnp.zeros((), jnp.int32)
     return fn(sdb.adj, sdb.packed_low, sdb.low, sdb.high, sdb.entries,
-              sdb.offsets, queries, q_low)
+              sdb.offsets, sdb.counts, dele, queries, qprep)
+
+
+@functools.partial(jax.jit, static_argnames=("ef0", "k_schedule",
+                                             "deferred", "rerank_mult"))
+def _host_search_jit(sdb, queries, qprep, ef0, k_schedule, deferred,
+                     rerank_mult):
+    """The meshless twin of ``_mesh_search_jit``: an unrolled loop over
+    shards + the same merge and global re-rank. all_gather == stack,
+    psum == sum of the per-shard owned contributions (exactly one
+    non-zero term per slot, so the float result is bit-equal)."""
+    Pn = sdb.n_shards
+    fds, gis = [], []
+    for s in range(Pn):
+        fd, gi = _shard_lists(sdb.shard_db(s), sdb.offsets[s], queries,
+                              qprep, ef0=ef0, ks=k_schedule,
+                              deferred=deferred, rerank_mult=rerank_mult)
+        fds.append(fd)
+        gis.append(gi)
+    E = fds[0].shape[1]
+    md, mi = _merge_lists(jnp.stack(fds), jnp.stack(gis), E)
+    if deferred:
+        dh = jnp.zeros_like(md)
+        for s in range(Pn):
+            dh = dh + _owned_dist_h(sdb.high[s], sdb.offsets[s],
+                                    sdb.counts[s], mi, queries)
+        return _global_rerank(md, mi, dh, ef0)
+    return md, mi
+
+
+def _prepare_qprep(sdb: ShardedDB, queries, q_low, filt):
+    if q_low is not None:
+        return q_low
+    if filt is not None:
+        if filt.kind != sdb.filter_kind:
+            raise ValueError(f"filter mismatch: sharded db carries a "
+                             f"{sdb.filter_kind!r} payload, filt is "
+                             f"{filt.kind!r}")
+        return filt.prepare_jnp(queries)
+    if sdb.filter_kind == "none":
+        return queries[:, :0].astype(jnp.float32)
+    raise ValueError("q_low or filt required for the "
+                     f"{sdb.filter_kind!r} filter")
+
+
+def distributed_search(mesh: Mesh, sdb: ShardedDB, queries, q_low=None,
+                       *, filt=None, ef0: int = 0, k_schedule=None,
+                       deferred: Optional[bool] = None,
+                       rerank_mult: Optional[int] = None):
+    """Sharded batched search over ``mesh``. queries: [B, D] global;
+    ``q_low`` is the active filter's per-query prep (or pass ``filt``
+    to compute it here; the identity filter needs neither). Returns
+    (dists [B, ef0], GLOBAL idx [B, ef0]). On a 1-shard mesh this is
+    bit-equal to single-shard ``search_batched`` for every filter kind
+    and re-rank mode."""
+    qprep = _prepare_qprep(sdb, queries, q_low, filt)
+    ef0, ks, deferred, rm = _normalize(sdb, ef0, k_schedule, deferred,
+                                       rerank_mult)
+    return _mesh_search_jit(mesh, sdb, queries, qprep, ef0, ks,
+                            deferred, rm)
+
+
+def shard_search_host(sdb: ShardedDB, queries, q_low=None, *, filt=None,
+                      ef0: int = 0, k_schedule=None,
+                      deferred: Optional[bool] = None,
+                      rerank_mult: Optional[int] = None):
+    """``distributed_search`` without a mesh: the same per-shard
+    programs and the same merge, on however many devices exist (one is
+    fine) — bit-equal to the mesh path. This is the simulated-shards
+    entry point for single-device tests/benchmarks and the serving
+    default when no mesh is configured."""
+    qprep = _prepare_qprep(sdb, queries, q_low, filt)
+    ef0, ks, deferred, rm = _normalize(sdb, ef0, k_schedule, deferred,
+                                       rerank_mult)
+    return _host_search_jit(sdb, queries, qprep, ef0, ks, deferred, rm)
+
+
+def search_cache_sizes() -> Tuple[int, int]:
+    """(mesh, host) compiled-program cache sizes — the sharded
+    zero-recompile assertions read these."""
+    return (_mesh_search_jit._cache_size(),
+            _host_search_jit._cache_size())

@@ -227,8 +227,14 @@ def make_filter(cfg: PHNSWConfig, x: np.ndarray, *,
         return PCAFilter(pca or fit_pca(x, cfg.d_low),
                          low_dtype=cfg.low_dtype)
     if cfg.filter_kind == "pq":
+        # seeded RANDOM subsample, not a prefix: the sharded build
+        # shares one codebook across shards partitioned contiguously
+        # from x, so a prefix sample would train on the first shard(s)
+        # only and skew cross-shard ADC comparability
         n_train = min(len(x), 20_000)
-        cb = train_pq(x[:n_train], cfg.pq_n_sub,
+        xt = x if n_train == len(x) else \
+            x[np.random.default_rng(seed).permutation(len(x))[:n_train]]
+        cb = train_pq(xt, cfg.pq_n_sub,
                       iters=cfg.pq_train_iters, seed=seed)
         return PQFilter(cb)
     if cfg.filter_kind == "none":

@@ -124,6 +124,19 @@ def _tombstone_bit(deleted, ids):
     return (jnp.take(deleted, safe // 32) >> (safe % 32)) & 1 != 0
 
 
+def pack_bitmap(flags: np.ndarray) -> np.ndarray:
+    """bool [n] -> int32 words [ceil(n/32)] in the ``_tombstone_bit``
+    layout (bit i of word i >> 5 = flags[i]); the tail word is
+    zero-padded. The ONE definition of the on-device tombstone word
+    layout — the mutable index and the sharded builder both pack
+    through here."""
+    nw = -(-len(flags) // 32)
+    words = np.zeros(nw, np.uint32)
+    ids = np.nonzero(flags)[0].astype(np.uint32)
+    np.bitwise_or.at(words, ids // 32, np.uint32(1) << (ids % 32))
+    return words.view(np.int32)
+
+
 def build_packed(g: HNSWGraph, x_low: Optional[np.ndarray] = None,
                  *, filt=None, low_dtype: Optional[str] = None,
                  drop_empty_layers: bool = True) -> PackedDB:
@@ -471,7 +484,8 @@ def search_batched(db: PackedDB, queries, qprep=None, *, pca=None,
 def _search_batched_impl(db: PackedDB, queries, qprep, *,
                          ef0: Optional[int] = None,
                          k_schedule: Optional[Tuple[int, ...]] = None,
-                         deferred: bool = False, rerank_mult: int = 1):
+                         deferred: bool = False, rerank_mult: int = 1,
+                         final_rerank: bool = True):
     """The traced body (also called directly inside shard_map by
     ``core/distributed.py``). The upper routing layers never filter
     tombstones — a deleted node is a fine descent waypoint — the output
@@ -480,7 +494,11 @@ def _search_batched_impl(db: PackedDB, queries, qprep, *,
     Deferred mode runs the whole descent in filter space (the entry is
     scored against the payload, every layer traverses on filter
     distances, layer 0 keeps ``rerank_mult * ef0`` candidates) and
-    finishes with a single batched Dist.H over the final list."""
+    finishes with a single batched Dist.H over the final list.
+    ``final_rerank=False`` (deferred only) skips that last step and
+    returns the WIDE ``rerank_mult * ef0`` filter-space list instead —
+    the sharded path merges per-shard lists on filter distances first
+    and re-ranks ONCE globally after the cross-shard merge."""
     cfg = db.cfg
     B = queries.shape[0]
     ks = k_schedule or cfg.k_schedule
@@ -513,7 +531,7 @@ def _search_batched_impl(db: PackedDB, queries, qprep, *,
         filter_deleted=db.deleted is not None, deferred=deferred)
     steps.append(st)
     dhe = dhe + de
-    if deferred:
+    if deferred and final_rerank:
         # the deferred high-dim re-rank: ONE batched Dist.H over the
         # final filter-space list, then a single sort back to ef0
         ok = fi >= 0

@@ -267,7 +267,8 @@ def search_filtered(g: HNSWGraph, filt, payload: Optional[np.ndarray],
                     k_schedule: Optional[Tuple[int, ...]] = None,
                     ef0: Optional[int] = None,
                     deleted: Optional[np.ndarray] = None,
-                    deferred: bool = False, rerank_mult: int = 1
+                    deferred: bool = False, rerank_mult: int = 1,
+                    final_rerank: bool = True
                     ) -> Tuple[np.ndarray, SearchStats]:
     """Reference search under any filter x rerank combination — the
     host oracle the batched engine is tested against.
@@ -277,7 +278,10 @@ def search_filtered(g: HNSWGraph, filt, payload: Optional[np.ndarray],
     HNSW traversal (its 'filter distance' IS the high-dim distance, so
     deferred mode is a no-op). Deferred mode widens the layer-0 result
     list to ``rerank_mult * ef0`` filter-space candidates, then
-    re-ranks them with high-dim distances in one batch."""
+    re-ranks them with high-dim distances in one batch;
+    ``final_rerank=False`` skips that re-rank and returns the WIDE
+    filter-space list (ascending filter distance) — the sharded oracle
+    merges per-shard lists first and re-ranks once globally."""
     cfg = g.cfg
     if filt.kind == "none":
         return search_hnsw(g, q, ef0=ef0, deleted=deleted)
@@ -298,6 +302,8 @@ def search_filtered(g: HNSWGraph, filt, payload: Optional[np.ndarray],
     res = _filter_layer(g, filt, payload, q, qprep, ep, ef_run, k_of(0),
                         0, st, layout, deleted=deleted, deferred=deferred)
     ids = np.array([e for _, e in res], np.int64)
+    if deferred and not final_rerank:
+        return ids, st
     if deferred and len(ids):
         # the deferred high-dim re-rank: ONE batch of Dist.H over the
         # final filter-space list (stable sort keeps the filter order
@@ -326,6 +332,75 @@ def search_phnsw(g: HNSWGraph, x_low: np.ndarray, pca: PCA, q: np.ndarray,
                            k_schedule=k_schedule, ef0=ef0,
                            deleted=deleted, deferred=deferred,
                            rerank_mult=rerank_mult)
+
+
+# ---------------------------------------------------------------------------
+# sharded oracle (host mirror of core/distributed.py)
+# ---------------------------------------------------------------------------
+
+def search_sharded(graphs, filt, payloads, q: np.ndarray, *,
+                   k_schedule: Optional[Tuple[int, ...]] = None,
+                   ef0: Optional[int] = None,
+                   deleted=None,
+                   deferred: bool = False, rerank_mult: int = 1
+                   ) -> Tuple[np.ndarray, SearchStats]:
+    """The sharded reference: ``search_filtered`` per shard + the
+    host-side cross-shard merge, mirroring ``distributed_search``
+    exactly — per-shard lists (high-dim keyed normally, WIDE
+    filter-space keyed when deferred), a global merge with ties broken
+    by (lower shard, lower slot), and when deferred ONE global high-dim
+    re-rank over the merged list.
+
+    ``graphs``: per-shard ``HNSWGraph`` (independent builds over ONE
+    shared ``filt``); ``payloads``: per-shard ``filt.encode`` rows;
+    ``deleted``: per-shard [n_s] bool masks or None. Returned ids are
+    GLOBAL (shard offset = cumulative shard sizes)."""
+    cfg = graphs[0].cfg
+    ef_out = ef0 or cfg.ef0
+    deferred = deferred and filt.kind != "none"
+    E = ef_out * rerank_mult if deferred else ef_out
+    qprep = filt.prepare(q[None])[0] if filt.kind != "none" else None
+    tot = SearchStats()
+    keys, shards, slots, gids, locs = [], [], [], [], []
+    offset = 0
+    for s, g in enumerate(graphs):
+        dele = deleted[s] if deleted is not None else None
+        ids, st = search_filtered(g, filt, payloads[s], q,
+                                  k_schedule=k_schedule, ef0=ef0,
+                                  deleted=dele, deferred=deferred,
+                                  rerank_mult=rerank_mult,
+                                  final_rerank=False)
+        tot.add(st)
+        if len(ids):
+            if deferred:
+                k = filt.dists(qprep, payloads[s][ids])
+            else:
+                k = _d2_rows(g.x[ids], q)
+            keys.append(k.astype(np.float64))
+            shards.append(np.full(len(ids), s))
+            slots.append(np.arange(len(ids)))
+            gids.append(ids + offset)
+            locs.append(ids)
+        offset += len(g.x)
+    if not keys:
+        # every shard came back empty (e.g. a fully tombstoned index);
+        # the batched engine returns pad ids for the same input
+        return np.empty(0, np.int64), tot
+    key = np.concatenate(keys)
+    shard = np.concatenate(shards)
+    slot = np.concatenate(slots)
+    gid = np.concatenate(gids)
+    loc = np.concatenate(locs)
+    order = np.lexsort((slot, shard, key))[:E]
+    if deferred:
+        # ONE global batched Dist.H over the merged filter-space list
+        xh = np.stack([graphs[shard[i]].x[loc[i]] for i in order])
+        dh = _d2_rows(xh, q)
+        tot.dist_high += len(order)
+        tot.rand_accesses += len(order)
+        tot.rand_bytes += len(order) * q.shape[0] * F32
+        order = order[np.argsort(dh, kind="stable")][:ef_out]
+    return gid[order], tot
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,4 @@
 from repro.index.mutable import MutableIndex
+from repro.index.sharded import ShardedMutableIndex
 
-__all__ = ["MutableIndex"]
+__all__ = ["MutableIndex", "ShardedMutableIndex"]

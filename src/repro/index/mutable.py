@@ -56,8 +56,8 @@ from repro.core.graph import (HNSWGraph, _select_heuristic, add_link,
                               build_hnsw, sample_levels)
 from repro.core.pca import PCA, fit_pca
 from repro.core.pq import PQCodebook
-from repro.core.search_jax import (PackedDB, PackedLayer, search_batched,
-                                   search_layer_batched)
+from repro.core.search_jax import (PackedDB, PackedLayer, pack_bitmap,
+                                   search_batched, search_layer_batched)
 from repro.kernels import ops
 
 
@@ -79,14 +79,9 @@ def _next_pow2(n: int, floor: int) -> int:
     return cap
 
 
-def _pack_bitmap(flags: np.ndarray) -> np.ndarray:
-    """bool [cap] (cap % 32 == 0) -> int32 words [cap // 32], bit i of
-    word i >> 5 = flags[i] (the engine's ``_tombstone_bit`` layout)."""
-    cap = len(flags)
-    words = np.zeros(cap // 32, np.uint32)
-    ids = np.nonzero(flags)[0].astype(np.uint32)
-    np.bitwise_or.at(words, ids // 32, np.uint32(1) << (ids % 32))
-    return words.view(np.int32)
+# the engine's _tombstone_bit word layout has exactly one packer
+# (core/search_jax.pack_bitmap); keep the historical local name
+_pack_bitmap = pack_bitmap
 
 
 def _pad_rows_pow2(rows: np.ndarray) -> np.ndarray:
@@ -182,6 +177,8 @@ class MutableIndex:
         # old-id -> new-id map of the most recent compaction (None until
         # one happens); compaction renumbers the public id space
         self.last_remap: Optional[np.ndarray] = None
+        # (layer, cap) -> empty device layer, for device_layers()
+        self._empty_layers: Dict = {}
         self._publish_full()
 
     @classmethod
@@ -224,6 +221,28 @@ class MutableIndex:
         if self.filt.kind == "pca":
             return jnp.dtype(self.cfg.low_dtype)
         return jnp.dtype(self.x_low.dtype)
+
+    def device_layers(self, n_pub: int):
+        """The published device layers padded with cached EMPTY layers
+        (all -1 adjacency, zero payload) up to ``n_pub`` >= top+1 —
+        shard stacking (index/sharded.py) needs uniform layer counts
+        across shards whose top layers differ. An empty layer is inert:
+        the entry has no neighbors there, so its while_loop exits after
+        one popped-and-dropped iteration. Returns (adj list, packed
+        list)."""
+        adj, packed = list(self._dev_adj), list(self._dev_packed)
+        for l in range(len(adj), n_pub):
+            key = (l, self.cap)
+            if key not in self._empty_layers:
+                M = self.cfg.degree(l)
+                pl = self._dev_low.shape[1]
+                self._empty_layers[key] = (
+                    jnp.full((self.cap, M), -1, jnp.int32),
+                    jnp.zeros((self.cap, M, pl), self._dev_payload_dtype))
+            a, p = self._empty_layers[key]
+            adj.append(a)
+            packed.append(p)
+        return adj, packed
 
     def _publish_full(self) -> None:
         """Rebuild every device buffer (init / growth / compaction /

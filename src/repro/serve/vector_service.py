@@ -5,18 +5,26 @@ Requests accumulate into fixed-size batches (the compiled search program
 has a static batch dim); underfull batches are padded with the entry
 point and results trimmed. Tracks QPS and latency percentiles.
 
-Backed by either a frozen ``PackedDB`` (read-only serving, the seed
-behavior) or a ``MutableIndex`` (live serving): ``upsert`` / ``delete``
-mutate the index and atomically swap the published epoch's device
-snapshot under the running service. The swap is a plain attribute
-assignment of an immutable ``PackedDB`` value — in-flight batches finish
-on the epoch they started on, the next batch sees the new one, and in
-steady state no shape changes, so the compiled program is reused across
-the swap (zero recompiles). The two NON-steady-state events that do
-recompile — capacity doubling (pre-pay with ``MutableIndex.reserve``)
-and an insert drawing a level above the current top layer (adds a
-device layer; probability ~M^-(top+1) per insert) — are each O(log N)
-over an index's lifetime; see DESIGN.md § Mutable index.
+Backed by any of four snapshots behind one API:
+
+  * a frozen ``PackedDB`` (read-only single-shard serving, the seed
+    behavior) or a ``MutableIndex`` (live single-shard serving);
+  * a frozen ``ShardedDB`` (read-only SHARDED serving) or a
+    ``ShardedMutableIndex`` (live sharded serving) — results carry
+    GLOBAL ids; pass ``mesh=`` to run the collective path on real
+    devices, else the bit-equal single-device shard loop serves.
+
+``upsert`` / ``delete`` (mutable backends) mutate the index and
+atomically swap the published epoch's device snapshot under the running
+service. The swap is a plain attribute assignment of an immutable
+snapshot value — in-flight batches finish on the epoch they started on,
+the next batch sees the new one, and in steady state no shape changes,
+so the compiled program is reused across the swap (zero recompiles).
+The NON-steady-state events that do recompile — capacity doubling
+(pre-pay with ``reserve``) and an insert drawing a level above the
+current top layer — are each O(log N) over an index's lifetime; the
+sharded index additionally renumbers global ids on growth; see
+DESIGN.md § Mutable index / § Sharded serving.
 """
 from __future__ import annotations
 
@@ -27,10 +35,12 @@ from typing import List, Optional, Tuple, Union
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core.distributed import (ShardedDB, distributed_search,
+                                    shard_search_host)
 from repro.core.filters import FilterSpec, IdentityFilter, PCAFilter
 from repro.core.pca import PCA
 from repro.core.search_jax import PackedDB, search_batched
-from repro.index import MutableIndex
+from repro.index import MutableIndex, ShardedMutableIndex
 
 
 @dataclass
@@ -52,48 +62,68 @@ class ServiceStats:
 
 
 class VectorSearchService:
-    def __init__(self, db: Union[PackedDB, MutableIndex],
+    def __init__(self, db: Union[PackedDB, MutableIndex, ShardedDB,
+                                 ShardedMutableIndex],
                  pca: Optional[PCA] = None, *, batch_size: int = 64,
                  ef0: Optional[int] = None,
-                 filt: Optional[FilterSpec] = None):
+                 filt: Optional[FilterSpec] = None, mesh=None):
         """``filt`` (any ``core.filters.FilterSpec``) generalizes the
-        seed's ``pca`` argument; a MutableIndex brings its own filter.
-        A frozen identity-filter PackedDB needs neither."""
-        if isinstance(db, MutableIndex):
-            self.index: Optional[MutableIndex] = db
+        seed's ``pca`` argument; mutable indexes bring their own filter.
+        A frozen identity-filter db needs neither. Sharded backends
+        (``ShardedDB`` / ``ShardedMutableIndex``) serve GLOBAL ids;
+        ``mesh`` selects the collective path (single-device shard loop
+        otherwise — bit-equal)."""
+        self.index: Optional[MutableIndex] = None
+        self.sindex: Optional[ShardedMutableIndex] = None
+        self.sdb: Optional[ShardedDB] = None
+        self.db: Optional[PackedDB] = None
+        self.mesh = mesh
+        if isinstance(db, ShardedMutableIndex):
+            self.sindex = db
+            self.sdb = db.sdb
+            filt = filt or db.filt
+        elif isinstance(db, ShardedDB):
+            self.sdb = db
+        elif isinstance(db, MutableIndex):
+            self.index = db
             self.db = db.db
             filt = filt or db.filt
         else:
-            self.index = None
             self.db = db
+        snap = self.sdb if self.sdb is not None else self.db
         if filt is None:
             if pca is not None:
-                filt = PCAFilter(pca, low_dtype=self.db.cfg.low_dtype)
-            elif self.db.filter_kind == "none":
-                filt = IdentityFilter(dim=self.db.high.shape[1])
+                filt = PCAFilter(pca, low_dtype=snap.cfg.low_dtype)
+            elif snap.filter_kind == "none":
+                filt = IdentityFilter(dim=snap.high.shape[-1])
             else:
                 raise ValueError("filt (or pca) is required when "
-                                 "serving a PackedDB with the "
-                                 f"{self.db.filter_kind!r} filter")
+                                 "serving a frozen db with the "
+                                 f"{snap.filter_kind!r} filter")
         self.filt = filt
         self.pca = filt.pca if isinstance(filt, PCAFilter) else pca
         self.batch = batch_size
-        self.ef0 = ef0 or self.db.cfg.ef0
-        self.epoch = self.index.epoch if self.index else 0
+        self.ef0 = ef0 or snap.cfg.ef0
+        mut = self.index or self.sindex
+        self.epoch = mut.epoch if mut else 0
         self._refresh_pad_row()
         # warm the compiled program, then reset stats so compile time
         # and the warmup batch never pollute QPS/latency percentiles
         self.stats = ServiceStats()
-        dummy = np.zeros((batch_size, self.db.high.shape[1]), np.float32)
+        dummy = np.zeros((batch_size, snap.high.shape[-1]), np.float32)
         self._run(dummy)
         self.stats = ServiceStats()
 
     def _refresh_pad_row(self):
         # pad row for underfull batches: the entry point's vector — its
         # search terminates in O(1) steps, so pad lanes never drag the
-        # batch (padding with a caller query would re-run it)
-        self._pad_row = np.asarray(
-            self.db.high[int(self.db.entry)])[None].astype(np.float32)
+        # batch (padding with a caller query would re-run it); sharded:
+        # shard 0's entry
+        if self.sdb is not None:
+            row = self.sdb.high[0, int(self.sdb.entries[0])]
+        else:
+            row = self.db.high[int(self.db.entry)]
+        self._pad_row = np.asarray(row)[None].astype(np.float32)
 
     # ------------------------------------------------------------------
     # mutation (MutableIndex-backed services only)
@@ -102,19 +132,28 @@ class VectorSearchService:
     def _swap(self):
         """Atomically publish the index's current epoch to the serving
         path (attribute assignment of an immutable snapshot)."""
-        self.db = self.index.db
-        self.epoch = self.index.epoch
+        if self.sindex is not None:
+            self.sdb = self.sindex.sdb
+            self.epoch = self.sindex.epoch
+        else:
+            self.db = self.index.db
+            self.epoch = self.index.epoch
         self._refresh_pad_row()
+
+    @property
+    def _mut(self):
+        return self.index if self.index is not None else self.sindex
 
     def upsert(self, vectors: np.ndarray,
                ids: Optional[np.ndarray] = None) -> np.ndarray:
         """Insert (or, with ``ids``, replace) vectors; swaps the serving
-        snapshot to the new epoch. Returns the new internal ids."""
-        if self.index is None:
-            raise RuntimeError("upsert() needs a MutableIndex-backed "
-                               "service (got a frozen PackedDB)")
-        new_ids = self.index.upsert(np.asarray(vectors, np.float32),
-                                    ids=ids)
+        snapshot to the new epoch. Returns the new internal ids (GLOBAL
+        ids on a sharded backend)."""
+        if self._mut is None:
+            raise RuntimeError("upsert() needs a mutable-index-backed "
+                               "service (got a frozen snapshot)")
+        new_ids = self._mut.upsert(np.asarray(vectors, np.float32),
+                                   ids=ids)
         self.stats.upserts += len(new_ids)
         self._swap()
         return new_ids
@@ -122,10 +161,10 @@ class VectorSearchService:
     def delete(self, ids: np.ndarray) -> int:
         """Tombstone ids; deleted ids never appear in results from the
         swapped epoch onward. Returns the number newly deleted."""
-        if self.index is None:
-            raise RuntimeError("delete() needs a MutableIndex-backed "
-                               "service (got a frozen PackedDB)")
-        n = self.index.delete(ids)
+        if self._mut is None:
+            raise RuntimeError("delete() needs a mutable-index-backed "
+                               "service (got a frozen snapshot)")
+        n = self._mut.delete(ids)
         self.stats.deletes += n
         self._swap()
         return n
@@ -136,8 +175,19 @@ class VectorSearchService:
 
     def _run(self, q: np.ndarray):
         qprep = self.filt.prepare(q)
-        fd, fi = search_batched(self.db, jnp.asarray(q),
-                                jnp.asarray(qprep), ef0=self.ef0)
+        if self.sdb is not None:
+            if self.mesh is not None:
+                fd, fi = distributed_search(self.mesh, self.sdb,
+                                            jnp.asarray(q),
+                                            jnp.asarray(qprep),
+                                            ef0=self.ef0)
+            else:
+                fd, fi = shard_search_host(self.sdb, jnp.asarray(q),
+                                           jnp.asarray(qprep),
+                                           ef0=self.ef0)
+        else:
+            fd, fi = search_batched(self.db, jnp.asarray(q),
+                                    jnp.asarray(qprep), ef0=self.ef0)
         return np.asarray(fd), np.asarray(fi)
 
     def query(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
