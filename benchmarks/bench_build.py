@@ -1,0 +1,125 @@
+"""Build throughput: the wave pipeline vs the sequential oracle.
+
+Rows (``name,us_per_call,derived`` — us_per_call is per VECTOR):
+
+  build/ref   — ``build_hnsw_ref`` wall-clock; vps + structural check.
+  build/wave  — the wave pipeline (``core/build.py``); vps, speedup vs
+                ref, recall-after-build A/B on the same queries, and
+                the structural cross-check against the oracle (shared
+                level assignment + entry, graph invariants).
+
+The canonical 8k configuration appends the tracked entry under the
+``"build"`` section of ``BENCH_table3.json`` (append-only: the previous
+build entry is pushed onto ``build.history`` — same protocol as the
+QPS rows at the top level).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _recall_after_build(g, x, pca, q, gt, recall_at_k: int) -> float:
+    import jax.numpy as jnp
+    from repro.core.search_jax import build_packed, search_batched
+    from repro.core.search_ref import recall_at
+    db = build_packed(g, pca.transform(x).astype(np.float32))
+    _, fi = search_batched(db, jnp.asarray(q), pca=pca)
+    fi = np.asarray(fi)
+    return float(np.mean([recall_at(fi[i], gt[i], recall_at_k)
+                          for i in range(len(q))]))
+
+
+def main(n_points: int = 8_000, n_queries: int = 64,
+         json_path: Optional[str] = None,
+         wave_size: Optional[int] = None, seed: int = 0):
+    from repro.configs.sift1m_phnsw import SMALL
+    from repro.core.build import build_hnsw_wave, graph_invariants
+    from repro.core.graph import build_hnsw_ref
+    from repro.core.pca import fit_pca
+    from repro.data.vectors import (brute_force_topk, make_queries,
+                                    make_sift_like)
+
+    cfg = SMALL.__class__(**{**SMALL.__dict__, "n_points": n_points,
+                             "name": f"sift{n_points // 1000}k"})
+    x = make_sift_like(cfg.n_points)
+    q = make_queries(x, n_queries)
+    gt = brute_force_topk(x, q, cfg.recall_at)
+    pca = fit_pca(x, cfg.d_low)
+
+    t0 = time.perf_counter()
+    g_ref = build_hnsw_ref(x, cfg, seed=seed)
+    t_ref = time.perf_counter() - t0
+    # warm the probe program first so the timed run (and the CI
+    # speedup gate) measures steady-state build throughput, not XLA
+    # compile latency on a cold/noisy runner
+    build_hnsw_wave(x, cfg, seed=seed, wave_size=wave_size)
+    t0 = time.perf_counter()
+    g_wave = build_hnsw_wave(x, cfg, seed=seed, wave_size=wave_size)
+    t_wave = time.perf_counter() - t0
+
+    inv_r = graph_invariants(g_ref)
+    inv_w = graph_invariants(g_wave)
+    rec_r = _recall_after_build(g_ref, x, pca, q, gt, cfg.recall_at)
+    rec_w = _recall_after_build(g_wave, x, pca, q, gt, cfg.recall_at)
+    # structural cross-check: both builders share sample_levels, so a
+    # given seed must produce identical levels and entry point
+    lv_match = int((g_ref.levels == g_wave.levels).all())
+    en_match = int(g_ref.entry == g_wave.entry)
+
+    rows = [
+        ("build/ref", t_ref / n_points * 1e6,
+         f"vps={n_points / t_ref:.0f};recall@10={rec_r:.3f};"
+         f"invariants={'ok' if inv_r['ok'] else 'FAIL'};"
+         f"mean_deg0={inv_r['mean_degree'][0]:.1f}"),
+        ("build/wave", t_wave / n_points * 1e6,
+         f"vps={n_points / t_wave:.0f};recall@10={rec_w:.3f};"
+         f"speedup_vs_ref={t_ref / t_wave:.2f};"
+         f"recall_delta={rec_w - rec_r:+.4f};"
+         f"invariants={'ok' if inv_w['ok'] else 'FAIL'};"
+         f"mean_deg0={inv_w['mean_degree'][0]:.1f};"
+         f"levels_match={lv_match};entry_match={en_match}"),
+    ]
+
+    if json_path:
+        entry = {
+            "bench": "build",
+            "n_points": n_points,
+            "wave_size": wave_size or cfg.wave_size,
+            "wave_vps": n_points / t_wave,
+            "ref_vps": n_points / t_ref,
+            "speedup_vs_ref": t_ref / t_wave,
+            "recall_at_10_wave": rec_w,
+            "recall_at_10_ref": rec_r,
+            "invariants_ok": bool(inv_w["ok"] and inv_r["ok"]),
+            "levels_match": bool(lv_match),
+        }
+        p = Path(json_path)
+        doc = {}
+        if p.exists():
+            try:
+                doc = json.loads(p.read_text())
+            except ValueError as e:
+                # never silently replace a corrupted tracked trajectory
+                # with a build-only document — fail loudly instead
+                raise RuntimeError(
+                    f"{p} exists but is not valid JSON; refusing to "
+                    f"overwrite the tracked trajectory") from e
+        prev = doc.get("build")
+        history = []
+        if isinstance(prev, dict):
+            history = prev.pop("history", [])
+            history.append(prev)
+        doc["build"] = {**entry, "history": history}
+        p.write_text(json.dumps(doc, indent=2) + "\n")
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

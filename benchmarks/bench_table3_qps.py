@@ -166,18 +166,23 @@ def main(n_points: int = 50_000, n_queries: int = 200,
                         for a in ab},
         }
         # append-only perf trajectory: latest entry at top level (the
-        # tracked number), prior --perf-smoke runs under "history"
+        # tracked number), prior --perf-smoke runs under "history"; the
+        # "build" section (bench_build's own append-only trajectory) is
+        # carried forward untouched, not buried into the QPS history
         p = Path(json_path)
-        history = []
+        history, build = [], None
         if p.exists():
             try:
                 prev = json.loads(p.read_text())
                 history = prev.pop("history", [])
+                build = prev.pop("build", None)
                 history.append(prev)
             except (ValueError, KeyError):
                 pass
-        p.write_text(json.dumps({**entry, "history": history},
-                                indent=2) + "\n")
+        doc = {**entry, "history": history}
+        if build is not None:
+            doc["build"] = build
+        p.write_text(json.dumps(doc, indent=2) + "\n")
     return emit(rows)
 
 

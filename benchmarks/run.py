@@ -28,6 +28,14 @@ def main() -> None:
     ap.add_argument("--churn", action="store_true",
                     help="only the mutable-index churn benchmark "
                          "(mixed insert/delete/query workload)")
+    ap.add_argument("--build", action="store_true",
+                    help="only the build benchmark: wave-pipeline vs "
+                         "sequential-oracle throughput (vectors/sec) "
+                         "and recall-after-build A/B; the canonical "
+                         "8k/default-wave run appends the tracked "
+                         "'build' section of BENCH_table3.json")
+    ap.add_argument("--wave-size", type=int, default=None,
+                    help="override cfg.wave_size for --build")
     ap.add_argument("--filter", choices=("pca", "pq", "none"),
                     default="pca", dest="filter_kind",
                     help="filter stage for the measured batched row "
@@ -61,9 +69,24 @@ def main() -> None:
     json_path = str(Path(__file__).resolve().parents[1]
                     / "BENCH_table3.json")
 
-    from benchmarks import (bench_churn, bench_fig2_kselect,
+    from benchmarks import (bench_build, bench_churn, bench_fig2_kselect,
                             bench_fig5_energy, bench_kernel_footprint,
                             bench_pq_ablation, bench_table3_qps)
+
+    if args.build:
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        n = args.n_points or 8_000
+        # the tracked "build" section pins the canonical 8k /
+        # default-wave configuration; other sizes are CSV-only
+        jp = json_path if (n == 8_000 and args.wave_size is None) \
+            else None
+        bench_build.main(n_points=n, n_queries=n_queries,
+                         json_path=jp, wave_size=args.wave_size)
+        if jp:
+            print(f"# wrote {jp} (build section)", file=sys.stderr)
+        print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+        return
 
     if args.churn:
         print("name,us_per_call,derived")

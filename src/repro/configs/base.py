@@ -220,6 +220,25 @@ class PHNSWConfig:
     ef_construction: int = 100
     recall_at: int = 10
     dtype: str = "float32"
+    # ---- construction pipeline (core/build.py) ----
+    # "wave": batched device-accelerated builder — insert in waves of
+    # ``wave_size``, one fused-kernel beam search per wave against the
+    # current snapshot, vectorized diversity selection + bidirectional
+    # linking over the whole wave. "ref": the sequential host builder
+    # (build_hnsw_ref), kept as the recall/structure oracle.
+    builder: str = "wave"
+    # vectors per construction wave. Larger waves amortize the per-wave
+    # snapshot + probe overhead; smaller waves reduce snapshot staleness
+    # (wave members probe a graph that predates the wave — the
+    # intra-wave distance block covers wave-internal neighbors).
+    wave_size: int = 2048
+    # upper-layer beam width of the wave builder's device probe (layers
+    # >= 1 mostly supply descent seeds; the sequential oracle descends
+    # with ef=1, and M upper-layer links only need ~M candidates — the
+    # intra-wave block supplements them). None = full ef_construction
+    # at every layer. Does NOT apply to MutableIndex inserts (their
+    # probe keeps the full beam).
+    wave_ef_upper: Optional[int] = 16
     # ---- filter stage (core/filters.py) ----
     # which low-cost filter ranks candidates before (or instead of)
     # high-dim re-ranking: "pca" (the paper's dense low-dim projection),

@@ -1,5 +1,7 @@
 from repro.core.pca import PCA, fit_pca
-from repro.core.graph import HNSWGraph, build_hnsw, cached_graph
+from repro.core.graph import (HNSWGraph, build_hnsw, build_hnsw_ref,
+                              cached_graph)
+from repro.core.build import build_hnsw_wave, graph_invariants
 from repro.core.filters import (FilterSpec, IdentityFilter, PCAFilter,
                                 PQFilter, make_filter)
 from repro.core.search_ref import (SearchStats, search_hnsw, search_phnsw,
@@ -11,7 +13,8 @@ from repro.core.cost_model import (DDR4, HBM, PROCESSOR, QueryCost,
 from repro.core.kselect import select_schedule, sweep_k0, sweep_k1
 
 __all__ = [
-    "PCA", "fit_pca", "HNSWGraph", "build_hnsw", "cached_graph",
+    "PCA", "fit_pca", "HNSWGraph", "build_hnsw", "build_hnsw_ref",
+    "build_hnsw_wave", "graph_invariants", "cached_graph",
     "FilterSpec", "IdentityFilter", "PCAFilter", "PQFilter",
     "make_filter", "SearchStats", "search_hnsw", "search_phnsw",
     "search_filtered", "search_sharded", "run_queries",

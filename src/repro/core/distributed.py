@@ -135,7 +135,8 @@ def _pad_rows(a: np.ndarray, n: int, fill) -> np.ndarray:
 
 def build_sharded(x: np.ndarray, cfg: PHNSWConfig, filt, n_shards: int,
                   *, deleted: Optional[np.ndarray] = None,
-                  graphs=None, seed: int = 0) -> ShardedDB:
+                  graphs=None, seed: int = 0,
+                  builder: Optional[str] = None) -> ShardedDB:
     """Partition ``x`` into ``n_shards`` (remainder distributed, no tail
     dropped), build one HNSW graph per shard, and stack the packed
     databases. ``filt`` is the SHARED filter — any
@@ -144,7 +145,10 @@ def build_sharded(x: np.ndarray, cfg: PHNSWConfig, filt, n_shards: int,
     ([n] bool, optional) seeds the per-shard tombstone bitmaps.
     ``graphs`` (per-shard ``HNSWGraph`` over exactly the shard_bounds
     partition) skips the builds — graphs are filter-independent, so
-    callers comparing filter kinds build once."""
+    callers comparing filter kinds build once. Shard builds route
+    through the one construction pipeline (``builder`` defaults to
+    ``cfg.builder`` — the wave pipeline; equal-sized shards share its
+    compiled probe program, so P shards pay ONE compile)."""
     from repro.core.filters import PCAFilter
     if isinstance(filt, PCA):
         filt = PCAFilter(filt, low_dtype=cfg.low_dtype)
@@ -158,7 +162,7 @@ def build_sharded(x: np.ndarray, cfg: PHNSWConfig, filt, n_shards: int,
             g = graphs[s]
             assert len(g.x) == b - a, "graphs must match shard_bounds"
         else:
-            g = build_hnsw(xs, cfg, seed=seed + s)
+            g = build_hnsw(xs, cfg, seed=seed + s, builder=builder)
         # keep layer counts uniform across shards for stacking
         dbs.append(build_packed(g, filt.encode(xs), filt=filt,
                                 drop_empty_layers=False))

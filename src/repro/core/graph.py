@@ -1,10 +1,18 @@
-"""HNSW graph construction (paper's C phase; host-side, numpy).
+"""HNSW graph construction (paper's C phase).
 
 Standard Malkov-Yashunin insertion: geometric level assignment
 (mL = 1/ln(M)), greedy descent through upper layers, ef_construction beam
 search + closest-M neighbor selection with degree-bounded bidirectional
-linking. Construction is host-side (inherently sequential, done once);
-the S phase is what pHNSW accelerates.
+linking. Two builders share those semantics (DESIGN.md § Construction
+pipeline):
+
+  * ``build_hnsw_ref`` — the sequential host insertion loop (numpy +
+    heapq), kept as the recall/structure oracle;
+  * the WAVE builder (``core/build.py``) — inserts in batches of
+    ``cfg.wave_size``, probing each wave on device with the fused
+    S-phase kernels and linking the whole wave with vectorized
+    diversity selection. ``build_hnsw`` dispatches on ``cfg.builder``
+    ("wave" by default).
 
 Adjacency is stored as fixed-degree arrays ([N, M_l] int32, -1 padded) —
 the regular layout both the cost model (layout (3)) and the fixed-shape
@@ -12,8 +20,11 @@ JAX search build on.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import heapq
 import math
+import time
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import List, Optional
@@ -138,8 +149,11 @@ def add_link(x: np.ndarray, adj_layer: np.ndarray, i: int, j: int) -> bool:
     return True
 
 
-def build_hnsw(x: np.ndarray, cfg: PHNSWConfig, *, seed: int = 0,
-               verbose: bool = False) -> HNSWGraph:
+def build_hnsw_ref(x: np.ndarray, cfg: PHNSWConfig, *, seed: int = 0,
+                   verbose: bool = False) -> HNSWGraph:
+    """Sequential Malkov-Yashunin insertion — the recall/structure
+    oracle for the wave builder (``core/build.py``), and the fallback
+    selected by ``cfg.builder == "ref"``."""
     n, dim = x.shape
     rng = np.random.default_rng(seed)
     levels = sample_levels(n, cfg, rng)
@@ -147,17 +161,13 @@ def build_hnsw(x: np.ndarray, cfg: PHNSWConfig, *, seed: int = 0,
     adj = [np.full((n, cfg.degree(l)), -1, np.int32)
            for l in range(n_layers)]
 
-    def connect(i, j, layer):
-        add_link(x, adj[layer], i, j)
-
     entry = 0
     top = int(levels[0])
-    order = np.arange(n)
-    for count, i in enumerate(order):
-        if verbose and count and count % 10000 == 0:
-            print(f"  insert {count}/{n}", flush=True)
-        if count == 0:
-            continue
+    t0 = time.perf_counter()
+    for i in range(1, n):
+        if verbose and i % 10000 == 0:
+            vps = i / max(time.perf_counter() - t0, 1e-9)
+            print(f"  insert {i}/{n} ({vps:.0f} vec/s)", flush=True)
         l_i = int(levels[i])
         q = x[i]
         eps = [entry]
@@ -175,7 +185,7 @@ def build_hnsw(x: np.ndarray, cfg: PHNSWConfig, *, seed: int = 0,
             neigh = _select_heuristic(x, res, m_l)
             adj[l][i, :len(neigh)] = neigh
             for e in neigh:
-                connect(e, i, l)
+                add_link(x, adj[l], int(e), i)
             eps = [e for _, e in res]
         if l_i > top:
             entry = int(i)
@@ -186,13 +196,51 @@ def build_hnsw(x: np.ndarray, cfg: PHNSWConfig, *, seed: int = 0,
     return HNSWGraph(cfg=cfg, x=x, levels=levels, layers=adj, entry=entry)
 
 
+def build_hnsw(x: np.ndarray, cfg: PHNSWConfig, *, seed: int = 0,
+               verbose: bool = False, builder: Optional[str] = None,
+               wave_size: Optional[int] = None) -> HNSWGraph:
+    """Build the C-phase graph with the builder selected by ``builder``
+    (default ``cfg.builder``): "wave" — the batched device-accelerated
+    wave pipeline (``core/build.py``), "ref" — the sequential host
+    oracle. Both share ``sample_levels``, so a given seed yields the
+    SAME level assignment (and therefore the same entry point) under
+    either builder."""
+    builder = builder or getattr(cfg, "builder", "wave")
+    if builder == "ref":
+        return build_hnsw_ref(x, cfg, seed=seed, verbose=verbose)
+    if builder != "wave":
+        raise ValueError(f"unknown builder {builder!r} "
+                         "(expected 'wave' or 'ref')")
+    from repro.core.build import build_hnsw_wave   # graph <-> build cycle
+    return build_hnsw_wave(x, cfg, seed=seed, verbose=verbose,
+                           wave_size=wave_size)
+
+
 # --------------------------- disk cache -------------------------------------
 
+# Bump whenever ANY builder's output changes for a fixed (cfg, seed) —
+# stale cache entries from an older construction pipeline must never be
+# served as if freshly built.
+GRAPH_BUILD_VERSION = 2
+
+
+def _cfg_fingerprint(cfg: PHNSWConfig) -> str:
+    """Short stable hash over the FULL config (not just M/efc): any
+    field can steer construction (wave_size, n_layers, degrees, ...),
+    so two configs that differ anywhere must never share a cache
+    entry."""
+    items = sorted(dataclasses.asdict(cfg).items())
+    return hashlib.sha1(repr(items).encode()).hexdigest()[:10]
+
+
 def cached_graph(x: np.ndarray, cfg: PHNSWConfig, cache_dir: Path,
-                 *, seed: int = 0, verbose: bool = False) -> HNSWGraph:
+                 *, seed: int = 0, verbose: bool = False,
+                 builder: Optional[str] = None) -> HNSWGraph:
     cache_dir = Path(cache_dir)
+    builder = builder or getattr(cfg, "builder", "wave")
     key = f"hnsw_{cfg.name}_{len(x)}_{x.shape[1]}_M{cfg.M}" \
-          f"_efc{cfg.ef_construction}_s{seed}"
+          f"_efc{cfg.ef_construction}_s{seed}" \
+          f"_{builder}v{GRAPH_BUILD_VERSION}_{_cfg_fingerprint(cfg)}"
     f = cache_dir / f"{key}.npz"
     if f.exists():
         z = np.load(f)
@@ -200,7 +248,7 @@ def cached_graph(x: np.ndarray, cfg: PHNSWConfig, cache_dir: Path,
         return HNSWGraph(cfg=cfg, x=x, levels=z["levels"],
                          layers=[z[f"adj{l}"] for l in range(n_layers)],
                          entry=int(z["entry"]))
-    g = build_hnsw(x, cfg, seed=seed, verbose=verbose)
+    g = build_hnsw(x, cfg, seed=seed, verbose=verbose, builder=builder)
     cache_dir.mkdir(parents=True, exist_ok=True)
     np.savez_compressed(
         f, levels=g.levels, entry=g.entry, n_layers=len(g.layers),

@@ -299,8 +299,15 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, qprep,
         d_w, c_w = C_d[:, :W], C_i[:, :W]
         # termination is monotone (F.max only shrinks, the popped min
         # only grows), so the freeze is latched per query; frozen
-        # queries keep popping into masked work, which is harmless
-        done = done | (C_d[:, 0] > F_d[:, -1])          # lines 7-8
+        # queries keep popping into masked work, which is harmless.
+        # An exhausted frontier (slot 0 is the -1/INF pad) also
+        # latches: nothing left to expand can ever improve F — this is
+        # what the host reference's "while C" does, and without it a
+        # query on a sparse/empty layer spins through the whole step
+        # budget doing masked work (the construction probe publishes
+        # not-yet-populated top layers, where that spin dominates)
+        done = done | (C_d[:, 0] > F_d[:, -1]) \
+            | (C_i[:, 0] < 0)                           # lines 7-8
         # per-slot expansion gate: a popped candidate past F.max is
         # dead forever, so dropping it unexpanded is exact; the budget
         # term keeps total expansions <= steps even when W ∤ steps
@@ -402,6 +409,55 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, qprep,
     out = jax.lax.while_loop(cond, body, state)
     _, _, _, F_d, F_i, _, _, _, nsteps, dhe = out
     return F_d, F_i, nsteps, dhe
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ef", "k", "filter_deleted",
+                                    "ef_upper"))
+def probe_neighborhoods(db, queries, qprep, ef, k,
+                        filter_deleted=True, ef_upper=None):
+    """On-device neighborhood probe for a batch of to-be-inserted
+    vectors: the serving traversal run at every layer with the
+    construction beam (ef = ef_construction), each layer's full top-ef
+    seeding the next (richer than the serial ef=1 descent). The C-phase
+    device half shared by the wave builder (``core/build.py``) and the
+    mutable index (``index/mutable.py``): the host keeps only the cheap
+    vectorized linking.
+
+    ``filter_deleted`` (static; requires ``db.deleted``) excludes
+    tombstoned nodes at EVERY layer — new nodes must never link to the
+    dead. The one-shot wave builder passes False (a fresh build has no
+    tombstone bitmap; not-yet-inserted rows are unreachable, nothing
+    links to them).
+
+    ``ef_upper`` (static) narrows the beam at layers above 0: the
+    upper-layer beam mostly supplies DESCENT seeds (only the ~1/M
+    fraction of nodes with level >= 1 link there), and the sequential
+    oracle descends with ef=1 — a beam between those extremes trades a
+    little upper-layer candidate richness for the probe wall-clock the
+    beam's ~ef expansion steps cost at every layer. None keeps the full
+    ``ef`` everywhere. Returns ([L, B, ef] dists, [L, B, ef] ids),
+    bottom layer FIRST (out[l] = layer l); upper-layer rows are padded
+    to ef width with INF/-1 when ``ef_upper`` trims them."""
+    B = queries.shape[0]
+    ep = jnp.broadcast_to(
+        jnp.asarray(db.entry, jnp.int32).reshape(()), (B, 1))
+    ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), queries)
+    out_d, out_i = [], []
+    for layer in range(len(db.layers) - 1, -1, -1):
+        ef_l = ef if layer == 0 else min(ef_upper or ef, ef)
+        fd, fi, _, _ = search_layer_batched(
+            db, layer, queries, qprep, ep_d, ep, ef=ef_l, k=k,
+            max_steps=2 * ef_l + 16, filter_deleted=filter_deleted)
+        ep_d, ep = fd, fi
+        if ef_l < ef:
+            fd = jnp.pad(fd, ((0, 0), (0, ef - ef_l)),
+                         constant_values=INF)
+            fi = jnp.pad(fi, ((0, 0), (0, ef - ef_l)),
+                         constant_values=-1)
+        out_d.append(fd)
+        out_i.append(fi)
+    return jnp.stack(out_d[::-1]), jnp.stack(out_i[::-1])
 
 
 @functools.partial(jax.jit, static_argnames=("ef0", "k_schedule",

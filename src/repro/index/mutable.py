@@ -14,13 +14,17 @@ search program:
   per doubling, O(log N) ever). Pad slots have no adjacency (never
   traversed) and are additionally marked in the tombstone bitmap (never
   returned).
-* **Batched insert.** A new vector's ef_construction neighborhood is
-  found ON DEVICE by the same fused S-phase kernels the serving path
-  uses (``fused_expand`` / ``ksort_l`` via ``search_layer_batched``),
-  one probe per insert sub-batch, always padded to a fixed probe width.
-  Only the cheap degree-bounded bidirectional linking (the diversity
-  heuristic) runs on the host, followed by an incremental layout-(3)
-  refresh of exactly the adjacency rows that changed.
+* **Batched insert.** Inserts run through the WAVE pipeline shared
+  with the bulk builder (DESIGN.md § Construction pipeline): a new
+  vector's ef_construction neighborhood is found ON DEVICE by the same
+  fused S-phase kernels the serving path uses
+  (``search_jax.probe_neighborhoods``), one probe per insert
+  sub-batch, always padded to a fixed probe width; the host then links
+  the whole batch at once with the vectorized diversity heuristic
+  (``core/build.link_wave`` — an intra-wave distance block supplies
+  batch peers the pre-batch snapshot cannot see), followed by an
+  incremental layout-(3) refresh of exactly the adjacency rows that
+  changed.
 * **Tombstone deletes.** Deletes flip a bit in a word-packed bitmap that
   ships with the ``PackedDB``; deleted nodes keep routing traffic
   (traversed) but are excluded from results (never returned). Same
@@ -40,25 +44,23 @@ view (functional arrays), and serving swaps atomically.
 """
 from __future__ import annotations
 
-import functools
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PHNSWConfig
-from repro.constants import VALID_MAX
+from repro.constants import INF
+from repro.core.build import link_wave, pad_rows_pow2, pairwise_sq
 from repro.core.filters import (FilterSpec, IdentityFilter, PCAFilter,
                                 PQFilter, make_filter)
-from repro.core.graph import (HNSWGraph, _select_heuristic, add_link,
-                              build_hnsw, sample_levels)
+from repro.core.graph import (HNSWGraph, _select_heuristic, build_hnsw,
+                              sample_levels)
 from repro.core.pca import PCA, fit_pca
 from repro.core.pq import PQCodebook
 from repro.core.search_jax import (PackedDB, PackedLayer, pack_bitmap,
-                                   search_batched, search_layer_batched)
-from repro.kernels import ops
+                                   probe_neighborhoods, search_batched)
 
 
 def _as_filter(f, cfg: PHNSWConfig) -> FilterSpec:
@@ -84,40 +86,16 @@ def _next_pow2(n: int, floor: int) -> int:
 _pack_bitmap = pack_bitmap
 
 
-def _pad_rows_pow2(rows: np.ndarray) -> np.ndarray:
-    """Pad a dirty-row id list to a power-of-two length (repeating the
-    last id — an idempotent re-set) so the eager ``.at[rows].set``
-    scatters only ever see O(log N) distinct shapes."""
-    n = max(len(rows), 1)
-    b = 1
-    while b < n:
-        b *= 2
-    return np.pad(rows, (0, b - len(rows)), mode="edge") if len(rows) \
-        else np.zeros(1, np.int64)
+# O(log N)-distinct-shape dirty-row padding, shared with the wave
+# builder's incremental snapshot refresh (historical local name)
+_pad_rows_pow2 = pad_rows_pow2
 
 
-@functools.partial(jax.jit, static_argnames=("ef", "k"))
-def _probe_jit(db, queries, qprep, ef, k):
-    """On-device neighborhood probe for a batch of to-be-inserted
-    vectors: the serving traversal run at every layer with the
-    construction beam (ef = ef_construction), each layer's full top-ef
-    seeding the next (richer than the serial ef=1 descent). Tombstoned
-    nodes are filtered at EVERY layer here — new nodes must never link
-    to the dead. Returns ([L, B, ef] dists, [L, B, ef] ids), bottom
-    layer FIRST (out[l] = layer l)."""
-    B = queries.shape[0]
-    ep = jnp.broadcast_to(
-        jnp.asarray(db.entry, jnp.int32).reshape(()), (B, 1))
-    ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), queries)
-    out_d, out_i = [], []
-    for layer in range(len(db.layers) - 1, -1, -1):
-        fd, fi, _, _ = search_layer_batched(
-            db, layer, queries, qprep, ep_d, ep, ef=ef, k=k,
-            max_steps=2 * ef + 16, filter_deleted=True)
-        out_d.append(fd)
-        out_i.append(fi)
-        ep_d, ep = fd, fi
-    return jnp.stack(out_d[::-1]), jnp.stack(out_i[::-1])
+# The on-device neighborhood probe is the wave pipeline's device half,
+# hoisted to core/search_jax.py (PR-5) — the wave builder and this
+# module share ONE compiled program family (and one jit cache counter,
+# which the zero-recompile tests read under the historical name).
+_probe_jit = probe_neighborhoods
 
 
 class MutableIndex:
@@ -397,10 +375,11 @@ class MutableIndex:
                             jnp.asarray(qprep),
                             self.cfg.ef_construction,
                             self.cfg.ef_construction_k)
-        fd, fi = np.asarray(fd), np.asarray(fi)      # [Lpub, bb, efc]
-        n_probe = fd.shape[0]
+        # [Lpub, bb, efc] -> drop the pad lanes of an underfull batch
+        fd = np.asarray(fd)[:, :b]
+        fi = np.asarray(fi)[:, :b]
 
-        # --- host state for the batch (before linking, so intra-batch
+        # --- host state for the batch (before linking, so intra-wave
         # peers are visible as candidates) ---
         self.x[ids] = xb
         self.x_low[ids] = xl
@@ -408,41 +387,20 @@ class MutableIndex:
         self.deleted[ids] = False
         self.n += b
 
-        # --- degree-bounded bidirectional linking (diversity heuristic),
-        # serial within the batch to mirror the one-shot builder ---
-        dirty: List[set] = [set() for _ in range(self.cfg.n_layers)]
-        top_changed = False
-        for j in range(b):
-            i = int(ids[j])
-            l_i = int(lvls[j])
-            for l in range(min(l_i, self.top), -1, -1):
-                cand: Dict[int, float] = {}
-                if l < n_probe:
-                    for d, c in zip(fd[l, j], fi[l, j]):
-                        if c >= 0 and d < VALID_MAX:
-                            cand[int(c)] = float(d)
-                # intra-batch peers inserted earlier (the probe's
-                # snapshot predates the batch, so it cannot see them)
-                for p in ids[:j]:
-                    p = int(p)
-                    if self.levels[p] >= l and p not in cand:
-                        diff = self.x[p] - xb[j]
-                        cand[p] = float(np.dot(diff, diff))
-                if not cand:
-                    continue
-                ordered = sorted((d, c) for c, d in cand.items())
-                sel = _select_heuristic(self.x, ordered,
-                                        self.cfg.degree(l))
-                self.adj[l][i, :] = -1
-                self.adj[l][i, :len(sel)] = sel
-                dirty[l].add(i)
-                for e in sel:
-                    if add_link(self.x, self.adj[l], int(e), i):
-                        dirty[l].add(int(e))
-            if l_i > self.top:
-                self.top = l_i
-                self.entry = i
-                top_changed = True
+        # --- vectorized wave linking (core/build.py): batched
+        # diversity selection + bidirectional linking over the whole
+        # batch; the intra-wave distance block supplies batch peers the
+        # pre-batch probe snapshot cannot see ---
+        block = pairwise_sq(xb, xb)
+        np.fill_diagonal(block, INF)
+        changed = link_wave(self.x, self.adj, ids, self.levels,
+                            fd, fi, block, self.cfg)
+        dirty: List[set] = [set(map(int, d)) for d in changed]
+        wmax = int(lvls.max())
+        top_changed = wmax > self.top
+        if top_changed:
+            self.top = wmax
+            self.entry = int(ids[int(np.argmax(lvls == wmax))])
 
         if grew or top_changed:
             self._publish_full()

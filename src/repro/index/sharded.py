@@ -56,15 +56,18 @@ class ShardedMutableIndex:
 
     @classmethod
     def build(cls, x: np.ndarray, cfg: PHNSWConfig, n_shards: int, *,
-              seed: int = 0, filt: Optional[FilterSpec] = None
-              ) -> "ShardedMutableIndex":
+              seed: int = 0, filt: Optional[FilterSpec] = None,
+              builder: Optional[str] = None) -> "ShardedMutableIndex":
         """Fit ONE shared filter on the full dataset, partition
         (remainder distributed), and build each shard's graph + mutable
-        index independently."""
+        index independently — through the one construction pipeline
+        (``builder`` defaults to ``cfg.builder``, the wave pipeline;
+        equal-sized shards reuse its compiled probe program, and the
+        shard indexes' subsequent wave inserts share it too)."""
         filt = filt or make_filter(cfg, x, seed=seed)
         shards = []
         for s, (a, b) in enumerate(shard_bounds(len(x), n_shards)):
-            g = build_hnsw(x[a:b], cfg, seed=seed + s)
+            g = build_hnsw(x[a:b], cfg, seed=seed + s, builder=builder)
             shards.append(MutableIndex.from_graph(g, filt,
                                                   seed=seed + 101 * s + 1))
         return cls(shards, filt, cfg)

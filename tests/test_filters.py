@@ -60,13 +60,15 @@ def test_ref_vs_batched_parity(small_dataset, small_graph, filters,
         r_bat.append(recall_at(fi[i], gt[i], 10))
         if set(ids.tolist()) == set(fi[i][:len(ids)].tolist()):
             exact += 1
-    assert abs(np.mean(r_bat) - np.mean(r_ref)) <= 0.02, \
-        (kind, deferred, np.mean(r_bat), np.mean(r_ref))
     # PQ quantizes distances onto a small lattice, so EXACT filter-dist
     # ties between distinct nodes (identical code rows) are common —
     # the heap oracle breaks them by id, the fixed-shape engine by
     # slot, and per-step traversal amplifies the divergence; the dense
-    # filters tie only at float-ulp granularity
+    # filters tie only at float-ulp granularity. The recall band and
+    # the bit-equality floor are both wider for pq accordingly.
+    tol = 0.03 if kind == "pq" else 0.02
+    assert abs(np.mean(r_bat) - np.mean(r_ref)) <= tol, \
+        (kind, deferred, np.mean(r_bat), np.mean(r_ref))
     floor = 0.8 if kind == "pq" else 0.9
     assert exact >= floor * len(q), \
         f"{kind}/deferred={deferred}: only {exact}/{len(q)} bit-equal"
