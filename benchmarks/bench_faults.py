@@ -1,0 +1,190 @@
+"""Fault-tolerance benchmark: the recall-vs-dead-shards curve plus the
+kill -> degraded-serve -> replica-failover -> snapshot-reseed -> recover
+cycle, with zero-recompile accounting (DESIGN.md § Fault tolerance).
+
+Two recall yardsticks per dead-shard count:
+
+* ``recall_full``  — against the FULL live ground truth: the price of
+  losing shards (necessarily ~ coverage-bounded: a query whose true
+  neighbors lived on a dead shard cannot recall them);
+* ``recall_survivor`` — against ground truth over the SURVIVING live
+  vectors only: what degraded mode is responsible for. This is the
+  gated floor (>= 0.90 at P=4 with one dead shard): the survivors must
+  answer as well as a healthy index built on just them.
+
+The canonical 8k/P=4 run appends the tracked ``faults`` section of
+``BENCH_table3.json`` (own append-only history, like ``build``); other
+sizes are CSV-only, so CI can gate on a small seeded run without
+touching the tracked trajectory.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _survivor_gt(idx, q: np.ndarray, mask: np.ndarray, at: int = 10
+                 ) -> np.ndarray:
+    """Exact top-``at`` over the live vectors of the SURVIVING shards,
+    as global ids."""
+    from repro.data.vectors import brute_force_topk
+    xs, gids = [], []
+    for s_i, s in enumerate(idx.shards):
+        if not mask[s_i]:
+            continue
+        li = s.live_ids()
+        xs.append(s.x[li])
+        gids.append(li + s_i * idx.stride)
+    g = np.concatenate(gids)
+    return g[brute_force_topk(np.concatenate(xs), q, at)]
+
+
+def _recall(fi: np.ndarray, gt: np.ndarray, at: int = 10) -> float:
+    from repro.core.search_ref import recall_at
+    return float(np.mean([recall_at(fi[i], gt[i], at)
+                          for i in range(len(gt))]))
+
+
+def main(n_points: int = 8_000, n_queries: int = 64, n_shards: int = 4,
+         json_path: Optional[str] = None, seed: int = 0,
+         reps: int = 5):
+    from repro.configs.sift1m_phnsw import SMALL
+    from repro.core import distributed as dist
+    from repro.data.vectors import make_queries, make_sift_like
+    from repro.distributed import faults
+    from repro.distributed.faults import FaultPlan, FaultPolicy
+    from repro.index import ShardedMutableIndex
+    from repro.serve import ReplicaSet, VectorSearchService
+
+    cfg = SMALL.__class__(**{**SMALL.__dict__, "n_points": n_points,
+                             "name": f"faults{n_points // 1000}k",
+                             "ef_construction": 32})
+    x = make_sift_like(n_points, seed=11)
+    q = make_queries(x, n_queries, seed=12)
+    B = min(64, n_queries)
+    qb = q[:B]
+
+    idx = ShardedMutableIndex.build(x, cfg, n_shards, seed=1)
+    # ground truth in the sharded GLOBAL id space (gid = shard * stride
+    # + local), which is what searches return
+    gt_full = idx.live_ground_truth(qb, 10)
+    pol = FaultPolicy(deadline_ms=250.0, max_retries=2, backoff_ms=5.0,
+                      dead_after_failures=2)
+    svc = VectorSearchService(idx, batch_size=B, fault_policy=pol)
+
+    rows, curve = [], []
+
+    # ---- recall / coverage / latency vs dead shards (the tracked
+    # degradation curve; masks are data — one compiled program) ----
+    idx.search(qb, live=np.ones(n_shards, bool))[1].block_until_ready()
+    for k_dead in range(n_shards):
+        mask = np.ones(n_shards, bool)
+        mask[:k_dead] = False
+        fd = fi = None
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fd, fi, st = idx.search(qb, live=mask, return_stats=True)
+            fi.block_until_ready()
+        us = (time.perf_counter() - t0) / reps / B * 1e6
+        fi = np.asarray(fi)
+        rec_full = _recall(fi, gt_full)
+        rec_surv = _recall(fi, _survivor_gt(idx, qb, mask))
+        cov = st["coverage"]
+        curve.append({"dead_shards": k_dead, "coverage": cov,
+                      "recall_full": rec_full,
+                      "recall_survivor": rec_surv,
+                      "us_per_query": us})
+        rows.append((f"faults/dead{k_dead}", us,
+                     f"coverage={cov:.4f};recall_full={rec_full:.3f};"
+                     f"recall_survivor={rec_surv:.3f};"
+                     f"live_shards={int(mask.sum())}/{n_shards}"))
+
+    # ---- the full cycle: kill -> degraded -> failover -> reseed ->
+    # recover, recompile counters frozen across all of it ----
+    rs = ReplicaSet.replicate(svc, 2)
+    rs.query(qb)                              # both replicas warm
+    counters = (dist.search_cache_sizes(), dist.resilient_cache_sizes())
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        rs.query(qb)
+    healthy_ms = (time.perf_counter() - t0) / reps * 1e3
+
+    plan = faults.install(FaultPlan(seed=seed))
+    plan.add("kill_shard", 0)
+    rs.query(qb)                              # pays detection+retries
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _, _, st = rs.query(qb, return_stats=True)
+    degraded_ms = (time.perf_counter() - t0) / reps * 1e3
+    degraded_cov = st["coverage"]
+
+    plan.add("kill_replica", 0)               # primary replica dies
+    t0 = time.perf_counter()
+    rs.query(qb)                              # fails over mid-request
+    failover_ms = (time.perf_counter() - t0) * 1e3
+
+    plan.heal()                               # faults repaired
+    faults.clear()
+    t0 = time.perf_counter()
+    rs.recover(0)                             # snapshot ship + replay
+    reseed_ms = (time.perf_counter() - t0) * 1e3
+    for r in rs.replicas:                     # shard dead-marks clear
+        if r.svc.health is not None:
+            for s in range(n_shards):
+                r.svc.recover_shard(s)
+    _, _, st = rs.query(qb, return_stats=True)
+    recovered_cov = st["coverage"]
+
+    zero_recompiles = (dist.search_cache_sizes(),
+                       dist.resilient_cache_sizes()) == counters
+    rows.append(("faults/cycle", degraded_ms * 1e3 / B,
+                 f"healthy_ms={healthy_ms:.2f};"
+                 f"degraded_ms={degraded_ms:.2f};"
+                 f"degraded_coverage={degraded_cov:.4f};"
+                 f"failover_ms={failover_ms:.2f};"
+                 f"reseed_ms={reseed_ms:.1f};"
+                 f"recovered_coverage={recovered_cov:.4f};"
+                 f"zero_recompiles={int(zero_recompiles)}"))
+
+    if json_path:
+        entry = {
+            "bench": "faults",
+            "n_points": n_points,
+            "n_shards": n_shards,
+            "batch": B,
+            "curve": curve,
+            "healthy_query_ms": healthy_ms,
+            "degraded_query_ms": degraded_ms,
+            "failover_ms": failover_ms,
+            "reseed_ms": reseed_ms,
+            "zero_recompiles": bool(zero_recompiles),
+        }
+        p = Path(json_path)
+        doc = {}
+        if p.exists():
+            try:
+                doc = json.loads(p.read_text())
+            except ValueError as e:
+                # never silently replace a corrupted tracked trajectory
+                raise RuntimeError(
+                    f"{p} exists but is not valid JSON; refusing to "
+                    f"overwrite the tracked trajectory") from e
+        prev = doc.get("faults")
+        history = []
+        if isinstance(prev, dict):
+            history = prev.pop("history", [])
+            history.append(prev)
+        doc["faults"] = {**entry, "history": history}
+        p.write_text(json.dumps(doc, indent=2) + "\n")
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

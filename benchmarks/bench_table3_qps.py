@@ -167,21 +167,25 @@ def main(n_points: int = 50_000, n_queries: int = 200,
         }
         # append-only perf trajectory: latest entry at top level (the
         # tracked number), prior --perf-smoke runs under "history"; the
-        # "build" section (bench_build's own append-only trajectory) is
-        # carried forward untouched, not buried into the QPS history
+        # "build" and "faults" sections (bench_build's / bench_faults'
+        # own append-only trajectories) are carried forward untouched,
+        # not buried into the QPS history
         p = Path(json_path)
-        history, build = [], None
+        history, build, flts = [], None, None
         if p.exists():
             try:
                 prev = json.loads(p.read_text())
                 history = prev.pop("history", [])
                 build = prev.pop("build", None)
+                flts = prev.pop("faults", None)
                 history.append(prev)
             except (ValueError, KeyError):
                 pass
         doc = {**entry, "history": history}
         if build is not None:
             doc["build"] = build
+        if flts is not None:
+            doc["faults"] = flts
         p.write_text(json.dumps(doc, indent=2) + "\n")
     return emit(rows)
 

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
@@ -116,6 +117,23 @@ class ShardedDB:
                         deleted=None if self.deleted is None
                         else self.deleted[s],
                         filter_kind=self.filter_kind)
+
+    def select(self, keep) -> "ShardedDB":
+        """The survivor-only twin of a degraded db: slice every stacked
+        leaf down to the ``keep`` shards while KEEPING each survivor's
+        original global offset — global ids and the merge tie-break
+        order (lower shard first) are preserved, so searching this db
+        is the host oracle that degraded-mode (live-masked) results are
+        asserted bit-equal against."""
+        k = jnp.asarray(np.atleast_1d(np.asarray(keep, np.int64)))
+        return dataclasses.replace(
+            self,
+            adj=[a[k] for a in self.adj],
+            packed_low=[p[k] for p in self.packed_low],
+            low=self.low[k], high=self.high[k],
+            entries=self.entries[k], offsets=self.offsets[k],
+            counts=self.counts[k],
+            deleted=None if self.deleted is None else self.deleted[k])
 
 
 jax.tree_util.register_dataclass(
@@ -262,14 +280,14 @@ def _normalize(sdb: ShardedDB, ef0, k_schedule, deferred, rerank_mult):
 
 @functools.partial(jax.jit, static_argnames=("mesh", "ef0", "k_schedule",
                                              "deferred", "rerank_mult"))
-def _mesh_search_jit(mesh, sdb, queries, qprep, ef0, k_schedule,
+def _mesh_search_jit(mesh, sdb, queries, qprep, live, ef0, k_schedule,
                      deferred, rerank_mult):
     b_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     m_ax = "model"
     has_del = sdb.deleted is not None
 
     def local_search(adj, packed_low, low, high, entry, offset, count,
-                     dele, q, qp):
+                     dele, lv, q, qp):
         # leaves arrive with the leading shard dim = 1: squeeze it
         db = PackedDB(
             layers=[PackedLayer(adj=a[0], packed_low=p[0])
@@ -280,13 +298,20 @@ def _mesh_search_jit(mesh, sdb, queries, qprep, ef0, k_schedule,
         fd, gi = _shard_lists(db, offset[0], q, qp, ef0=ef0,
                               ks=k_schedule, deferred=deferred,
                               rerank_mult=rerank_mult)
+        # degraded mode: a dead shard's lists are masked to (INF, -1)
+        # — pure DATA, shapes unchanged, so kill/recover cycles reuse
+        # the compiled program (zero recompiles)
+        fd = jnp.where(lv[0], fd, INF)
+        gi = jnp.where(lv[0], gi, -1)
         fd_all = jax.lax.all_gather(fd, m_ax, axis=0)      # [P, B, E]
         gi_all = jax.lax.all_gather(gi, m_ax, axis=0)
         E = fd.shape[1]
         md, mi = _merge_lists(fd_all, gi_all, E)
         if deferred:
             dh = jax.lax.psum(
-                _owned_dist_h(high[0], offset[0], count[0], mi, q), m_ax)
+                jnp.where(lv[0],
+                          _owned_dist_h(high[0], offset[0], count[0],
+                                        mi, q), 0.0), m_ax)
             return _global_rerank(md, mi, dh, ef0)
         return md, mi
 
@@ -299,6 +324,7 @@ def _mesh_search_jit(mesh, sdb, queries, qprep, ef0, k_schedule,
         P(m_ax, None, None), P(m_ax, None, None),
         P(m_ax), P(m_ax), P(m_ax),
         P(m_ax, None) if has_del else P(),
+        P(m_ax),                              # live
         q_spec, qp_spec,
     )
     out_specs = (P(b_ax, None), P(b_ax, None))
@@ -306,32 +332,36 @@ def _mesh_search_jit(mesh, sdb, queries, qprep, ef0, k_schedule,
                    out_specs=out_specs, check_rep=False)
     dele = sdb.deleted if has_del else jnp.zeros((), jnp.int32)
     return fn(sdb.adj, sdb.packed_low, sdb.low, sdb.high, sdb.entries,
-              sdb.offsets, sdb.counts, dele, queries, qprep)
+              sdb.offsets, sdb.counts, dele, live, queries, qprep)
 
 
 @functools.partial(jax.jit, static_argnames=("ef0", "k_schedule",
                                              "deferred", "rerank_mult"))
-def _host_search_jit(sdb, queries, qprep, ef0, k_schedule, deferred,
-                     rerank_mult):
+def _host_search_jit(sdb, queries, qprep, live, ef0, k_schedule,
+                     deferred, rerank_mult):
     """The meshless twin of ``_mesh_search_jit``: an unrolled loop over
     shards + the same merge and global re-rank. all_gather == stack,
     psum == sum of the per-shard owned contributions (exactly one
-    non-zero term per slot, so the float result is bit-equal)."""
+    non-zero term per slot, so the float result is bit-equal).
+    ``live`` [P] bool masks dead shards to (INF, -1) — data, not shape,
+    so degraded mode never recompiles."""
     Pn = sdb.n_shards
     fds, gis = [], []
     for s in range(Pn):
         fd, gi = _shard_lists(sdb.shard_db(s), sdb.offsets[s], queries,
                               qprep, ef0=ef0, ks=k_schedule,
                               deferred=deferred, rerank_mult=rerank_mult)
-        fds.append(fd)
-        gis.append(gi)
+        fds.append(jnp.where(live[s], fd, INF))
+        gis.append(jnp.where(live[s], gi, -1))
     E = fds[0].shape[1]
     md, mi = _merge_lists(jnp.stack(fds), jnp.stack(gis), E)
     if deferred:
         dh = jnp.zeros_like(md)
         for s in range(Pn):
-            dh = dh + _owned_dist_h(sdb.high[s], sdb.offsets[s],
-                                    sdb.counts[s], mi, queries)
+            dh = dh + jnp.where(live[s],
+                                _owned_dist_h(sdb.high[s], sdb.offsets[s],
+                                              sdb.counts[s], mi, queries),
+                                0.0)
         return _global_rerank(md, mi, dh, ef0)
     return md, mi
 
@@ -351,36 +381,95 @@ def _prepare_qprep(sdb: ShardedDB, queries, q_low, filt):
                      f"{sdb.filter_kind!r} filter")
 
 
+def _norm_live(sdb: ShardedDB, live) -> jax.Array:
+    """[P] bool live mask (default: everyone lives). Always a DATA
+    argument of the compiled programs — all-live and degraded requests
+    share one program."""
+    if live is None:
+        return jnp.ones((sdb.n_shards,), bool)
+    return jnp.asarray(live).astype(bool)
+
+
+def shard_live_counts(sdb: ShardedDB) -> np.ndarray:
+    """[P] live (owned, non-tombstoned) row counts per shard — the
+    denominator basis of the degraded-mode ``coverage`` stat. Counts
+    each shard's ownership span minus the tombstone bits inside it
+    (pad slots sit outside the span or are born tombstoned, so both
+    frozen unequal shards and mutable capacity-padded shards report
+    their true live population)."""
+    counts = np.asarray(sdb.counts, np.int64)
+    if sdb.deleted is None:
+        return counts
+    words = np.asarray(sdb.deleted).astype(np.uint32)       # [P, nw]
+    bits = np.unpackbits(words.view(np.uint8), axis=1,
+                         bitorder="little")                 # [P, nw*32]
+    dead_in_span = np.array([int(bits[s, :counts[s]].sum())
+                             for s in range(len(counts))], np.int64)
+    return counts - dead_in_span
+
+
+def coverage_stats(sdb: ShardedDB, live) -> dict:
+    """The degraded-mode accounting attached to ``return_stats``
+    results: ``coverage`` = fraction of the index's live vectors
+    reachable through the surviving shards (exact, tombstone-aware),
+    plus the raw masks/counts."""
+    lc = shard_live_counts(sdb)
+    lv = np.ones(sdb.n_shards, bool) if live is None \
+        else np.asarray(live, bool)
+    total = int(lc.sum())
+    reach = int(lc[lv].sum())
+    return {"coverage": reach / max(total, 1),
+            "degraded": bool(~lv.all()),
+            "live_shards": int(lv.sum()),
+            "n_shards": sdb.n_shards,
+            "live_mask": lv,
+            "reachable": reach, "total_live": total}
+
+
 def distributed_search(mesh: Mesh, sdb: ShardedDB, queries, q_low=None,
                        *, filt=None, ef0: int = 0, k_schedule=None,
                        deferred: Optional[bool] = None,
-                       rerank_mult: Optional[int] = None):
+                       rerank_mult: Optional[int] = None,
+                       live=None, return_stats: bool = False):
     """Sharded batched search over ``mesh``. queries: [B, D] global;
     ``q_low`` is the active filter's per-query prep (or pass ``filt``
     to compute it here; the identity filter needs neither). Returns
     (dists [B, ef0], GLOBAL idx [B, ef0]). On a 1-shard mesh this is
     bit-equal to single-shard ``search_batched`` for every filter kind
-    and re-rank mode."""
+    and re-rank mode. ``live`` ([P] bool, optional) serves DEGRADED
+    from the surviving shards only; with ``return_stats`` a third
+    element carries the ``coverage`` accounting."""
     qprep = _prepare_qprep(sdb, queries, q_low, filt)
     ef0, ks, deferred, rm = _normalize(sdb, ef0, k_schedule, deferred,
                                        rerank_mult)
-    return _mesh_search_jit(mesh, sdb, queries, qprep, ef0, ks,
-                            deferred, rm)
+    fd, fi = _mesh_search_jit(mesh, sdb, queries, qprep,
+                              _norm_live(sdb, live), ef0, ks,
+                              deferred, rm)
+    if return_stats:
+        return fd, fi, coverage_stats(sdb, live)
+    return fd, fi
 
 
 def shard_search_host(sdb: ShardedDB, queries, q_low=None, *, filt=None,
                       ef0: int = 0, k_schedule=None,
                       deferred: Optional[bool] = None,
-                      rerank_mult: Optional[int] = None):
+                      rerank_mult: Optional[int] = None,
+                      live=None, return_stats: bool = False):
     """``distributed_search`` without a mesh: the same per-shard
     programs and the same merge, on however many devices exist (one is
     fine) — bit-equal to the mesh path. This is the simulated-shards
     entry point for single-device tests/benchmarks and the serving
-    default when no mesh is configured."""
+    default when no mesh is configured. ``live`` / ``return_stats``:
+    see ``distributed_search``."""
     qprep = _prepare_qprep(sdb, queries, q_low, filt)
     ef0, ks, deferred, rm = _normalize(sdb, ef0, k_schedule, deferred,
                                        rerank_mult)
-    return _host_search_jit(sdb, queries, qprep, ef0, ks, deferred, rm)
+    fd, fi = _host_search_jit(sdb, queries, qprep,
+                              _norm_live(sdb, live), ef0, ks,
+                              deferred, rm)
+    if return_stats:
+        return fd, fi, coverage_stats(sdb, live)
+    return fd, fi
 
 
 def search_cache_sizes() -> Tuple[int, int]:
@@ -388,3 +477,116 @@ def search_cache_sizes() -> Tuple[int, int]:
     zero-recompile assertions read these."""
     return (_mesh_search_jit._cache_size(),
             _host_search_jit._cache_size())
+
+
+# ---------------------------------------------------------------------------
+# the resilient per-shard path (serving plane, DESIGN.md § Fault
+# tolerance): probe shards ONE AT A TIME so a failure costs exactly that
+# shard's attempt, then merge whatever answered. One compiled probe
+# program serves every shard (uniform stacked shapes, shard id is data),
+# and the merge takes the answered mask as data — a kill/recover cycle
+# never recompiles anything.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("ef0", "k_schedule",
+                                             "deferred", "rerank_mult"))
+def _shard_probe_jit(sdb, s, queries, qprep, ef0, k_schedule, deferred,
+                     rerank_mult):
+    return _shard_lists(sdb.shard_db(s), sdb.offsets[s], queries, qprep,
+                        ef0=ef0, ks=k_schedule, deferred=deferred,
+                        rerank_mult=rerank_mult)
+
+
+def probe_shard(sdb: ShardedDB, s: int, queries, qprep, *, ef0: int = 0,
+                k_schedule=None, deferred: Optional[bool] = None,
+                rerank_mult: Optional[int] = None
+                ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """ONE shard's pre-merge candidate lists, timed and
+    fault-injectable: the per-shard half of the resilient serving path
+    (and the injection point of ``distributed.faults`` — kill raises,
+    stall sleeps, corrupt garbles the return). Returns
+    (fd [B, E], gi [B, E] GLOBAL ids, wall seconds); the wall time
+    feeds the per-shard straggler monitor."""
+    from repro.distributed import faults as _faults
+    ef0, ks, deferred, rm = _normalize(sdb, ef0, k_schedule, deferred,
+                                       rerank_mult)
+    plan = _faults.active()
+    # the wall clock starts BEFORE the fault hook: an injected stall is
+    # latency the coordinator actually observed, so it must feed the
+    # straggler monitor like any real slow shard
+    t0 = time.monotonic()
+    if plan is not None:
+        plan.shard_query_hook(s)
+    fd, gi = _shard_probe_jit(sdb, jnp.int32(s), queries, qprep, ef0,
+                              ks, deferred, rm)
+    gi.block_until_ready()
+    wall = time.monotonic() - t0
+    fd, gi = np.asarray(fd), np.asarray(gi)
+    if plan is not None:
+        fd, gi = plan.corrupt_hook(s, fd, gi)
+    return fd, gi, wall
+
+
+def check_shard_result(fd: np.ndarray, gi: np.ndarray, offset: int,
+                       count: int) -> bool:
+    """Merge-boundary integrity check of one shard's candidate lists:
+    distances finite-or-sentinel, non-negative, ascending; ids either
+    -1 (empty slot) or inside the shard's global ownership range. A
+    shard failing this is treated as a ``ShardCorruptError`` — its
+    answer never reaches the merge."""
+    fd = np.asarray(fd)
+    gi = np.asarray(gi)
+    if np.isnan(fd).any() or (fd < 0).any():
+        return False
+    if (np.diff(fd, axis=1) < 0).any():
+        return False
+    ok = (gi == -1) | ((gi >= offset) & (gi < offset + count))
+    return bool(ok.all())
+
+
+@functools.partial(jax.jit, static_argnames=("ef0", "deferred"))
+def _merge_surviving_jit(fd_all, gi_all, live, high, offsets, counts,
+                         queries, ef0, deferred):
+    """Merge the [P, B, E] per-shard stacks from ``probe_shard`` under
+    an answered-mask: the same masking, merge, and deferred global
+    re-rank as ``_host_search_jit`` — bit-equal to searching the
+    survivor subset."""
+    Pn = fd_all.shape[0]
+    fd_all = jnp.where(live[:, None, None], fd_all, INF)
+    gi_all = jnp.where(live[:, None, None], gi_all, -1)
+    E = fd_all.shape[2]
+    md, mi = _merge_lists(fd_all, gi_all, E)
+    if deferred:
+        dh = jnp.zeros_like(md)
+        for s in range(Pn):
+            dh = dh + jnp.where(live[s],
+                                _owned_dist_h(high[s], offsets[s],
+                                              counts[s], mi, queries),
+                                0.0)
+        return _global_rerank(md, mi, dh, ef0)
+    return md, mi
+
+
+def merge_surviving(sdb: ShardedDB, fd_all, gi_all, live, queries, *,
+                    ef0: int = 0, k_schedule=None,
+                    deferred: Optional[bool] = None,
+                    rerank_mult: Optional[int] = None):
+    """Complete a request from the shards that answered: merge the
+    stacked per-shard lists (dead/unanswered rows may hold anything —
+    they are masked to (INF, -1) first) and run the deferred global
+    re-rank over the survivors. Returns ([B, ef0] dists, [B, ef0]
+    GLOBAL ids)."""
+    ef0, ks, deferred, rm = _normalize(sdb, ef0, k_schedule, deferred,
+                                       rerank_mult)
+    return _merge_surviving_jit(jnp.asarray(np.asarray(fd_all)),
+                                jnp.asarray(np.asarray(gi_all)),
+                                _norm_live(sdb, live), sdb.high,
+                                sdb.offsets, sdb.counts, queries, ef0,
+                                deferred)
+
+
+def resilient_cache_sizes() -> Tuple[int, int]:
+    """(probe, merge) compiled-program cache sizes of the resilient
+    path — the fault-cycle zero-recompile assertions read these."""
+    return (_shard_probe_jit._cache_size(),
+            _merge_surviving_jit._cache_size())

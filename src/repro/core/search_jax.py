@@ -482,7 +482,9 @@ def search_batched(db: PackedDB, queries, qprep=None, *, pca=None,
     with ``return_stats=True`` also a dict with per-query telemetry:
     ``steps_per_layer`` [n_layers, B] (top layer first), ``steps_total``
     [B] and ``dist_h_evals`` [B] (high-dim distance evaluations — the
-    quantity deferred re-ranking trades recall against).
+    quantity deferred re-ranking trades recall against), plus the
+    serving-plane accounting pair ``coverage``/``degraded`` (trivially
+    1.0/False here; the sharded path reports real values).
 
     ``qprep`` is the active filter's per-query data; leave it None and
     pass ``filt`` (a ``core.filters.FilterSpec``) or ``pca`` (the
@@ -531,9 +533,13 @@ def search_batched(db: PackedDB, queries, qprep=None, *, pca=None,
         db, queries, qprep, ef0 or db.cfg.ef0,
         k_schedule or db.cfg.k_schedule, bool(deferred), int(rerank_mult))
     if return_stats:
+        # coverage/degraded ride along so the stats contract is uniform
+        # with the sharded degraded-mode path (core/distributed.py):
+        # a single-shard snapshot always reaches its whole live set
         return fd, fi, {"steps_per_layer": steps,
                         "steps_total": steps.sum(axis=0),
-                        "dist_h_evals": dhe}
+                        "dist_h_evals": dhe,
+                        "coverage": 1.0, "degraded": False}
     return fd, fi
 
 

@@ -48,8 +48,18 @@ class StepEvent:
 
 class StepMonitor:
     def __init__(self, *, straggler_factor: float = 2.5,
-                 dead_after_s: float = 300.0, window: int = 64):
+                 dead_after_s: float = 300.0, window: int = 64,
+                 mad_factor: Optional[float] = None):
+        """``mad_factor`` (optional) adds a robust absolute-deviation
+        term to the threshold: a step is a straggler when its wall time
+        exceeds ``max(factor * median, median + mad_factor * MAD)``.
+        The additive MAD term keeps near-zero-latency workloads (e.g.
+        sub-ms shard queries, where any scheduler hiccup is a large
+        RATIO but a tiny absolute delay) from flagging noise, while the
+        multiplicative term still catches slow-but-steady drift. None
+        preserves the original ratio-only rule."""
         self.factor = straggler_factor
+        self.mad_factor = mad_factor
         self.dead_after_s = dead_after_s
         self.times: Deque[float] = deque(maxlen=window)
         self.last_beat = time.monotonic()
@@ -57,11 +67,20 @@ class StepMonitor:
 
     def heartbeat(self, step: int, wall_s: float) -> StepEvent:
         self.last_beat = time.monotonic()
-        med = float(np.median(self.times)) if self.times else wall_s
+        if self.times:
+            hist = np.asarray(self.times)
+            med = float(np.median(hist))
+            mad = float(np.median(np.abs(hist - med)))
+        else:
+            med, mad = wall_s, 0.0
         self.times.append(wall_s)
-        if len(self.times) >= 8 and wall_s > self.factor * med:
+        thresh = self.factor * med
+        if self.mad_factor is not None:
+            thresh = max(thresh, med + self.mad_factor * mad)
+        if len(self.times) >= 8 and wall_s > thresh:
             ev = StepEvent("straggler", step, wall_s,
-                           f"{wall_s:.2f}s vs median {med:.2f}s")
+                           f"{wall_s:.2f}s vs median {med:.2f}s "
+                           f"(mad {mad:.3f}s)")
         else:
             ev = StepEvent("ok", step, wall_s)
         self.events.append(ev)

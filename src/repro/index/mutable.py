@@ -44,6 +44,7 @@ view (functional arrays), and serving swaps atomically.
 """
 from __future__ import annotations
 
+import zlib
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
@@ -51,6 +52,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.configs.base import PHNSWConfig
+from repro.distributed.faults import SnapshotCorruptError
 from repro.constants import INF
 from repro.core.build import link_wave, pad_rows_pow2, pairwise_sq
 from repro.core.filters import (FilterSpec, IdentityFilter, PCAFilter,
@@ -79,6 +81,80 @@ def _next_pow2(n: int, floor: int) -> int:
     while cap < max(int(floor), n):
         cap *= 2
     return cap
+
+
+# --------------------------------------------------------------------------
+# snapshot integrity envelope (shared by MutableIndex and the sharded
+# stacked snapshot; the safety rail under replica snapshot shipping)
+# --------------------------------------------------------------------------
+
+# bump on any change to the snapshot array schema; loads of a different
+# version raise SnapshotCorruptError instead of mis-deserializing
+SNAPSHOT_VERSION = 1
+
+
+def snapshot_checksum(arrays: Dict[str, np.ndarray]) -> int:
+    """Order-independent crc32 over every array's name, dtype, shape,
+    and bytes (the ``checksum`` entry itself excluded)."""
+    crc = 0
+    for k in sorted(arrays):
+        if k == "checksum":
+            continue
+        v = np.asarray(arrays[k])
+        meta = f"{k}|{v.dtype.str}|{v.shape}".encode()
+        crc = zlib.crc32(v.tobytes(), zlib.crc32(meta, crc))
+    return crc & 0xFFFFFFFF
+
+
+def write_snapshot(path, arrays: Dict[str, np.ndarray]) -> None:
+    """One compressed npz with the integrity envelope
+    (``format_version`` + content ``checksum``) stamped in. Honors an
+    installed ``FaultPlan``'s truncate-snapshot event (post-write) so
+    corruption-detection tests exercise the REAL file path."""
+    from repro.distributed import faults as _faults
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    arrays = dict(arrays)
+    arrays["format_version"] = np.int64(SNAPSHOT_VERSION)
+    arrays["checksum"] = np.uint32(snapshot_checksum(arrays))
+    np.savez_compressed(path, **arrays)
+    plan = _faults.active()
+    if plan is not None:
+        plan.snapshot_hook(path)
+
+
+def read_snapshot(path) -> Dict[str, np.ndarray]:
+    """Load + verify an npz written by ``write_snapshot``. Raises the
+    typed ``SnapshotCorruptError`` on an unreadable/truncated file, a
+    missing envelope, a format-version mismatch, or a content checksum
+    mismatch — never garbage-deserializes."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            arrays = {k: np.asarray(z[k]) for k in z.files}
+    except OSError as e:
+        raise SnapshotCorruptError(
+            f"snapshot {path} is unreadable/truncated: {e}") from None
+    except Exception as e:   # zlib/zip errors on partial members, etc.
+        raise SnapshotCorruptError(
+            f"snapshot {path} is unreadable/truncated "
+            f"(failed to deserialize): {e}") from None
+    if "format_version" not in arrays or "checksum" not in arrays:
+        raise SnapshotCorruptError(
+            f"snapshot {path} has no integrity envelope (pre-versioned "
+            f"or foreign npz)")
+    ver = int(arrays.pop("format_version"))
+    if ver != SNAPSHOT_VERSION:
+        raise SnapshotCorruptError(
+            f"snapshot {path}: format version {ver} != supported "
+            f"{SNAPSHOT_VERSION}")
+    want = int(arrays.pop("checksum"))
+    got = snapshot_checksum(
+        {**arrays, "format_version": np.int64(ver)})
+    if got != want:
+        raise SnapshotCorruptError(
+            f"snapshot {path}: checksum mismatch "
+            f"(stored {want:#010x}, computed {got:#010x})")
+    return arrays
 
 
 # the engine's _tombstone_bit word layout has exactly one packer
@@ -535,11 +611,10 @@ class MutableIndex:
         return search_batched(self._db, jnp.asarray(queries),
                               filt=self.filt, **kw)
 
-    def save(self, path) -> None:
-        """Snapshot the whole index (graph + vectors + tombstones +
-        filter payload + filter parameters) to one npz."""
-        path = Path(path)
-        path.parent.mkdir(parents=True, exist_ok=True)
+    def _snapshot_arrays(self) -> Dict[str, np.ndarray]:
+        """The unpadded array schema of one index snapshot (shared by
+        ``save`` and the sharded stacked snapshot, which stores one of
+        these per shard under a prefix)."""
         fk = self.filt.kind
         filt_arrays = {}
         if fk == "pca":
@@ -548,19 +623,26 @@ class MutableIndex:
                                pca_explained=self.pca.explained)
         elif fk == "pq":
             filt_arrays = dict(pq_centroids=self.filt.cb.centroids)
-        np.savez_compressed(
-            path, n=self.n, entry=self.entry, epoch=self.epoch,
-            n_layers=self.cfg.n_layers, filter_kind=fk,
+        return dict(
+            n=np.int64(self.n), entry=np.int64(self.entry),
+            epoch=np.int64(self.epoch),
+            n_layers=np.int64(self.cfg.n_layers), filter_kind=fk,
             x=self.x[:self.n], x_low=self.x_low[:self.n],
             levels=self.levels[:self.n], deleted=self.deleted[:self.n],
             **filt_arrays,
             **{f"adj{l}": self.adj[l][:self.n]
                for l in range(self.cfg.n_layers)})
 
+    def save(self, path) -> None:
+        """Snapshot the whole index (graph + vectors + tombstones +
+        filter payload + filter parameters) to one npz, under the
+        integrity envelope (format version + content checksum) that
+        ``load`` verifies."""
+        write_snapshot(path, self._snapshot_arrays())
+
     @classmethod
-    def load(cls, path, cfg: PHNSWConfig, *, seed: int = 0
-             ) -> "MutableIndex":
-        z = np.load(path)
+    def _from_arrays(cls, z: Dict[str, np.ndarray], cfg: PHNSWConfig,
+                     *, seed: int = 0) -> "MutableIndex":
         fk = str(z["filter_kind"]) if "filter_kind" in z else "pca"
         if fk == "pca":
             filt = PCAFilter(
@@ -572,8 +654,15 @@ class MutableIndex:
         else:
             filt = IdentityFilter(dim=z["x"].shape[1])
         n_layers = int(z["n_layers"])
-        idx = cls(cfg, filt, z["x"], z["x_low"], z["levels"],
-                  [z[f"adj{l}"] for l in range(n_layers)],
-                  int(z["entry"]), deleted=z["deleted"], seed=seed,
-                  epoch=int(z["epoch"]))
-        return idx
+        return cls(cfg, filt, z["x"], z["x_low"], z["levels"],
+                   [z[f"adj{l}"] for l in range(n_layers)],
+                   int(z["entry"]), deleted=z["deleted"], seed=seed,
+                   epoch=int(z["epoch"]))
+
+    @classmethod
+    def load(cls, path, cfg: PHNSWConfig, *, seed: int = 0
+             ) -> "MutableIndex":
+        """Restore from ``save``'s npz. Raises ``SnapshotCorruptError``
+        (typed, from ``repro.distributed.faults``) on a truncated,
+        bit-flipped, envelope-less, or version-mismatched file."""
+        return cls._from_arrays(read_snapshot(path), cfg, seed=seed)

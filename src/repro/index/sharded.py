@@ -37,7 +37,9 @@ from repro.core.distributed import (ShardedDB, distributed_search,
                                     shard_bounds, shard_search_host)
 from repro.core.filters import FilterSpec, make_filter
 from repro.core.graph import build_hnsw
-from repro.index.mutable import MutableIndex
+from repro.distributed import faults as _faults
+from repro.index.mutable import (MutableIndex, read_snapshot,
+                                 write_snapshot)
 
 
 class ShardedMutableIndex:
@@ -158,7 +160,13 @@ class ShardedMutableIndex:
     def _publish(self) -> None:
         """Stack the per-shard device snapshots into a new epoch's
         ShardedDB. Pure data movement — in steady state every leaf
-        keeps its shape, so compiled search programs are reused."""
+        keeps its shape, so compiled search programs are reused. An
+        installed ``FaultPlan``'s ``delay_swap`` event stretches the
+        window between mutation and publication (readers keep the
+        previous epoch — the swap stays atomic, just late)."""
+        plan = _faults.active()
+        if plan is not None:
+            plan.swap_delay_hook()
         n_pub = max(s.top for s in self.shards) + 1
         per = [s.device_layers(n_pub) for s in self.shards]
         stride = self.stride
@@ -200,10 +208,17 @@ class ShardedMutableIndex:
         Pn = self.n_shards
         assign = (self._rr + np.arange(len(xs))) % Pn
         self._rr = (self._rr + len(xs)) % Pn
+        plan = _faults.active()
         locs = {}
         for s in range(Pn):
             m = assign == s
             if m.any():
+                # a killed shard rejects its slice BEFORE any shard
+                # state changes for it (typed ShardKilledError; slices
+                # already applied to healthy shards stay applied — the
+                # caller retries the batch or reroutes)
+                if plan is not None:
+                    plan.shard_mutation_hook(s)
                 locs[s] = (m, self.shards[s].upsert(xs[m]))
         # gids are computed AFTER the post-insert capacity alignment so
         # a mid-batch growth can't hand out ids under a stale stride
@@ -229,13 +244,55 @@ class ShardedMutableIndex:
         """Shard-local tombstoning without the snapshot publish."""
         gids = np.atleast_1d(np.asarray(gids, np.int64))
         stride = self.stride
+        plan = _faults.active()
         n = 0
         for s in range(self.n_shards):
             m = (gids >= 0) & (gids // stride == s)
             if m.any():
+                if plan is not None:
+                    plan.shard_mutation_hook(s)
                 n += self.shards[s].delete(gids[m] % stride,
                                            auto_compact=False)
         return n
+
+    # ------------------------------------------------------------------
+    # snapshot (one npz for all shards — the replica-shipping unit)
+    # ------------------------------------------------------------------
+
+    def save(self, path) -> None:
+        """Snapshot EVERY shard plus the global-id bookkeeping into one
+        npz (per-shard arrays live under an ``s{i}_`` prefix), sealed
+        by the same integrity envelope as ``MutableIndex.save`` — one
+        file is the unit replica re-seeding ships."""
+        arrays = {"n_shards": np.int64(self.n_shards),
+                  "rr": np.int64(self._rr),
+                  "sharded_epoch": np.int64(self.epoch)}
+        for i, s in enumerate(self.shards):
+            for k, v in s._snapshot_arrays().items():
+                arrays[f"s{i}_{k}"] = v
+        write_snapshot(path, arrays)
+
+    @classmethod
+    def load(cls, path, cfg: PHNSWConfig, *, seed: int = 0
+             ) -> "ShardedMutableIndex":
+        """Restore a ``save``d sharded index (typed
+        ``SnapshotCorruptError`` on integrity failure). Per-shard rng
+        seeds are re-derived exactly as ``build`` derives them, so a
+        restored replica draws the same insert levels as one that
+        lived through the same history from the same seed."""
+        z = read_snapshot(path)
+        Pn = int(z["n_shards"])
+        shards = []
+        for i in range(Pn):
+            pre = f"s{i}_"
+            zi = {k[len(pre):]: v for k, v in z.items()
+                  if k.startswith(pre)}
+            shards.append(MutableIndex._from_arrays(
+                zi, cfg, seed=seed + 101 * i + 1))
+        idx = cls(shards, shards[0].filt, cfg)
+        idx._rr = int(z["rr"])
+        idx.epoch = int(z["sharded_epoch"])
+        return idx
 
     # ------------------------------------------------------------------
     # search

@@ -1,4 +1,5 @@
 from repro.serve.engine import GenerationEngine
+from repro.serve.replica import ReplicaSet
 from repro.serve.vector_service import VectorSearchService
 
-__all__ = ["GenerationEngine", "VectorSearchService"]
+__all__ = ["GenerationEngine", "ReplicaSet", "VectorSearchService"]

@@ -1,0 +1,333 @@
+"""Replica groups with failover and snapshot-shipping recovery
+(DESIGN.md § Fault tolerance; ROADMAP item 3's "replica groups with
+snapshot shipping + failover on top of the epoch-versioned atomic
+swap").
+
+A ``ReplicaSet`` holds N ``VectorSearchService`` replicas of the SAME
+logical index behind one query/upsert/delete API:
+
+* **Health-checked routing.** Queries go to the preferred (primary)
+  replica; a replica that raises a serving-plane ``FaultError`` (or is
+  killed by the installed ``FaultPlan``) is marked dead and the SAME
+  request fails over to the next healthy replica — callers never see a
+  replica die, only (at worst) degraded coverage.
+* **Replicated mutation with an op log.** Every upsert/delete gets a
+  monotonically increasing sequence number, is appended to a bounded
+  op log, and applied to every healthy replica. Ids converge because
+  inserts are deterministic (round-robin shard assignment + arange
+  local slots) and every replica sees the same op order.
+* **Snapshot shipping + idempotent re-publish.** Recovery re-seeds a
+  dead replica from a healthy donor's checksummed npz snapshot
+  (``MutableIndex.save`` / ``ShardedMutableIndex.save`` — a corrupt
+  ship raises the typed ``SnapshotCorruptError`` instead of serving
+  garbage), then replays the op-log tail the snapshot predates. Replay
+  is idempotent: each replica tracks ``applied_seq`` and skips any op
+  it already absorbed, so re-delivering the whole log is always safe
+  (the re-publish protocol needs no careful cut point).
+
+The replicas' graphs may differ microscopically after a recovery (each
+replica's insert rng walks its own path once histories diverge — HNSW
+is stochastic by construction); what converges is the STATE that
+defines correct serving: the live id -> vector map, tombstones, and
+``applied_seq``. ``assert_converged`` checks exactly that.
+"""
+from __future__ import annotations
+
+import tempfile
+from collections import deque
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.distributed import faults as faults_mod
+from repro.distributed.faults import AllReplicasDeadError, FaultError
+from repro.serve.vector_service import VectorSearchService
+
+
+@dataclass
+class ReplicaState:
+    svc: VectorSearchService
+    alive: bool = True
+    applied_seq: int = 0
+    reseeds: int = 0
+
+
+@dataclass
+class _Op:
+    kind: str                 # "upsert" | "delete"
+    seq: int
+    vectors: Optional[np.ndarray] = None
+    ids: Optional[np.ndarray] = None
+
+
+class ReplicaSet:
+    """N replicas of one logical vector-search service: failover
+    queries, replicated mutations, snapshot-shipped recovery."""
+
+    def __init__(self, services: List[VectorSearchService], *,
+                 snapshot_dir=None, oplog_capacity: int = 4096):
+        assert len(services) >= 1
+        self.replicas = [ReplicaState(svc=s) for s in services]
+        self.seq = 0
+        self.oplog: Deque[_Op] = deque(maxlen=oplog_capacity)
+        self.snapshot_dir = Path(snapshot_dir) if snapshot_dir \
+            else Path(tempfile.mkdtemp(prefix="phnsw_replicas_"))
+        self._primary = 0
+        # (event, replica, detail) — failover/recovery observability
+        self.events: List[Tuple[str, int, str]] = []
+
+    @classmethod
+    def replicate(cls, svc: VectorSearchService, n: int, *,
+                  snapshot_dir=None, seed: int = 0,
+                  oplog_capacity: int = 4096) -> "ReplicaSet":
+        """Clone one mutable-backed service into an N-replica set via
+        the snapshot path — each replica gets its OWN index value (no
+        shared mutable state), loaded with the same rng seed so
+        replicas that live through the same op history stay
+        convergent."""
+        if svc._mut is None:
+            raise ValueError("replicate() needs a mutable-index-backed "
+                             "service (frozen snapshots cannot absorb "
+                             "replicated mutations)")
+        rs = cls([svc], snapshot_dir=snapshot_dir,
+                 oplog_capacity=oplog_capacity)
+        path = rs.snapshot_dir / "seed.npz"
+        svc._mut.save(path)
+        for _ in range(n - 1):
+            rs.replicas.append(ReplicaState(
+                svc=rs._service_from_snapshot(path, like=svc, seed=seed)))
+        return rs
+
+    def _service_from_snapshot(self, path, *, like: VectorSearchService,
+                               seed: int = 0) -> VectorSearchService:
+        """Load a snapshot and wrap it in a service with the SAME
+        serving knobs as ``like`` (batch shape parity keeps the
+        compiled programs shared — a re-seed never recompiles)."""
+        from repro.index import MutableIndex, ShardedMutableIndex
+        cfg = like._mut.cfg
+        idx_cls = ShardedMutableIndex if like.sindex is not None \
+            else MutableIndex
+        idx = idx_cls.load(path, cfg, seed=seed)
+        return VectorSearchService(
+            idx, batch_size=like.batch, ef0=like.ef0,
+            nan_policy=like.nan_policy,
+            fault_policy=like.fault_policy, mesh=like.mesh)
+
+    # ------------------------------------------------------------------
+    # health / routing
+    # ------------------------------------------------------------------
+
+    @property
+    def n_alive(self) -> int:
+        return sum(r.alive for r in self.replicas)
+
+    def _mark_dead(self, i: int, reason: str) -> None:
+        if self.replicas[i].alive:
+            self.replicas[i].alive = False
+            self.events.append(("dead", i, reason))
+
+    def _healthy_order(self):
+        """Replica indices starting at the primary, wrapping — the
+        failover probe order."""
+        n = len(self.replicas)
+        for d in range(n):
+            i = (self._primary + d) % n
+            if self.replicas[i].alive:
+                yield i
+
+    def _check_injected_death(self, i: int) -> bool:
+        plan = faults_mod.active()
+        if plan is not None and plan.replica_dead(i):
+            self._mark_dead(i, f"killed by fault plan at t={plan.t}")
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    # query (failover)
+    # ------------------------------------------------------------------
+
+    def query(self, q: np.ndarray, *, return_stats: bool = False):
+        """Serve from the primary, failing over through the healthy
+        replicas on any serving-plane ``FaultError`` — the caller's
+        request survives every failure short of total loss
+        (``AllReplicasDeadError``)."""
+        last: Optional[Exception] = None
+        for i in self._healthy_order():
+            if self._check_injected_death(i):
+                continue
+            r = self.replicas[i]
+            try:
+                out = r.svc.query(q, return_stats=return_stats)
+            except FaultError as e:
+                self._mark_dead(i, repr(e))
+                last = e
+                continue
+            if i != self._primary:
+                self.events.append(("failover", i,
+                                    f"primary -> {i}"))
+                self._primary = i
+            return out
+        raise AllReplicasDeadError(
+            f"all {len(self.replicas)} replicas dead"
+            + (f" (last: {last!r})" if last else ""))
+
+    # ------------------------------------------------------------------
+    # replicated mutation (op log, seq-numbered, idempotent delivery)
+    # ------------------------------------------------------------------
+
+    _SKIPPED = object()        # _apply sentinel: op already absorbed
+
+    def _apply(self, r: ReplicaState, op: _Op):
+        """Deliver one op to one replica; skips ops the replica already
+        absorbed (``seq <= applied_seq`` — THE idempotence that makes
+        blanket re-publish safe). Returns the op's result, or
+        ``_SKIPPED``."""
+        if op.seq <= r.applied_seq:
+            return self._SKIPPED
+        if op.kind == "upsert":
+            out = r.svc.upsert(op.vectors, ids=op.ids)
+        else:
+            out = r.svc.delete(op.ids)
+        r.applied_seq = op.seq
+        return out
+
+    def _mutate(self, op: _Op):
+        """Append to the op log and deliver to every healthy replica;
+        a replica that cannot absorb the op is marked dead (it would
+        fall behind silently otherwise) until a snapshot re-seed
+        brings it back. Returns the first healthy replica's result
+        (identical everywhere — deterministic op application)."""
+        self.oplog.append(op)
+        result, got = None, False
+        for i, r in enumerate(self.replicas):
+            if not r.alive or self._check_injected_death(i):
+                continue
+            try:
+                out = self._apply(r, op)
+                if not got and out is not self._SKIPPED:
+                    result, got = out, True
+            except FaultError as e:
+                self._mark_dead(i, f"mutation failed: {e!r}")
+        if not got:
+            # total failure: NO replica absorbed the op, and the caller
+            # sees an exception — the op never happened. Un-log it so a
+            # later recovery cannot replay a mutation the client was
+            # told failed (which would diverge the recovered replica
+            # from the survivors).
+            self.oplog.pop()
+            self.seq = op.seq - 1
+            raise AllReplicasDeadError(
+                f"no healthy replica to apply {op.kind} seq={op.seq}")
+        return result
+
+    def upsert(self, vectors: np.ndarray,
+               ids: Optional[np.ndarray] = None) -> np.ndarray:
+        """Replicated upsert. Returns the new ids — identical on every
+        healthy replica (round-robin shard assignment + arange local
+        slots are deterministic in op order)."""
+        self.seq += 1
+        return self._mutate(_Op(
+            "upsert", self.seq, vectors=np.asarray(vectors, np.float32),
+            ids=None if ids is None else np.asarray(ids)))
+
+    def delete(self, ids: np.ndarray) -> int:
+        """Replicated delete. Returns the newly-deleted count."""
+        self.seq += 1
+        return self._mutate(_Op("delete", self.seq,
+                                ids=np.asarray(ids)))
+
+    # ------------------------------------------------------------------
+    # snapshot shipping + recovery
+    # ------------------------------------------------------------------
+
+    def checkpoint(self) -> Tuple[Path, int]:
+        """Ship a snapshot from the healthiest donor: returns
+        (path, applied_seq at save time). Recovery from a STALE
+        checkpoint is exactly as correct as from a fresh one — the
+        op-log replay covers the gap (idempotently)."""
+        for i in self._healthy_order():
+            donor = self.replicas[i]
+            path = self.snapshot_dir / \
+                f"ckpt_seq{donor.applied_seq}_r{i}.npz"
+            donor.svc._mut.save(path)
+            self.events.append(("checkpoint", i,
+                                f"seq={donor.applied_seq}"))
+            return path, donor.applied_seq
+        raise AllReplicasDeadError("no healthy donor to checkpoint from")
+
+    def recover(self, i: int, *, snapshot: Optional[Path] = None,
+                snapshot_seq: Optional[int] = None) -> int:
+        """Re-seed replica ``i``: load a donor snapshot (fresh one
+        shipped now unless a ``snapshot``/``snapshot_seq`` checkpoint
+        is given), then re-publish the op log — ops the snapshot
+        already contains are skipped by seq (idempotent), ops after it
+        replay. Returns the number of ops replayed. The replica serves
+        again immediately after."""
+        if snapshot is None:
+            snapshot, snapshot_seq = self.checkpoint()
+        assert snapshot_seq is not None
+        r = self.replicas[i]
+        donor_like = None
+        for j in self._healthy_order():
+            donor_like = self.replicas[j].svc
+            break
+        if donor_like is None:
+            raise AllReplicasDeadError("no healthy replica to model the "
+                                       "recovered service on")
+        r.svc = self._service_from_snapshot(snapshot, like=donor_like)
+        r.applied_seq = snapshot_seq
+        r.alive = True
+        r.reseeds += 1
+        replayed = self.republish(i)
+        self.events.append(("recovered", i,
+                            f"seq={snapshot_seq}+{replayed} replayed"))
+        return replayed
+
+    def republish(self, i: int) -> int:
+        """Deliver the WHOLE op log to replica ``i``; already-applied
+        ops are skipped by seq. Safe to call any number of times —
+        this idempotence is what lets a recovering replica converge
+        without coordinating a precise log cut."""
+        r = self.replicas[i]
+        n = 0
+        for op in list(self.oplog):
+            if self._apply(r, op) is not self._SKIPPED:
+                n += 1
+        return n
+
+    # ------------------------------------------------------------------
+    # convergence accounting
+    # ------------------------------------------------------------------
+
+    def assert_converged(self) -> dict:
+        """Verify every healthy replica agrees on the serving STATE:
+        applied_seq, live id set, and the id -> vector map. Returns a
+        small report; raises AssertionError on divergence."""
+        healthy = [r for r in self.replicas if r.alive]
+        assert healthy, "no healthy replicas to compare"
+        ref = healthy[0]
+        ref_ids = ref.svc._mut.live_ids()
+        for r in healthy[1:]:
+            assert r.applied_seq == ref.applied_seq, \
+                (r.applied_seq, ref.applied_seq)
+            ids = r.svc._mut.live_ids()
+            np.testing.assert_array_equal(ids, ref_ids)
+            np.testing.assert_array_equal(_live_vectors(r.svc),
+                                          _live_vectors(ref.svc))
+        return {"n_healthy": len(healthy),
+                "applied_seq": ref.applied_seq,
+                "n_live": int(len(ref_ids))}
+
+
+def _live_vectors(svc: VectorSearchService) -> np.ndarray:
+    """The live id -> vector map of a service's mutable index, in live
+    id order (the convergence invariant replicas must agree on)."""
+    mut = svc._mut
+    if svc.sindex is not None:
+        stride = mut.stride
+        gids = mut.live_global_ids()
+        return np.stack([mut.shards[g // stride].x[g % stride]
+                         for g in gids])
+    return mut.x[mut.live_ids()]

@@ -3,7 +3,8 @@ system (single-query ASIC -> batched TPU service).
 
 Requests accumulate into fixed-size batches (the compiled search program
 has a static batch dim); underfull batches are padded with the entry
-point and results trimmed. Tracks QPS and latency percentiles.
+point and results trimmed. Tracks QPS and latency percentiles (over a
+fixed-size window — a long-running service holds constant memory).
 
 Backed by any of four snapshots behind one API:
 
@@ -25,30 +26,57 @@ The NON-steady-state events that do recompile — capacity doubling
 current top layer — are each O(log N) over an index's lifetime; the
 sharded index additionally renumbers global ids on growth; see
 DESIGN.md § Mutable index / § Sharded serving.
+
+**Fault tolerance** (DESIGN.md § Fault tolerance): pass a
+``FaultPolicy`` to serve a sharded backend resiliently — each shard is
+probed individually (``core.distributed.probe_shard``), failures get
+bounded exponential-backoff retries inside a per-request deadline
+budget, per-shard wall times feed a median+MAD straggler monitor,
+repeated failures mark a shard dead (skipped until ``recover_shard``),
+and the request completes DEGRADED from whichever shards answered —
+results then carry exact ``coverage`` accounting via
+``query(..., return_stats=True)``. All of it is data-masked over the
+same compiled programs: a kill/recover cycle never recompiles.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple, Union
+from typing import Deque, Optional, Tuple, Union
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.distributed import (ShardedDB, distributed_search,
-                                    shard_search_host)
+from repro.core.distributed import (ShardedDB, _normalize,
+                                    check_shard_result, distributed_search,
+                                    merge_surviving, probe_shard,
+                                    shard_live_counts, shard_search_host)
 from repro.core.filters import FilterSpec, IdentityFilter, PCAFilter
 from repro.core.pca import PCA
 from repro.core.search_jax import PackedDB, search_batched
+from repro.distributed import faults as faults_mod
+from repro.distributed.faults import (AllShardsDeadError, FaultPolicy,
+                                      ShardCorruptError, ShardFaultError,
+                                      ShardHealth)
 from repro.index import MutableIndex, ShardedMutableIndex
+
+# latency reservoir size: big enough for stable p99 estimates, small
+# enough that a service serving forever holds constant memory
+LATENCY_WINDOW = 4096
 
 
 @dataclass
 class ServiceStats:
-    latencies_ms: List[float] = field(default_factory=list)
+    """Rolling serving statistics. ``latencies_ms`` is a bounded deque
+    (maxlen ``LATENCY_WINDOW``) — ``percentile()`` reads the most
+    recent window, counters are exact totals."""
+    latencies_ms: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
     queries: int = 0
     upserts: int = 0
     deletes: int = 0
+    degraded_queries: int = 0
     started: float = field(default_factory=time.monotonic)
 
     @property
@@ -58,7 +86,7 @@ class ServiceStats:
     def percentile(self, p: float) -> float:
         if not self.latencies_ms:
             return 0.0
-        return float(np.percentile(self.latencies_ms, p))
+        return float(np.percentile(np.asarray(self.latencies_ms), p))
 
 
 class VectorSearchService:
@@ -66,18 +94,34 @@ class VectorSearchService:
                                  ShardedMutableIndex],
                  pca: Optional[PCA] = None, *, batch_size: int = 64,
                  ef0: Optional[int] = None,
-                 filt: Optional[FilterSpec] = None, mesh=None):
+                 filt: Optional[FilterSpec] = None, mesh=None,
+                 nan_policy: str = "raise",
+                 fault_policy: Optional[FaultPolicy] = None):
         """``filt`` (any ``core.filters.FilterSpec``) generalizes the
         seed's ``pca`` argument; mutable indexes bring their own filter.
         A frozen identity-filter db needs neither. Sharded backends
         (``ShardedDB`` / ``ShardedMutableIndex``) serve GLOBAL ids;
         ``mesh`` selects the collective path (single-device shard loop
-        otherwise — bit-equal)."""
+        otherwise — bit-equal).
+
+        ``nan_policy``: what to do with NaN/Inf entries in queries and
+        upserts — ``"raise"`` (default, a clear ValueError at the API
+        boundary instead of silent mis-serving) or ``"sanitize"``
+        (zero them).
+
+        ``fault_policy`` (sharded backends, host path) turns on the
+        resilient per-shard query loop: retry/deadline/straggler
+        handling plus degraded-mode completion — see the module
+        docstring."""
         self.index: Optional[MutableIndex] = None
         self.sindex: Optional[ShardedMutableIndex] = None
         self.sdb: Optional[ShardedDB] = None
         self.db: Optional[PackedDB] = None
         self.mesh = mesh
+        if nan_policy not in ("raise", "sanitize"):
+            raise ValueError(f"nan_policy must be 'raise' or 'sanitize', "
+                             f"got {nan_policy!r}")
+        self.nan_policy = nan_policy
         if isinstance(db, ShardedMutableIndex):
             self.sindex = db
             self.sdb = db.sdb
@@ -104,9 +148,25 @@ class VectorSearchService:
         self.pca = filt.pca if isinstance(filt, PCAFilter) else pca
         self.batch = batch_size
         self.ef0 = ef0 or snap.cfg.ef0
+        self._dim = int(snap.high.shape[-1])
         mut = self.index or self.sindex
         self.epoch = mut.epoch if mut else 0
+        self.fault_policy = fault_policy
+        self.health: Optional[ShardHealth] = None
+        if fault_policy is not None:
+            if self.sdb is None:
+                raise ValueError("fault_policy needs a sharded backend "
+                                 "(ShardedDB / ShardedMutableIndex) — "
+                                 "single-shard redundancy is the "
+                                 "ReplicaSet's job")
+            if mesh is not None:
+                raise ValueError("fault_policy drives the per-shard "
+                                 "host path; it cannot be combined "
+                                 "with mesh=")
+            self.health = ShardHealth(self.sdb.n_shards, fault_policy)
+        self.last_stats = {"coverage": 1.0, "degraded": False}
         self._refresh_pad_row()
+        self._refresh_live_counts()
         # warm the compiled program, then reset stats so compile time
         # and the warmup batch never pollute QPS/latency percentiles
         self.stats = ServiceStats()
@@ -125,6 +185,53 @@ class VectorSearchService:
             row = self.db.high[int(self.db.entry)]
         self._pad_row = np.asarray(row)[None].astype(np.float32)
 
+    def _refresh_live_counts(self):
+        """Host cache of per-shard live populations (the ``coverage``
+        denominators) + ownership spans — refreshed on every epoch
+        swap, read per degraded request."""
+        if self.sdb is not None:
+            self._live_counts = shard_live_counts(self.sdb)
+            self._offsets_np = np.asarray(self.sdb.offsets, np.int64)
+            self._counts_np = np.asarray(self.sdb.counts, np.int64)
+
+    # ------------------------------------------------------------------
+    # input validation (the API boundary: clear errors here instead of
+    # shape/dtype explosions deep inside jit, or NaN mis-serving)
+    # ------------------------------------------------------------------
+
+    def _validate_vectors(self, a, what: str, *, dim: Optional[int] = None
+                          ) -> np.ndarray:
+        a = np.asarray(a)
+        if a.dtype == object or not (np.issubdtype(a.dtype, np.floating)
+                                     or np.issubdtype(a.dtype, np.integer)):
+            raise ValueError(f"{what} must be numeric, got dtype "
+                             f"{a.dtype}")
+        dim = self._dim if dim is None else dim
+        if a.ndim != 2 or a.shape[1] != dim:
+            raise ValueError(f"{what} must be [n, {dim}], got shape "
+                             f"{a.shape}")
+        if len(a) == 0:
+            raise ValueError(f"empty {what} batch")
+        a = a.astype(np.float32, copy=False)
+        finite = np.isfinite(a)
+        if not finite.all():
+            if self.nan_policy == "sanitize":
+                a = np.where(finite, a, np.float32(0.0))
+            else:
+                raise ValueError(
+                    f"{what} contain {int((~finite).sum())} non-finite "
+                    f"(NaN/Inf) values; construct the service with "
+                    f"nan_policy='sanitize' to zero them instead")
+        return a
+
+    def _validate_queries(self, q) -> np.ndarray:
+        q = self._validate_vectors(q, "queries")
+        if len(q) > self.batch:
+            raise ValueError(
+                f"{len(q)} queries exceed batch_size={self.batch}; "
+                f"use run_stream() to serve in batches")
+        return q
+
     # ------------------------------------------------------------------
     # mutation (MutableIndex-backed services only)
     # ------------------------------------------------------------------
@@ -139,6 +246,7 @@ class VectorSearchService:
             self.db = self.index.db
             self.epoch = self.index.epoch
         self._refresh_pad_row()
+        self._refresh_live_counts()
 
     @property
     def _mut(self):
@@ -152,8 +260,16 @@ class VectorSearchService:
         if self._mut is None:
             raise RuntimeError("upsert() needs a mutable-index-backed "
                                "service (got a frozen snapshot)")
-        new_ids = self._mut.upsert(np.asarray(vectors, np.float32),
-                                   ids=ids)
+        vectors = self._validate_vectors(vectors, "upsert vectors")
+        if ids is not None:
+            ids = np.atleast_1d(np.asarray(ids))
+            if not np.issubdtype(ids.dtype, np.integer):
+                raise ValueError(f"ids must be integers, got dtype "
+                                 f"{ids.dtype}")
+            if len(ids) != len(vectors):
+                raise ValueError(f"{len(ids)} ids for {len(vectors)} "
+                                 f"vectors")
+        new_ids = self._mut.upsert(vectors, ids=ids)
         self.stats.upserts += len(new_ids)
         self._swap()
         return new_ids
@@ -174,6 +290,8 @@ class VectorSearchService:
     # ------------------------------------------------------------------
 
     def _run(self, q: np.ndarray):
+        if self.health is not None:
+            return self._run_resilient(q)
         qprep = self.filt.prepare(q)
         if self.sdb is not None:
             if self.mesh is not None:
@@ -190,10 +308,93 @@ class VectorSearchService:
                                     jnp.asarray(qprep), ef0=self.ef0)
         return np.asarray(fd), np.asarray(fi)
 
-    def query(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def _coverage(self, answered: np.ndarray) -> float:
+        lc = self._live_counts
+        return int(lc[answered].sum()) / max(int(lc.sum()), 1)
+
+    def _run_resilient(self, q: np.ndarray):
+        """The fault-tolerant sharded query loop: probe every non-dead
+        shard individually (bounded retry + exponential backoff inside
+        the per-request deadline budget), validate each answer at the
+        merge boundary, feed wall times to the per-shard straggler
+        monitor, then complete the request from whichever shards
+        answered (degraded when any didn't)."""
+        pol = self.fault_policy
+        sdb = self.sdb
+        Pn = sdb.n_shards
+        plan = faults_mod.active()
+        if plan is not None:
+            plan.tick()
+        qd = jnp.asarray(q)
+        qp = jnp.asarray(self.filt.prepare(q))
+        ef0, _, deferred, rm = _normalize(sdb, self.ef0, None, None, None)
+        E = ef0 * rm if deferred else ef0
+        fd_all = np.zeros((Pn, len(q), E), np.float32)
+        gi_all = np.full((Pn, len(q), E), -1, np.int32)
+        answered = np.zeros(Pn, bool)
+        deadline = time.monotonic() + pol.deadline_ms / 1e3
+        for s in range(Pn):
+            if self.health.dead[s]:
+                continue
+            for attempt in range(pol.max_retries + 1):
+                if attempt and time.monotonic() >= deadline:
+                    break     # retry budget spent: serve degraded
+                try:
+                    fd, gi, wall = probe_shard(sdb, s, qd, qp,
+                                               ef0=self.ef0)
+                    if not check_shard_result(
+                            fd, gi, int(self._offsets_np[s]),
+                            int(self._counts_np[s])):
+                        raise ShardCorruptError(
+                            f"shard {s} failed the merge-boundary "
+                            f"integrity check")
+                    self.health.heartbeat(s, wall)
+                    fd_all[s], gi_all[s] = fd, gi
+                    answered[s] = True
+                    break
+                except ShardFaultError as e:
+                    if self.health.failure(s, e):
+                        break   # marked dead: stop retrying it
+                    pause = min(pol.backoff_ms * (2 ** attempt) / 1e3,
+                                max(deadline - time.monotonic(), 0.0))
+                    if pause > 0:
+                        time.sleep(pause)
+        if not answered.any():
+            raise AllShardsDeadError(
+                f"no shard of {Pn} answered within the "
+                f"{pol.deadline_ms:.0f}ms budget")
+        fd, fi = merge_surviving(sdb, fd_all, gi_all, answered, qd,
+                                 ef0=self.ef0)
+        degraded = bool(~answered.all())
+        self.last_stats = {
+            "coverage": self._coverage(answered),
+            "degraded": degraded,
+            "live_shards": int(answered.sum()),
+            "n_shards": Pn,
+            "answered": answered,
+        }
+        if degraded:
+            self.stats.degraded_queries += 1
+        return np.asarray(fd), np.asarray(fi)
+
+    def recover_shard(self, s: int) -> None:
+        """Clear a shard's dead mark after the underlying fault healed
+        (operator action / fault-plan heal): the next request probes it
+        again — on the SAME compiled programs (recovery is data)."""
+        if self.health is None:
+            raise RuntimeError("recover_shard() needs a fault_policy-"
+                               "enabled service")
+        self.health.recover(s)
+
+    def query(self, q: np.ndarray, *, return_stats: bool = False
+              ) -> Tuple[np.ndarray, ...]:
         """q: [n, D] with n <= batch_size; underfull batches are padded
         with the entry point. Returns (dists, indices) for the n real
-        queries; only those count toward stats."""
+        queries; only those count toward stats. With ``return_stats``
+        a third element reports this request's serving health:
+        ``coverage`` (fraction of live vectors reachable — exact),
+        ``degraded``, and ``latency_ms``."""
+        q = self._validate_queries(q)
         n = len(q)
         t0 = time.monotonic()
         if n < self.batch:
@@ -204,6 +405,9 @@ class VectorSearchService:
         dt = (time.monotonic() - t0) * 1000.0
         self.stats.queries += n
         self.stats.latencies_ms.extend([dt] * n)
+        if return_stats:
+            return fd[:n], fi[:n], {**self.last_stats,
+                                    "latency_ms": dt}
         return fd[:n], fi[:n]
 
     def run_stream(self, queries: np.ndarray) -> Tuple[np.ndarray, dict]:

@@ -494,6 +494,55 @@ def test_golden_recall_floors_tombstoned(golden8k):
         assert r4 >= r1 - 0.01, (deferred, r1, r4)
 
 
+def test_golden_degraded_recall_floor(golden8k):
+    """The ISSUE-6 acceptance bar on the golden 8k datum: killing k of
+    4 shards serves DEGRADED with (a) exact coverage accounting, (b)
+    full-ground-truth recall monotonically non-increasing in k (losing
+    shards only ever costs the neighbors they owned), (c) recall
+    against the SURVIVORS' ground truth >= 0.90 — degraded mode
+    answers as well as a healthy index built on just the survivors —
+    and (d) no dead shard's id ever surfacing."""
+    from repro.core.distributed import (build_sharded, shard_bounds,
+                                        shard_live_counts,
+                                        shard_search_host)
+    from repro.core.search_ref import recall_at
+    from repro.data.vectors import brute_force_topk
+    d = golden8k
+    filt = d["filters"]["pca"]
+    sdb4 = build_sharded(d["x"], d["cfg"], filt, 4, graphs=d["graphs4"])
+    qd = jnp.asarray(d["q"])
+    qp = filt.prepare_jnp(qd)
+    bounds = shard_bounds(8000, 4)
+    lc = shard_live_counts(sdb4)
+    nq = len(d["q"])
+    prev = None
+    for k_dead in range(3):                     # nested dead sets
+        mask = np.ones(4, bool)
+        mask[:k_dead] = False
+        fd, fi, st = shard_search_host(sdb4, qd, qp, live=mask,
+                                       return_stats=True)
+        fi = np.asarray(fi)
+        assert st["coverage"] == pytest.approx(
+            lc[mask].sum() / lc.sum())          # exact, not estimated
+        assert st["degraded"] == (k_dead > 0)
+        for s in range(4):                      # dead ids never surface
+            if not mask[s]:
+                a, b = bounds[s]
+                assert not ((fi >= a) & (fi < b)).any()
+        r_full = float(np.mean([recall_at(fi[i], d["gt"][i], 10)
+                                for i in range(nq)]))
+        if prev is not None:
+            assert r_full <= prev + 0.02, (k_dead, prev, r_full)
+        prev = r_full
+        rows = np.concatenate([np.arange(a, b)
+                               for s, (a, b) in enumerate(bounds)
+                               if mask[s]])
+        gt_s = rows[brute_force_topk(d["x"][rows], d["q"], 10)]
+        r_surv = float(np.mean([recall_at(fi[i], gt_s[i], 10)
+                                for i in range(nq)]))
+        assert r_surv >= 0.90, (k_dead, r_surv)
+
+
 def test_search_batched_explicit_entry(small_dataset, small_graph,
                                        small_xlow, small_pca):
     """The explicit entry override reaches the descent: seeding from the

@@ -1,0 +1,592 @@
+"""Fault-tolerant serving plane (ISSUE-6): deterministic fault
+injection, degraded-mode search bit-equal to a survivor oracle with
+exact coverage accounting, retry/backoff inside a deadline budget,
+straggler detection over per-shard query walls, checksummed snapshot
+envelopes, replica failover + snapshot-shipped recovery with an
+idempotent op log — and zero steady-state recompiles across the whole
+kill -> degraded -> recover cycle (every failure state is DATA)."""
+import time
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.distributed import faults
+from repro.distributed.fault import StepMonitor
+from repro.distributed.faults import (AllReplicasDeadError, FaultPlan,
+                                      FaultPolicy, ShardHealth,
+                                      ShardKilledError,
+                                      SnapshotCorruptError)
+
+
+# --------------------------------------------------------------------------
+# fault-plan unit behavior (no index needed)
+# --------------------------------------------------------------------------
+
+def test_fault_plan_windows_heal_and_determinism():
+    plan = FaultPlan(seed=7)
+    plan.add("kill_shard", 1, at=3, until=5)
+    plan.add("stall_shard", 0, param=0.01)          # from now, open-ended
+    assert not plan.is_active("kill_shard", 1)      # t=0 < at=3
+    assert plan.is_active("stall_shard", 0)
+    plan.tick(3)
+    assert plan.is_active("kill_shard", 1)
+    assert not plan.is_active("kill_shard", 0)      # targeted
+    plan.tick(2)                                    # t=5 == until: over
+    assert not plan.is_active("kill_shard", 1)
+    assert plan.heal("stall_shard") == 1
+    assert not plan.is_active("stall_shard", 0)
+    # chaos scripts are reproducible: same seed, same events
+    a = FaultPlan.chaos(4, seed=3, n_events=6)
+    b = FaultPlan.chaos(4, seed=3, n_events=6)
+    assert [(e.kind, e.target, e.at, e.until) for e in a.events] == \
+           [(e.kind, e.target, e.at, e.until) for e in b.events]
+    assert FaultPlan.chaos(4, seed=4, n_events=6).events != a.events
+    with pytest.raises(AssertionError):
+        plan.add("melt_shard", 0)
+
+
+def test_fault_plan_hooks_raise_and_log():
+    with faults.inject(FaultPlan()) as plan:
+        assert faults.active() is plan
+        plan.add("kill_shard", 2)
+        with pytest.raises(ShardKilledError):
+            plan.shard_query_hook(2)
+        plan.shard_query_hook(1)                    # other shards fine
+        with pytest.raises(ShardKilledError):
+            plan.shard_mutation_hook(2)
+        assert plan.log == [(0, "kill_shard", 2), (0, "kill_shard", 2)]
+        # corrupt garbles a COPY (caller arrays untouched) into exactly
+        # what check_shard_result must reject
+        plan.add("corrupt_shard", 0)
+        fd = np.zeros((2, 4), np.float32)
+        gi = np.arange(8, dtype=np.int32).reshape(2, 4)
+        cfd, cgi = plan.corrupt_hook(0, fd, gi)
+        assert np.isnan(cfd[:, 0]).all() and not np.isnan(fd).any()
+        assert (cgi < 0).all() and (gi >= 0).all()
+        fd2, gi2 = plan.corrupt_hook(1, fd, gi)     # untargeted shard
+        assert fd2 is fd and gi2 is gi
+    assert faults.active() is None                  # inject() scope-cleans
+
+
+def test_step_monitor_mad_factor():
+    """The additive MAD term keeps sub-ms workloads from flagging jitter
+    that is a large RATIO but a tiny absolute delay; a genuine stall
+    still fires. mad_factor=None preserves the ratio-only seed rule."""
+    walls = [0.0010, 0.0011, 0.0009, 0.0010, 0.0012, 0.0010, 0.0009,
+             0.0011]
+    ratio_only = StepMonitor(straggler_factor=2.0)
+    robust = StepMonitor(straggler_factor=2.0, mad_factor=20.0)
+    for i, w in enumerate(walls):
+        assert ratio_only.heartbeat(i, w).kind == "ok"
+        assert robust.heartbeat(i, w).kind == "ok"
+    # 2.5x the median but only +1.5ms absolute: scheduler noise
+    assert ratio_only.heartbeat(8, 0.0025).kind == "straggler"
+    assert robust.heartbeat(8, 0.0025).kind == "ok"
+    # a real stall clears both terms of the max()
+    assert robust.heartbeat(9, 0.050).kind == "straggler"
+
+
+def test_shard_health_dead_mark_and_recover():
+    h = ShardHealth(3, FaultPolicy(dead_after_failures=2))
+    assert not h.failure(1, RuntimeError("x"))      # streak 1: not dead
+    assert h.failure(1, RuntimeError("x"))          # streak 2: dead
+    assert h.dead[1] and h.n_live == 2
+    np.testing.assert_array_equal(h.live_mask(), [True, False, True])
+    h.heartbeat(0, 0.001)                           # success resets streak
+    assert h.failures[0] == 0
+    h.recover(1)
+    assert not h.dead[1] and h.failures[1] == 0
+    kinds = [k for k, _, _ in h.events]
+    assert kinds == ["failure", "failure", "dead", "recovered"]
+
+
+def test_check_shard_result_rejects_garbage():
+    from repro.core.distributed import check_shard_result
+    from repro.constants import INF
+    good_d = np.array([[0.0, 1.0, INF, INF]], np.float32)
+    good_i = np.array([[100, 105, -1, -1]], np.int32)
+    assert check_shard_result(good_d, good_i, 100, 10)
+    bad_nan = good_d.copy(); bad_nan[0, 0] = np.nan
+    assert not check_shard_result(bad_nan, good_i, 100, 10)
+    bad_neg = good_d.copy(); bad_neg[0, 0] = -1.0
+    assert not check_shard_result(bad_neg, good_i, 100, 10)
+    bad_ord = np.array([[1.0, 0.5, INF, INF]], np.float32)
+    assert not check_shard_result(bad_ord, good_i, 100, 10)
+    alien = good_i.copy(); alien[0, 0] = 99          # below offset
+    assert not check_shard_result(good_d, alien, 100, 10)
+    alien[0, 0] = 110                                # past the span
+    assert not check_shard_result(good_d, alien, 100, 10)
+
+
+# --------------------------------------------------------------------------
+# degraded-mode search: bit-equality vs the survivor oracle
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def frozen_sdb3(small_dataset, small_pca, small_graph):
+    from repro.core.distributed import build_sharded
+    x, q, _ = small_dataset
+    sdb = build_sharded(x, small_graph.cfg, small_pca, 3)
+    qd = jnp.asarray(q[:16])
+    qp = jnp.asarray(small_pca.transform(q[:16]).astype(np.float32))
+    return sdb, qd, qp
+
+
+@pytest.mark.parametrize("deferred", [False, True])
+@pytest.mark.parametrize("dead", [(0,), (2,), (0, 2)])
+def test_degraded_bit_equal_survivor_subset(frozen_sdb3, dead, deferred):
+    """A live-mask search must be BIT-EQUAL to searching an index built
+    from only the surviving shards (``sdb.select`` keeps the original
+    offsets, so global ids line up) — degraded mode is a data mask, not
+    a different algorithm. Coverage is exact."""
+    from repro.core.distributed import shard_live_counts, shard_search_host
+    sdb, qd, qp = frozen_sdb3
+    mask = np.ones(3, bool)
+    mask[list(dead)] = False
+    fd, fi, st = shard_search_host(sdb, qd, qp, deferred=deferred,
+                                   live=mask, return_stats=True)
+    survivors = sdb.select(np.nonzero(mask)[0])
+    fd_o, fi_o = shard_search_host(survivors, qd, qp, deferred=deferred)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(fi_o))
+    np.testing.assert_array_equal(np.asarray(fd), np.asarray(fd_o))
+    lc = shard_live_counts(sdb)
+    assert st["coverage"] == pytest.approx(lc[mask].sum() / lc.sum())
+    assert st["degraded"] and st["live_shards"] == int(mask.sum())
+    # dead shards' ids never surface
+    off = np.asarray(sdb.offsets); cnt = np.asarray(sdb.counts)
+    fi = np.asarray(fi)
+    for s in dead:
+        assert not ((fi >= off[s]) & (fi < off[s] + cnt[s])).any()
+
+
+@pytest.mark.parametrize("deferred", [False, True])
+def test_probe_and_merge_bit_equal_masked_path(frozen_sdb3, deferred):
+    """The resilient building blocks (per-shard ``probe_shard`` + an
+    answered-mask ``merge_surviving``) reassemble to the exact same
+    bits as the one-program live-mask search — for the full mask AND a
+    degraded one. This is the equality the service's retry loop rides
+    on: HOW the per-shard lists were obtained (one program, retries,
+    order) can never change the merged answer."""
+    from repro.core.distributed import (merge_surviving, probe_shard,
+                                        shard_search_host)
+    sdb, qd, qp = frozen_sdb3
+    outs = [probe_shard(sdb, s, qd, qp, deferred=deferred)
+            for s in range(3)]
+    assert all(w > 0 for _, _, w in outs)
+    fd_all = np.stack([o[0] for o in outs])
+    gi_all = np.stack([o[1] for o in outs])
+    for mask in (np.array([True] * 3), np.array([True, False, True])):
+        fd_m, fi_m = merge_surviving(sdb, fd_all, gi_all, mask, qd,
+                                     deferred=deferred)
+        fd_r, fi_r = shard_search_host(sdb, qd, qp, deferred=deferred,
+                                       live=mask)
+        np.testing.assert_array_equal(np.asarray(fi_m), np.asarray(fi_r))
+        np.testing.assert_array_equal(np.asarray(fd_m), np.asarray(fd_r))
+
+
+def test_single_shard_coverage_stats_contract(small_dataset, small_pca,
+                                              small_graph):
+    """``return_stats`` carries the same coverage keys on the
+    single-shard engine (always 1.0 / not degraded) — one stats
+    contract across every serving path."""
+    from repro.core.search_jax import build_packed, search_batched
+    x, q, _ = small_dataset
+    db = build_packed(small_graph,
+                      small_pca.transform(x).astype(np.float32))
+    qd = jnp.asarray(q[:8])
+    qp = jnp.asarray(small_pca.transform(q[:8]).astype(np.float32))
+    out = search_batched(db, qd, qp, return_stats=True)
+    st = out[-1]
+    assert st["coverage"] == 1.0 and st["degraded"] is False
+
+
+# --------------------------------------------------------------------------
+# the resilient service: kill / corrupt / stall / recover
+# --------------------------------------------------------------------------
+
+N_FAULT, P_FAULT, B_FAULT = 2000, 4, 16
+
+
+@pytest.fixture(scope="module")
+def fault_svc():
+    from repro.configs.base import PHNSWConfig
+    from repro.data.vectors import make_queries, make_sift_like
+    from repro.index import ShardedMutableIndex
+    from repro.serve.vector_service import VectorSearchService
+    cfg = PHNSWConfig(name="faults2k", n_points=N_FAULT,
+                      ef_construction=32)
+    x = make_sift_like(N_FAULT, seed=31)
+    q = make_queries(x, B_FAULT, seed=32)
+    idx = ShardedMutableIndex.build(x, cfg, P_FAULT, seed=1)
+    pol = FaultPolicy(deadline_ms=250.0, max_retries=2, backoff_ms=1.0,
+                      dead_after_failures=2, straggler_factor=4.0,
+                      mad_factor=6.0)
+    svc = VectorSearchService(idx, batch_size=B_FAULT, fault_policy=pol)
+    return svc, idx, q
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults(request):
+    """No test leaks an installed plan or dead marks into the next."""
+    yield
+    faults.clear()
+    if "fault_svc" in request.fixturenames:
+        svc = request.getfixturevalue("fault_svc")[0]
+        for s in range(P_FAULT):
+            svc.recover_shard(s)
+        svc.health.failures[:] = 0
+
+
+def test_service_kill_degrade_recover_zero_recompiles(fault_svc):
+    """The acceptance cycle: kill one of four shards under a live
+    service -> requests complete DEGRADED with exact coverage and
+    results bit-equal to the live-mask oracle -> the shard is marked
+    dead after the failure streak (later requests skip it: no retry
+    tax, no further hook hits) -> heal + recover -> full coverage
+    again. The compiled-program caches never grow."""
+    from repro.core import distributed as dist
+    svc, idx, q = fault_svc
+    fd_h, fi_h, st = svc.query(q, return_stats=True)
+    assert st["coverage"] == 1.0 and not st["degraded"]
+    # warm the ORACLE program too (idx.search is the one-shot masked
+    # path, not what the resilient service runs) so the frozen counters
+    # measure only the service's kill/degrade/recover cycle
+    idx.search(q)
+    counters = (dist.search_cache_sizes(), dist.resilient_cache_sizes())
+
+    with faults.inject(FaultPlan()) as plan:
+        plan.add("kill_shard", 1)
+        fd_d, fi_d, st = svc.query(q, return_stats=True)
+        assert st["degraded"] and st["live_shards"] == P_FAULT - 1
+        lc = svc._live_counts
+        mask = np.ones(P_FAULT, bool); mask[1] = False
+        assert st["coverage"] == pytest.approx(lc[mask].sum() / lc.sum())
+        # bit-equal to the one-program degraded oracle
+        fd_o, fi_o = idx.search(q, live=mask)
+        np.testing.assert_array_equal(fi_d, np.asarray(fi_o))
+        np.testing.assert_array_equal(fd_d, np.asarray(fd_o))
+        # dead-marked after the streak: the next request never probes it
+        assert svc.health.dead[1]
+        hits = len(plan.log)
+        svc.query(q)
+        assert len(plan.log) == hits, "dead shard still being probed"
+        assert svc.stats.degraded_queries >= 2
+
+    svc.recover_shard(1)                    # plan healed by inject exit
+    fd_r, fi_r, st = svc.query(q, return_stats=True)
+    assert st["coverage"] == 1.0 and not st["degraded"]
+    np.testing.assert_array_equal(fi_r, fi_h)
+    np.testing.assert_array_equal(fd_r, fd_h)
+    assert (dist.search_cache_sizes(),
+            dist.resilient_cache_sizes()) == counters, \
+        "the kill/degrade/recover cycle recompiled the engine"
+
+
+def test_service_corrupt_shard_quarantined(fault_svc):
+    """A corrupted shard answer (NaN distances, alien ids) is caught at
+    the merge boundary, never reaches results, and the shard is
+    dead-marked like any other failure."""
+    svc, idx, q = fault_svc
+    with faults.inject(FaultPlan()) as plan:
+        plan.add("corrupt_shard", 2)
+        fd, fi, st = svc.query(q, return_stats=True)
+        assert st["degraded"] and not st["answered"][2]
+        assert np.isfinite(fd).all() and (fi >= 0).all()
+        mask = np.ones(P_FAULT, bool); mask[2] = False
+        fd_o, fi_o = idx.search(q, live=mask)
+        np.testing.assert_array_equal(fi, np.asarray(fi_o))
+        assert svc.health.dead[2]
+        assert any(k == "failure" and s == 2
+                   for k, s, _ in svc.health.events)
+
+
+def test_service_retry_backoff_respects_deadline(fault_svc):
+    """With the dead mark disabled, a killed shard burns its full retry
+    budget — bounded exponential backoff inside the request's deadline:
+    the request still completes degraded, fast (every sleep is capped
+    by the remaining deadline, so CI never waits on a long timer)."""
+    svc, idx, q = fault_svc
+    pol = FaultPolicy(deadline_ms=80.0, max_retries=4, backoff_ms=5.0,
+                      dead_after_failures=10 ** 6)
+    old = svc.fault_policy
+    svc.fault_policy = svc.health.policy = pol
+    try:
+        with faults.inject(FaultPlan()) as plan:
+            plan.add("kill_shard", 0)
+            t0 = time.monotonic()
+            _, _, st = svc.query(q, return_stats=True)
+            elapsed = time.monotonic() - t0
+            assert st["degraded"] and not st["answered"][0]
+            assert not svc.health.dead[0]        # streak never crossed
+            # 5+10+20+40ms backoff < deadline; generous CI slack
+            assert elapsed < 1.0, f"retry loop ran {elapsed:.2f}s"
+            assert len([e for e in plan.log if e[1] == "kill_shard"]) \
+                == pol.max_retries + 1
+    finally:
+        svc.fault_policy = svc.health.policy = old
+
+
+def test_service_all_shards_dead_raises(fault_svc):
+    from repro.distributed.faults import AllShardsDeadError
+    svc, idx, q = fault_svc
+    with faults.inject(FaultPlan()) as plan:
+        plan.add("kill_shard", -1)               # every shard
+        with pytest.raises(AllShardsDeadError):
+            svc.query(q)
+
+
+def test_service_straggler_detection_on_query_walls(fault_svc):
+    """A stalled (slow but correct) shard is flagged by the per-shard
+    median+MAD monitor — and ONLY flagged: its answers still count,
+    coverage stays full."""
+    svc, idx, q = fault_svc
+    for _ in range(8):                           # build the wall window
+        svc.query(q)
+    n_ev = len(svc.health.events)
+    with faults.inject(FaultPlan()) as plan:
+        plan.add("stall_shard", 3, param=0.05)
+        _, _, st = svc.query(q, return_stats=True)
+    assert st["coverage"] == 1.0 and not st["degraded"]
+    stragglers = [(k, s) for k, s, _ in svc.health.events[n_ev:]
+                  if k == "straggler"]
+    assert ("straggler", 3) in stragglers
+
+
+def test_sharded_mutation_fault_injection(fault_svc):
+    """Mutations routed to a killed shard raise the typed error; after
+    heal the same mutation lands and is immediately servable."""
+    svc, idx, q = fault_svc
+    rng = np.random.default_rng(5)
+    xs = rng.standard_normal((P_FAULT, q.shape[1])).astype(np.float32)
+    with faults.inject(FaultPlan()) as plan:
+        plan.add("kill_shard", 2)
+        with pytest.raises(ShardKilledError):
+            svc.upsert(xs)                       # round-robin hits 2
+    gids = svc.upsert(xs)                        # healed: lands
+    assert len(gids) == P_FAULT
+    with faults.inject(FaultPlan()) as plan:
+        plan.add("kill_shard", int(gids[0] // idx.stride))
+        with pytest.raises(ShardKilledError):
+            svc.delete(gids[:1])
+    assert svc.delete(gids[:1]) == 1
+
+
+# --------------------------------------------------------------------------
+# snapshot integrity envelope
+# --------------------------------------------------------------------------
+
+def test_snapshot_roundtrip_and_corruption(tmp_path, small_dataset):
+    from repro.configs.base import PHNSWConfig
+    from repro.index.mutable import (MutableIndex, read_snapshot,
+                                     write_snapshot)
+    x, q, _ = small_dataset
+    cfg = PHNSWConfig(name="snap", n_points=1000, ef_construction=32)
+    idx = MutableIndex.build(x[:1000], cfg, seed=0)
+    p = tmp_path / "a.npz"
+    idx.save(p)
+    idx2 = MutableIndex.load(p, cfg)
+    _, fi = idx.search(q[:8])
+    _, fi2 = idx2.search(q[:8])
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(fi2))
+
+    # truncation -> typed error (not a zipfile traceback / garbage load)
+    t = tmp_path / "trunc.npz"
+    t.write_bytes(p.read_bytes()[: p.stat().st_size // 2])
+    with pytest.raises(SnapshotCorruptError, match="unreadable|truncated"):
+        read_snapshot(t)
+    # a single flipped byte -> checksum mismatch
+    raw = bytearray(p.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    f = tmp_path / "flip.npz"
+    f.write_bytes(bytes(raw))
+    with pytest.raises(SnapshotCorruptError):
+        read_snapshot(f)
+    # an envelope-less npz (foreign writer) is rejected, not guessed at
+    e = tmp_path / "naked.npz"
+    np.savez(e, x=np.zeros(3))
+    with pytest.raises(SnapshotCorruptError, match="version"):
+        read_snapshot(e)
+    # the checksum covers array CONTENT, not just structure
+    arrays = {"a": np.arange(5, dtype=np.int64)}
+    write_snapshot(tmp_path / "c.npz", arrays)
+    z = dict(np.load(tmp_path / "c.npz"))
+    z["a"][0] = 99
+    np.savez(tmp_path / "c2.npz", **z)
+    with pytest.raises(SnapshotCorruptError, match="checksum"):
+        read_snapshot(tmp_path / "c2.npz")
+
+
+def test_sharded_snapshot_roundtrip_bit_equal(tmp_path, fault_svc):
+    from repro.index import ShardedMutableIndex
+    svc, idx, q = fault_svc
+    p = tmp_path / "sharded.npz"
+    idx.save(p)
+    idx2 = ShardedMutableIndex.load(p, idx.cfg, seed=1)
+    assert idx2.n_shards == idx.n_shards and idx2.stride == idx.stride
+    _, fi = idx.search(q)
+    _, fi2 = idx2.search(q)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(fi2))
+    np.testing.assert_array_equal(idx2.live_global_ids(),
+                                  idx.live_global_ids())
+
+
+def test_truncate_snapshot_fault_caught_at_load(tmp_path, fault_svc):
+    """The fault plan chops the npz DURING save; the envelope catches
+    it at ship time instead of seeding a replica with garbage."""
+    from repro.index import ShardedMutableIndex
+    svc, idx, q = fault_svc
+    p = tmp_path / "ship.npz"
+    with faults.inject(FaultPlan()) as plan:
+        plan.add("truncate_snapshot", param=0.6)
+        idx.save(p)
+        assert any(k == "truncate_snapshot" for _, k, _ in plan.log)
+    with pytest.raises(SnapshotCorruptError):
+        ShardedMutableIndex.load(p, idx.cfg)
+
+
+# --------------------------------------------------------------------------
+# service API boundary: validation + bounded stats
+# --------------------------------------------------------------------------
+
+def test_service_input_validation(fault_svc):
+    svc, idx, q = fault_svc
+    D = q.shape[1]
+    with pytest.raises(ValueError, match=r"\[n, \d+\]"):
+        svc.query(q[:, :-1])                     # wrong dim
+    with pytest.raises(ValueError, match=r"\[n, \d+\]"):
+        svc.query(q[0])                          # 1-D
+    with pytest.raises(ValueError, match="empty"):
+        svc.query(q[:0])
+    with pytest.raises(ValueError, match="run_stream"):
+        svc.query(np.zeros((B_FAULT + 1, D), np.float32))
+    with pytest.raises(ValueError, match="numeric"):
+        svc.query(np.array([["a"] * D], dtype=object))
+    bad = q.copy(); bad[0, 0] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        svc.query(bad)
+    with pytest.raises(ValueError, match="non-finite"):
+        svc.upsert(np.full((1, D), np.inf, np.float32))
+    with pytest.raises(ValueError, match="ids must be integers"):
+        svc.upsert(q[:1], ids=np.array([1.5]))
+    with pytest.raises(ValueError, match="2 ids for 1"):
+        svc.upsert(q[:1], ids=np.array([1, 2]))
+
+
+def test_service_nan_policy_sanitize(fault_svc):
+    from repro.serve.vector_service import VectorSearchService
+    svc, idx, q = fault_svc
+    svc2 = VectorSearchService(idx, batch_size=B_FAULT,
+                               nan_policy="sanitize",
+                               fault_policy=svc.fault_policy)
+    bad = q.copy(); bad[0, :] = np.nan
+    zeroed = q.copy(); zeroed[0, :] = 0.0
+    _, fi_bad = svc2.query(bad)
+    _, fi_ref = svc2.query(zeroed)
+    np.testing.assert_array_equal(fi_bad, fi_ref)
+    with pytest.raises(ValueError, match="nan_policy"):
+        VectorSearchService(idx, batch_size=B_FAULT, nan_policy="drop")
+
+
+def test_service_ctor_guards(small_dataset, small_graph, small_pca):
+    from repro.core.search_jax import build_packed
+    from repro.serve.vector_service import VectorSearchService
+    x, _, _ = small_dataset
+    db = build_packed(small_graph,
+                      small_pca.transform(x).astype(np.float32))
+    with pytest.raises(ValueError, match="sharded backend"):
+        VectorSearchService(db, small_pca, batch_size=8,
+                            fault_policy=FaultPolicy())
+
+
+def test_service_stats_bounded_window():
+    from repro.serve.vector_service import LATENCY_WINDOW, ServiceStats
+    st = ServiceStats()
+    st.latencies_ms.extend(float(i) for i in range(LATENCY_WINDOW + 500))
+    assert len(st.latencies_ms) == LATENCY_WINDOW
+    assert st.latencies_ms[0] == 500.0           # oldest evicted
+    assert st.percentile(100) == LATENCY_WINDOW + 499
+    assert st.percentile(0) == 500.0
+
+
+# --------------------------------------------------------------------------
+# replica failover + snapshot-shipped recovery
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def replica_set(tmp_path_factory):
+    from repro.configs.base import PHNSWConfig
+    from repro.data.vectors import make_queries, make_sift_like
+    from repro.index import ShardedMutableIndex
+    from repro.serve import ReplicaSet, VectorSearchService
+    cfg = PHNSWConfig(name="repl", n_points=600, ef_construction=32)
+    x = make_sift_like(600, seed=41)
+    q = make_queries(x, 8, seed=42)
+    idx = ShardedMutableIndex.build(x, cfg, 2, seed=1)
+    svc = VectorSearchService(idx, batch_size=8)
+    rs = ReplicaSet.replicate(
+        svc, 3, snapshot_dir=tmp_path_factory.mktemp("replicas"))
+    return rs, q, x
+
+
+def test_replica_set_serves_and_replicates(replica_set):
+    rs, q, x = replica_set
+    fd0, fi0 = rs.query(q)
+    for r in rs.replicas[1:]:                   # replicas agree, bit-equal
+        _, fi = r.svc.query(q)
+        np.testing.assert_array_equal(fi, fi0)
+    # replicated upsert: identical ids everywhere, state converged
+    gids = rs.upsert(x[:3] + 0.01)
+    assert len(gids) == 3
+    rep = rs.assert_converged()
+    assert rep["n_healthy"] == 3 and rep["applied_seq"] == 1
+    assert rs.delete(gids[:1]) == 1
+    assert rs.assert_converged()["applied_seq"] == 2
+
+
+def test_replica_failover_and_stale_checkpoint_recovery(replica_set):
+    """Kill the primary mid-traffic: the same request fails over; ops
+    applied while it was dead replay from a STALE checkpoint on
+    recovery (idempotent — the second republish applies nothing), and
+    the set converges back to 3 healthy replicas."""
+    rs, q, x = replica_set
+    ckpt, ckpt_seq = rs.checkpoint()            # stale: before the ops
+    with faults.inject(FaultPlan()) as plan:
+        plan.add("kill_replica", 0)
+        fd, fi = rs.query(q)                    # request survives
+        assert not rs.replicas[0].alive
+        assert ("failover", 1, "primary -> 1") in rs.events
+        gids = rs.upsert(x[3:6] + 0.02)         # replica 0 misses this
+        assert rs.assert_converged()["n_healthy"] == 2
+    behind = rs.seq - ckpt_seq
+    assert behind >= 1
+    replayed = rs.recover(0, snapshot=ckpt, snapshot_seq=ckpt_seq)
+    assert replayed == behind                   # the whole gap replayed
+    assert rs.republish(0) == 0                 # idempotent: all skipped
+    rep = rs.assert_converged()
+    assert rep["n_healthy"] == 3
+    assert rs.replicas[0].reseeds == 1
+    # the recovered replica serves the post-recovery state: every id it
+    # returns is live on every replica (graphs may differ microscopically
+    # after a replayed insert — rng histories diverge — but the live id
+    # set is the convergence invariant)
+    _, fi0 = rs.replicas[0].svc.query(q)
+    live = rs.replicas[1].svc._mut.live_ids()
+    assert np.isin(np.asarray(fi0), live).all()
+
+
+def test_replica_all_dead_raises(replica_set):
+    rs, q, x = replica_set
+    with faults.inject(FaultPlan()) as plan:
+        plan.add("kill_replica", -1)            # everyone
+        with pytest.raises(AllReplicasDeadError):
+            rs.query(q)
+        with pytest.raises(AllReplicasDeadError):
+            rs.upsert(x[:1])
+        with pytest.raises(AllReplicasDeadError):
+            rs.checkpoint()
+    # plan healed: replicas were only MARKED dead; recover re-seeds
+    rs.replicas[1].alive = True                 # operator override
+    rs.recover(0)
+    rs.recover(2)
+    assert rs.assert_converged()["n_healthy"] == 3
