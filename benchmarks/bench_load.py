@@ -1,0 +1,232 @@
+"""Open-loop latency-under-load harness (DESIGN.md § Observability).
+
+Closed-loop benchmarks (``bench_table3_qps``) measure *capacity*: the
+next request starts when the previous one finishes, so the system is
+never behind and latency percentiles say nothing about queueing. A
+real service is OPEN-loop: requests arrive on their own clock whether
+or not the server is ready, and latency under load — including the
+queue wait — is the number an operator actually sees (this is the
+classic coordinated-omission trap: closing the loop hides exactly the
+slow requests that matter).
+
+Protocol:
+
+1. **Calibrate capacity** with a short closed loop (requests
+   back-to-back) — this also A/Bs tracing ON vs OFF interleaved, the
+   measured overhead the obs-smoke CI job gates at <= 10%.
+2. **Offered-load points**: for each fraction of capacity, draw Poisson
+   arrivals (seeded exponential inter-arrival times at the offered
+   request rate), serve each request at its scheduled arrival time (or
+   as soon as the server frees up, if it fell behind), and record
+   ``now - scheduled_arrival`` — queue wait included — into a
+   log-bucketed obs histogram labeled by the offered QPS.
+3. **Report from the histograms themselves**: p50/p99/p999 are bucket
+   quantiles of the recorded distribution and achieved QPS is its
+   count over the run's wall span — the serving numbers and the
+   scrape-exporter numbers are the same numbers by construction.
+4. **Cost-model bridge**: one ``return_stats`` batch is folded through
+   ``repro.obs.bridge`` (steps / Dist.H histograms + predicted-vs-
+   measured query cost — the autotuner's calibration feed).
+
+The canonical 8k run appends the tracked ``load`` section of
+``BENCH_table3.json`` (own append-only history, like ``build`` /
+``faults``); other sizes are CSV-only so CI gates on a small seeded
+run without touching the tracked trajectory. ``prom_path`` dumps the
+full Prometheus exposition text for the CI parse gate.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Optional, Sequence
+
+import numpy as np
+
+from benchmarks.common import emit, load_bench_db
+
+
+def _closed_loop(svc, batches, reps: int) -> float:
+    """Back-to-back serving; returns achieved queries/sec."""
+    n_q = 0
+    t0 = time.perf_counter()
+    for r in range(reps):
+        for b in batches:
+            svc.query(b)
+            n_q += len(b)
+    return n_q / (time.perf_counter() - t0)
+
+
+def _overhead_ab(svc, batches, tracer, reps: int = 4) -> dict:
+    """Interleaved traced/untraced closed-loop A/B on the SAME service
+    and compiled program (alternating per rep so drift hits both arms
+    equally). Returns qps for each arm + the traced/untraced ratio."""
+    from repro.obs.trace import NULL_TRACER
+    t_on, t_off, q_on, q_off = 0.0, 0.0, 0, 0
+    for r in range(2 * reps):
+        traced = r % 2 == 0
+        svc.tracer = tracer if traced else NULL_TRACER
+        t0 = time.perf_counter()
+        for b in batches:
+            svc.query(b)
+        dt = time.perf_counter() - t0
+        nq = sum(len(b) for b in batches)
+        if traced:
+            t_on += dt
+            q_on += nq
+        else:
+            t_off += dt
+            q_off += nq
+    svc.tracer = NULL_TRACER
+    qps_on, qps_off = q_on / t_on, q_off / t_off
+    return {"qps_traced": qps_on, "qps_untraced": qps_off,
+            "overhead_ratio": qps_on / qps_off}
+
+
+def _open_loop_point(svc, rng, q, req_size: int, rate_rps: float,
+                     n_requests: int, hist) -> dict:
+    """One offered-load point: Poisson arrivals at ``rate_rps``
+    requests/sec; latency is measured FROM THE SCHEDULED ARRIVAL (queue
+    wait included — no coordinated omission). Percentiles come from the
+    obs histogram the latencies land in."""
+    gaps = rng.exponential(1.0 / rate_rps, n_requests)
+    picks = rng.integers(0, len(q) - req_size + 1, n_requests)
+    t_start = time.perf_counter()
+    arrivals = t_start + np.cumsum(gaps)
+    before = hist.count
+    for t_a, p in zip(arrivals, picks):
+        now = time.perf_counter()
+        if t_a > now:
+            time.sleep(t_a - now)
+        svc.query(q[p:p + req_size])
+        hist.observe((time.perf_counter() - t_a) * 1e3)
+    span_s = time.perf_counter() - t_start
+    served = hist.count - before
+    return {
+        "offered_qps": rate_rps * req_size,
+        "achieved_qps": served * req_size / span_s,
+        "n_requests": int(served),
+        "p50_ms": hist.percentile(50),
+        "p99_ms": hist.percentile(99),
+        "p999_ms": hist.percentile(99.9),
+        "mean_ms": hist.mean,
+    }
+
+
+def main(n_points: int = 8_000, n_queries: int = 64,
+         json_path: Optional[str] = None,
+         prom_path: Optional[str] = None, seed: int = 0,
+         req_size: int = 16,
+         offered_fracs: Sequence[float] = (0.3, 0.7),
+         n_requests: int = 120, calib_reps: int = 6):
+    from repro.core.search_jax import build_packed, search_batched
+    from repro.obs import (Registry, Tracer, parse_prometheus,
+                           prometheus_families, record_search_stats,
+                           to_prometheus)
+    from repro.serve.vector_service import VectorSearchService
+
+    cfg, x, g, pca, x_low, q, gt = load_bench_db(n_points, n_queries)
+    rng = np.random.default_rng(seed)
+    reg = Registry()
+    tracer = Tracer()
+    db = build_packed(g, x_low)
+    svc = VectorSearchService(db, pca, batch_size=req_size,
+                              registry=reg)
+    rows = []
+
+    # ---- closed-loop capacity + tracing-overhead A/B ----
+    batches = [q[i:i + req_size] for i in
+               range(0, len(q) - req_size + 1, req_size)]
+    _closed_loop(svc, batches, 1)                     # steady-state warm
+    cap_qps = _closed_loop(svc, batches, calib_reps)
+    rows.append(("load/capacity", 1e6 / cap_qps,
+                 f"qps={cap_qps:.0f};req_size={req_size};"
+                 f"closed_loop=1"))
+    ab = _overhead_ab(svc, batches, tracer)
+    rows.append(("obs/overhead", 0.0,
+                 f"qps_traced={ab['qps_traced']:.0f};"
+                 f"qps_untraced={ab['qps_untraced']:.0f};"
+                 f"ratio={ab['overhead_ratio']:.3f}"))
+
+    # ---- open-loop offered-load points ----
+    fam = reg.histogram("phnsw_load_latency_ms",
+                        "open-loop request latency from scheduled "
+                        "arrival (ms), queue wait included",
+                        labels=("offered_qps",))
+    points = []
+    for frac in offered_fracs:
+        rate_rps = frac * cap_qps / req_size
+        hist = fam.labels(offered_qps=f"{frac * cap_qps:.0f}")
+        pt = _open_loop_point(svc, rng, q, req_size, rate_rps,
+                              n_requests, hist)
+        pt["offered_frac"] = frac
+        points.append(pt)
+        rows.append((f"load/offered{pt['offered_qps']:.0f}",
+                     pt["p50_ms"] * 1e3,
+                     f"offered_qps={pt['offered_qps']:.0f};"
+                     f"achieved_qps={pt['achieved_qps']:.0f};"
+                     f"p50_ms={pt['p50_ms']:.3f};"
+                     f"p99_ms={pt['p99_ms']:.3f};"
+                     f"p999_ms={pt['p999_ms']:.3f}"))
+
+    # ---- device-telemetry bridge: predicted vs measured cost ----
+    import jax.numpy as jnp
+    qd = jnp.asarray(q[:req_size])
+    qp = jnp.asarray(svc.filt.prepare(np.asarray(q[:req_size])))
+    search_batched(db, qd, qp, return_stats=True)[1].block_until_ready()
+    t0 = time.perf_counter()
+    _, fi, st = search_batched(db, qd, qp, return_stats=True)
+    fi.block_until_ready()
+    wall = time.perf_counter() - t0
+    summary = record_search_stats(st, wall_s=wall, registry=reg,
+                                  cfg=cfg, filt=svc.filt)
+    rows.append(("obs/cost_model", summary["measured_us"],
+                 f"predicted_us={summary['predicted_us']:.1f};"
+                 f"ratio={summary['cost_ratio']:.2f};"
+                 f"steps_mean={summary['steps_mean']:.1f};"
+                 f"dist_h_mean={summary['dist_h_mean']:.1f}"))
+
+    # ---- exporter: render, self-check the parse, optionally dump ----
+    text = to_prometheus(reg)
+    parsed = parse_prometheus(text)
+    fams = prometheus_families(text)
+    assert "phnsw_load_latency_ms" in fams and \
+        "phnsw_request_latency_ms" in fams, fams
+    assert "phnsw_load_latency_ms_count" in parsed
+    if prom_path:
+        Path(prom_path).write_text(text)
+        rows.append(("obs/prometheus", 0.0,
+                     f"families={len(fams)};path={prom_path}"))
+
+    if json_path:
+        entry = {
+            "bench": "load",
+            "n_points": n_points,
+            "req_size": req_size,
+            "capacity_qps": cap_qps,
+            "points": points,
+            "overhead": ab,
+            "cost_model": summary,
+        }
+        p = Path(json_path)
+        doc = {}
+        if p.exists():
+            try:
+                doc = json.loads(p.read_text())
+            except ValueError as e:
+                # never silently replace a corrupted tracked trajectory
+                raise RuntimeError(
+                    f"{p} exists but is not valid JSON; refusing to "
+                    f"overwrite the tracked trajectory") from e
+        prev = doc.get("load")
+        history = []
+        if isinstance(prev, dict):
+            history = prev.pop("history", [])
+            history.append(prev)
+        doc["load"] = {**entry, "history": history}
+        p.write_text(json.dumps(doc, indent=2) + "\n")
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

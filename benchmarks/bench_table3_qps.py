@@ -167,25 +167,23 @@ def main(n_points: int = 50_000, n_queries: int = 200,
         }
         # append-only perf trajectory: latest entry at top level (the
         # tracked number), prior --perf-smoke runs under "history"; the
-        # "build" and "faults" sections (bench_build's / bench_faults'
-        # own append-only trajectories) are carried forward untouched,
-        # not buried into the QPS history
+        # "build" / "faults" / "load" sections (bench_build's /
+        # bench_faults' / bench_load's own append-only trajectories)
+        # are carried forward untouched, not buried into the QPS
+        # history
         p = Path(json_path)
-        history, build, flts = [], None, None
+        history, carried = [], {}
         if p.exists():
             try:
                 prev = json.loads(p.read_text())
                 history = prev.pop("history", [])
-                build = prev.pop("build", None)
-                flts = prev.pop("faults", None)
+                for k in ("build", "faults", "load"):
+                    if k in prev:
+                        carried[k] = prev.pop(k)
                 history.append(prev)
             except (ValueError, KeyError):
                 pass
-        doc = {**entry, "history": history}
-        if build is not None:
-            doc["build"] = build
-        if flts is not None:
-            doc["faults"] = flts
+        doc = {**entry, "history": history, **carried}
         p.write_text(json.dumps(doc, indent=2) + "\n")
     return emit(rows)
 

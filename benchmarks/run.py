@@ -43,6 +43,18 @@ def main() -> None:
                          "with zero-recompile accounting; the canonical "
                          "8k run appends the tracked 'faults' section "
                          "of BENCH_table3.json")
+    ap.add_argument("--load", action="store_true",
+                    help="only the open-loop latency-under-load "
+                         "harness: Poisson arrivals at fractions of "
+                         "the calibrated capacity, p50/p99/p999 from "
+                         "the obs histograms, plus the traced-vs-"
+                         "untraced overhead A/B; the canonical 8k run "
+                         "appends the tracked 'load' section of "
+                         "BENCH_table3.json")
+    ap.add_argument("--prom-out", type=str, default=None,
+                    help="with --load: dump the Prometheus text "
+                         "exposition of the run's metrics registry to "
+                         "this path (the CI obs-smoke parse gate)")
     ap.add_argument("--filter", choices=("pca", "pq", "none"),
                     default="pca", dest="filter_kind",
                     help="filter stage for the measured batched row "
@@ -78,8 +90,22 @@ def main() -> None:
 
     from benchmarks import (bench_build, bench_churn, bench_faults,
                             bench_fig2_kselect, bench_fig5_energy,
-                            bench_kernel_footprint, bench_pq_ablation,
-                            bench_table3_qps)
+                            bench_kernel_footprint, bench_load,
+                            bench_pq_ablation, bench_table3_qps)
+
+    if args.load:
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        n = args.n_points or 8_000
+        # the tracked "load" section pins the canonical 8k
+        # configuration; other sizes are CSV-only (CI gates on 2k)
+        jp = json_path if n == 8_000 else None
+        bench_load.main(n_points=n, n_queries=64, json_path=jp,
+                        prom_path=args.prom_out)
+        if jp:
+            print(f"# wrote {jp} (load section)", file=sys.stderr)
+        print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+        return
 
     if args.build:
         print("name,us_per_call,derived")

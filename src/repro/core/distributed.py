@@ -499,14 +499,16 @@ def _shard_probe_jit(sdb, s, queries, qprep, ef0, k_schedule, deferred,
 
 def probe_shard(sdb: ShardedDB, s: int, queries, qprep, *, ef0: int = 0,
                 k_schedule=None, deferred: Optional[bool] = None,
-                rerank_mult: Optional[int] = None
+                rerank_mult: Optional[int] = None, span=None
                 ) -> Tuple[np.ndarray, np.ndarray, float]:
     """ONE shard's pre-merge candidate lists, timed and
     fault-injectable: the per-shard half of the resilient serving path
     (and the injection point of ``distributed.faults`` — kill raises,
     stall sleeps, corrupt garbles the return). Returns
     (fd [B, E], gi [B, E] GLOBAL ids, wall seconds); the wall time
-    feeds the per-shard straggler monitor."""
+    feeds the per-shard straggler monitor. ``span`` (a ``repro.obs``
+    trace span, optional) receives a ``probe`` event with the measured
+    wall time."""
     from repro.distributed import faults as _faults
     ef0, ks, deferred, rm = _normalize(sdb, ef0, k_schedule, deferred,
                                        rerank_mult)
@@ -524,6 +526,8 @@ def probe_shard(sdb: ShardedDB, s: int, queries, qprep, *, ef0: int = 0,
     fd, gi = np.asarray(fd), np.asarray(gi)
     if plan is not None:
         fd, gi = plan.corrupt_hook(s, fd, gi)
+    if span is not None:
+        span.event("probe", shard=s, wall_ms=wall * 1e3)
     return fd, gi, wall
 
 

@@ -49,7 +49,8 @@ class StepEvent:
 class StepMonitor:
     def __init__(self, *, straggler_factor: float = 2.5,
                  dead_after_s: float = 300.0, window: int = 64,
-                 mad_factor: Optional[float] = None):
+                 mad_factor: Optional[float] = None,
+                 source: str = ""):
         """``mad_factor`` (optional) adds a robust absolute-deviation
         term to the threshold: a step is a straggler when its wall time
         exceeds ``max(factor * median, median + mad_factor * MAD)``.
@@ -57,13 +58,26 @@ class StepMonitor:
         sub-ms shard queries, where any scheduler hiccup is a large
         RATIO but a tiny absolute delay) from flagging noise, while the
         multiplicative term still catches slow-but-steady drift. None
-        preserves the original ratio-only rule."""
+        preserves the original ratio-only rule.
+
+        ``source`` (optional) names this monitor in the unified obs
+        event stream (``repro.obs``): with a source set, heartbeats
+        bump a per-source counter and straggler/liveness verdicts land
+        as ``ObsEvent``s in the process registry — the SAME record
+        type the serving plane's ``ShardHealth`` emits, so train-loop
+        and serving-plane monitoring are one queryable stream. An
+        unnamed monitor (the default) stays off the obs plane."""
         self.factor = straggler_factor
         self.mad_factor = mad_factor
         self.dead_after_s = dead_after_s
         self.times: Deque[float] = deque(maxlen=window)
         self.last_beat = time.monotonic()
         self.events: List[StepEvent] = []
+        self.source = source
+
+    def _obs(self):
+        from repro.obs.metrics import default_registry
+        return default_registry()
 
     def heartbeat(self, step: int, wall_s: float) -> StepEvent:
         self.last_beat = time.monotonic()
@@ -84,6 +98,15 @@ class StepMonitor:
         else:
             ev = StepEvent("ok", step, wall_s)
         self.events.append(ev)
+        if self.source:
+            reg = self._obs()
+            reg.counter("phnsw_heartbeats_total",
+                        "monitor heartbeats by source",
+                        labels=("source",)).labels(
+                            source=self.source).inc()
+            if ev.kind == "straggler":
+                reg.emit("straggler", source=self.source, target=step,
+                         detail=ev.detail)
         return ev
 
     def check_liveness(self) -> Optional[StepEvent]:
@@ -91,6 +114,9 @@ class StepMonitor:
         if gap > self.dead_after_s:
             ev = StepEvent("dead", -1, gap, f"no heartbeat for {gap:.0f}s")
             self.events.append(ev)
+            if self.source:
+                self._obs().emit("dead", source=self.source,
+                                 detail=ev.detail)
             return ev
         return None
 

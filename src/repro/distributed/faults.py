@@ -307,18 +307,27 @@ class ShardHealth:
     """Per-shard liveness + straggler tracking for the serving path:
     one ``StepMonitor`` per shard fed with query wall times, a
     consecutive-failure counter driving the dead mark, and an event log
-    (``(kind, shard, detail)``) for observability/tests."""
+    (``(kind, shard, detail)``) for tests' structural assertions.
+
+    Every verdict ALSO lands in the unified obs event stream
+    (``repro.obs``) tagged ``source="serve.shard<N>"`` — the same
+    ``ObsEvent`` record type the train loop's ``StepMonitor`` emits,
+    so one ``events_of(...)`` query reads stragglers and dead marks
+    across both planes."""
 
     def __init__(self, n_shards: int, policy: FaultPolicy):
         from repro.distributed.fault import StepMonitor
+        from repro.obs.metrics import default_registry
         self.policy = policy
         self.monitors = [StepMonitor(straggler_factor=policy.straggler_factor,
                                      mad_factor=policy.mad_factor,
-                                     window=policy.window)
-                         for _ in range(n_shards)]
+                                     window=policy.window,
+                                     source=f"serve.shard{s}")
+                         for s in range(n_shards)]
         self.failures = np.zeros(n_shards, np.int64)
         self.dead = np.zeros(n_shards, bool)
         self.events: List[Tuple[str, int, str]] = []
+        self._obs = default_registry()
         self._step = 0
 
     def heartbeat(self, s: int, wall_s: float):
@@ -336,6 +345,8 @@ class ShardHealth:
         crossed ``dead_after_failures`` (shard now marked dead)."""
         self.failures[s] += 1
         self.events.append(("failure", s, repr(err)))
+        self._obs.emit("failure", source=f"serve.shard{s}", target=s,
+                       detail=repr(err))
         if not self.dead[s] and \
                 self.failures[s] >= self.policy.dead_after_failures:
             self.mark_dead(s, f"{int(self.failures[s])} consecutive "
@@ -346,6 +357,8 @@ class ShardHealth:
     def mark_dead(self, s: int, reason: str) -> None:
         self.dead[s] = True
         self.events.append(("dead", s, reason))
+        self._obs.emit("dead", source=f"serve.shard{s}", target=s,
+                       detail=reason)
 
     def recover(self, s: int) -> None:
         """Un-mark a shard (after the operator / fault plan healed it):
@@ -353,6 +366,7 @@ class ShardHealth:
         self.dead[s] = False
         self.failures[s] = 0
         self.events.append(("recovered", s, ""))
+        self._obs.emit("recovered", source=f"serve.shard{s}", target=s)
 
     def live_mask(self) -> np.ndarray:
         return ~self.dead

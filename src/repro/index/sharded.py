@@ -40,6 +40,7 @@ from repro.core.graph import build_hnsw
 from repro.distributed import faults as _faults
 from repro.index.mutable import (MutableIndex, read_snapshot,
                                  write_snapshot)
+from repro.obs.trace import NULL_SPAN
 
 
 class ShardedMutableIndex:
@@ -157,16 +158,20 @@ class ShardedMutableIndex:
         self._align_capacity()
         self._publish()
 
-    def _publish(self) -> None:
+    def _publish(self, span=NULL_SPAN) -> None:
         """Stack the per-shard device snapshots into a new epoch's
         ShardedDB. Pure data movement — in steady state every leaf
         keeps its shape, so compiled search programs are reused. An
         installed ``FaultPlan``'s ``delay_swap`` event stretches the
         window between mutation and publication (readers keep the
-        previous epoch — the swap stays atomic, just late)."""
+        previous epoch — the swap stays atomic, just late; a trace span
+        records the injected delay as a ``delay_swap`` event)."""
+        pub = span.child("publish", epoch=self.epoch + 1)
         plan = _faults.active()
         if plan is not None:
-            plan.swap_delay_hook()
+            slept = plan.swap_delay_hook()
+            if slept > 0.0:
+                pub.event("delay_swap", seconds=slept)
         n_pub = max(s.top for s in self.shards) + 1
         per = [s.device_layers(n_pub) for s in self.shards]
         stride = self.stride
@@ -188,22 +193,26 @@ class ShardedMutableIndex:
             deleted=jnp.stack([s._dev_deleted for s in self.shards]),
             filter_kind=self.filt.kind,
         )
+        pub.set(n_layers=n_pub)
+        pub.end()
 
     # ------------------------------------------------------------------
     # mutation
     # ------------------------------------------------------------------
 
     def upsert(self, xs: np.ndarray,
-               ids: Optional[np.ndarray] = None) -> np.ndarray:
+               ids: Optional[np.ndarray] = None, *,
+               span=NULL_SPAN) -> np.ndarray:
         """Insert vectors (with ``ids``: tombstone those global ids
         first — replace semantics). Fresh inserts round-robin across
         shards. Returns the new GLOBAL ids, aligned with ``xs``. If any
         shard had to grow, ALL shards grow and previously handed-out
-        global ids are renumbered (reserve() up front to avoid)."""
+        global ids are renumbered (reserve() up front to avoid).
+        ``span`` records per-shard routing events and the publish."""
         if ids is not None:
             # publish once at the end — the intermediate post-delete
             # snapshot would never be served
-            self._delete(ids)
+            self._delete(ids, span=span)
         xs = np.asarray(xs, np.float32)
         Pn = self.n_shards
         assign = (self._rr + np.arange(len(xs))) % Pn
@@ -219,6 +228,7 @@ class ShardedMutableIndex:
                 # caller retries the batch or reroutes)
                 if plan is not None:
                     plan.shard_mutation_hook(s)
+                span.event("route_upsert", shard=s, n=int(m.sum()))
                 locs[s] = (m, self.shards[s].upsert(xs[m]))
         # gids are computed AFTER the post-insert capacity alignment so
         # a mid-batch growth can't hand out ids under a stale stride
@@ -227,20 +237,20 @@ class ShardedMutableIndex:
         gids = np.empty(len(xs), np.int64)
         for s, (m, loc) in locs.items():
             gids[m] = s * stride + loc
-        self._publish()
+        self._publish(span=span)
         return gids
 
-    def delete(self, gids: np.ndarray) -> int:
+    def delete(self, gids: np.ndarray, *, span=NULL_SPAN) -> int:
         """Tombstone global ids on their owner shards (owner-offset
         routing; idempotent, out-of-range ids ignored). Returns the
         number newly deleted. Never auto-compacts (compaction would
         renumber the global id space)."""
-        n = self._delete(gids)
+        n = self._delete(gids, span=span)
         if n:
-            self._publish()
+            self._publish(span=span)
         return n
 
-    def _delete(self, gids: np.ndarray) -> int:
+    def _delete(self, gids: np.ndarray, *, span=NULL_SPAN) -> int:
         """Shard-local tombstoning without the snapshot publish."""
         gids = np.atleast_1d(np.asarray(gids, np.int64))
         stride = self.stride
@@ -251,6 +261,7 @@ class ShardedMutableIndex:
             if m.any():
                 if plan is not None:
                     plan.shard_mutation_hook(s)
+                span.event("route_delete", shard=s, n=int(m.sum()))
                 n += self.shards[s].delete(gids[m] % stride,
                                            auto_compact=False)
         return n

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.distributed import faults as faults_mod
 from repro.distributed.faults import AllReplicasDeadError, FaultError
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serve.vector_service import VectorSearchService
 
 
@@ -67,7 +68,8 @@ class ReplicaSet:
     queries, replicated mutations, snapshot-shipped recovery."""
 
     def __init__(self, services: List[VectorSearchService], *,
-                 snapshot_dir=None, oplog_capacity: int = 4096):
+                 snapshot_dir=None, oplog_capacity: int = 4096,
+                 tracer: Optional[Tracer] = None):
         assert len(services) >= 1
         self.replicas = [ReplicaState(svc=s) for s in services]
         self.seq = 0
@@ -77,6 +79,9 @@ class ReplicaSet:
         self._primary = 0
         # (event, replica, detail) — failover/recovery observability
         self.events: List[Tuple[str, int, str]] = []
+        # per-request span trees (failover decisions, snapshot shipping,
+        # oplog replay) — disabled by default, zero hot-path cost
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     @classmethod
     def replicate(cls, svc: VectorSearchService, n: int, *,
@@ -152,26 +157,40 @@ class ReplicaSet:
         """Serve from the primary, failing over through the healthy
         replicas on any serving-plane ``FaultError`` — the caller's
         request survives every failure short of total loss
-        (``AllReplicasDeadError``)."""
-        last: Optional[Exception] = None
-        for i in self._healthy_order():
-            if self._check_injected_death(i):
-                continue
-            r = self.replicas[i]
-            try:
-                out = r.svc.query(q, return_stats=return_stats)
-            except FaultError as e:
-                self._mark_dead(i, repr(e))
-                last = e
-                continue
-            if i != self._primary:
-                self.events.append(("failover", i,
-                                    f"primary -> {i}"))
-                self._primary = i
-            return out
-        raise AllReplicasDeadError(
-            f"all {len(self.replicas)} replicas dead"
-            + (f" (last: {last!r})" if last else ""))
+        (``AllReplicasDeadError``). With a tracer, the request's span
+        tree records each failover hop and parents the serving
+        replica's ``serve.query`` span."""
+        root = self.tracer.span("replica.query",
+                                primary=self._primary)
+        with root:
+            last: Optional[Exception] = None
+            for i in self._healthy_order():
+                if self._check_injected_death(i):
+                    root.event("replica_dead", replica=i,
+                               detail="killed by fault plan")
+                    continue
+                r = self.replicas[i]
+                try:
+                    out = r.svc.query(
+                        q, return_stats=return_stats,
+                        span=root if root.enabled else None)
+                except FaultError as e:
+                    self._mark_dead(i, repr(e))
+                    root.event("replica_dead", replica=i,
+                               detail=repr(e))
+                    last = e
+                    continue
+                if i != self._primary:
+                    self.events.append(("failover", i,
+                                        f"primary -> {i}"))
+                    root.event("failover", from_replica=self._primary,
+                               to_replica=i)
+                    self._primary = i
+                root.set(served_by=i)
+                return out
+            raise AllReplicasDeadError(
+                f"all {len(self.replicas)} replicas dead"
+                + (f" (last: {last!r})" if last else ""))
 
     # ------------------------------------------------------------------
     # replicated mutation (op log, seq-numbered, idempotent delivery)
@@ -242,20 +261,25 @@ class ReplicaSet:
     # snapshot shipping + recovery
     # ------------------------------------------------------------------
 
-    def checkpoint(self) -> Tuple[Path, int]:
+    def checkpoint(self, *, span=None) -> Tuple[Path, int]:
         """Ship a snapshot from the healthiest donor: returns
         (path, applied_seq at save time). Recovery from a STALE
         checkpoint is exactly as correct as from a fresh one — the
         op-log replay covers the gap (idempotently)."""
-        for i in self._healthy_order():
-            donor = self.replicas[i]
-            path = self.snapshot_dir / \
-                f"ckpt_seq{donor.applied_seq}_r{i}.npz"
-            donor.svc._mut.save(path)
-            self.events.append(("checkpoint", i,
-                                f"seq={donor.applied_seq}"))
-            return path, donor.applied_seq
-        raise AllReplicasDeadError("no healthy donor to checkpoint from")
+        cs = (span.child("replica.checkpoint") if span is not None and
+              span.enabled else self.tracer.span("replica.checkpoint"))
+        with cs:
+            for i in self._healthy_order():
+                donor = self.replicas[i]
+                path = self.snapshot_dir / \
+                    f"ckpt_seq{donor.applied_seq}_r{i}.npz"
+                donor.svc._mut.save(path)
+                self.events.append(("checkpoint", i,
+                                    f"seq={donor.applied_seq}"))
+                cs.set(donor=i, seq=donor.applied_seq)
+                return path, donor.applied_seq
+            raise AllReplicasDeadError(
+                "no healthy donor to checkpoint from")
 
     def recover(self, i: int, *, snapshot: Optional[Path] = None,
                 snapshot_seq: Optional[int] = None) -> int:
@@ -264,25 +288,37 @@ class ReplicaSet:
         is given), then re-publish the op log — ops the snapshot
         already contains are skipped by seq (idempotent), ops after it
         replay. Returns the number of ops replayed. The replica serves
-        again immediately after."""
-        if snapshot is None:
-            snapshot, snapshot_seq = self.checkpoint()
-        assert snapshot_seq is not None
-        r = self.replicas[i]
-        donor_like = None
-        for j in self._healthy_order():
-            donor_like = self.replicas[j].svc
-            break
-        if donor_like is None:
-            raise AllReplicasDeadError("no healthy replica to model the "
-                                       "recovered service on")
-        r.svc = self._service_from_snapshot(snapshot, like=donor_like)
-        r.applied_seq = snapshot_seq
-        r.alive = True
-        r.reseeds += 1
-        replayed = self.republish(i)
-        self.events.append(("recovered", i,
-                            f"seq={snapshot_seq}+{replayed} replayed"))
+        again immediately after. With a tracer the recovery's span
+        tree times the snapshot ship and the oplog replay separately."""
+        root = self.tracer.span("replica.recover", replica=i)
+        with root:
+            if snapshot is None:
+                snapshot, snapshot_seq = self.checkpoint(span=root)
+            assert snapshot_seq is not None
+            r = self.replicas[i]
+            donor_like = None
+            for j in self._healthy_order():
+                donor_like = self.replicas[j].svc
+                break
+            if donor_like is None:
+                raise AllReplicasDeadError(
+                    "no healthy replica to model the recovered "
+                    "service on")
+            with root.child("snapshot.ship",
+                            seq=int(snapshot_seq)) as ship:
+                r.svc = self._service_from_snapshot(snapshot,
+                                                    like=donor_like)
+                ship.set(path=str(snapshot))
+            r.applied_seq = snapshot_seq
+            r.alive = True
+            r.reseeds += 1
+            with root.child("oplog.replay") as rep:
+                replayed = self.republish(i)
+                rep.set(n_replayed=replayed,
+                        log_len=len(self.oplog))
+            self.events.append(("recovered", i,
+                                f"seq={snapshot_seq}+{replayed} replayed"))
+            root.set(replayed=replayed)
         return replayed
 
     def republish(self, i: int) -> int:

@@ -3,8 +3,10 @@ system (single-query ASIC -> batched TPU service).
 
 Requests accumulate into fixed-size batches (the compiled search program
 has a static batch dim); underfull batches are padded with the entry
-point and results trimmed. Tracks QPS and latency percentiles (over a
-fixed-size window — a long-running service holds constant memory).
+point and results trimmed. QPS and latency percentiles ride on the
+observability plane (``repro.obs``): latency lands in a log-bucketed
+histogram — O(1) per record, constant memory forever — and percentiles
+are bucket quantiles, so a long-running service never rescans samples.
 
 Backed by any of four snapshots behind one API:
 
@@ -37,13 +39,21 @@ and the request completes DEGRADED from whichever shards answered —
 results then carry exact ``coverage`` accounting via
 ``query(..., return_stats=True)``. All of it is data-masked over the
 same compiled programs: a kill/recover cycle never recompiles.
+
+**Tracing** (DESIGN.md § Observability): pass ``tracer=Tracer()`` and
+every request builds a span tree — ``serve.query`` -> per-shard
+``shard.probe`` children (fault-injection hits, retry/backoff,
+straggler and dead-shard marks as ordered events) -> ``merge`` (with
+coverage/degraded attrs) — and mutations trace ``serve.upsert`` /
+``serve.delete`` -> ``epoch.swap``. Off by default: the single
+is-enabled check lives in ``Tracer.span`` and the disabled path
+allocates no span objects (same hot-path discipline as
+``distributed.faults``' hook registry).
 """
 from __future__ import annotations
 
 import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, Optional, Tuple, Union
+from typing import Optional, Tuple, Union
 
 import numpy as np
 import jax.numpy as jnp
@@ -60,33 +70,97 @@ from repro.distributed.faults import (AllShardsDeadError, FaultPolicy,
                                       ShardCorruptError, ShardFaultError,
                                       ShardHealth)
 from repro.index import MutableIndex, ShardedMutableIndex
-
-# latency reservoir size: big enough for stable p99 estimates, small
-# enough that a service serving forever holds constant memory
-LATENCY_WINDOW = 4096
+from repro.obs.metrics import Registry
+from repro.obs.trace import NULL_SPAN, NULL_TRACER, Tracer
 
 
-@dataclass
 class ServiceStats:
-    """Rolling serving statistics. ``latencies_ms`` is a bounded deque
-    (maxlen ``LATENCY_WINDOW``) — ``percentile()`` reads the most
-    recent window, counters are exact totals."""
-    latencies_ms: Deque[float] = field(
-        default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
-    queries: int = 0
-    upserts: int = 0
-    deletes: int = 0
-    degraded_queries: int = 0
-    started: float = field(default_factory=time.monotonic)
+    """Rolling serving statistics on the obs metrics plane.
+
+    Latency lives in a log-bucketed ``Histogram`` (``repro.obs``):
+    recording is O(1) and ``percentile()`` is an O(buckets) cumulative
+    walk over mergeable buckets — no per-sample window, so the old
+    ``LATENCY_WINDOW`` deque (and its O(n log n) ``np.percentile`` per
+    read) is gone while the read surface (``queries`` / ``upserts`` /
+    ``deletes`` / ``degraded_queries`` / ``qps`` / ``percentile``)
+    stays what it was.
+
+    Each ``ServiceStats`` owns a private ``Registry`` by default (two
+    services never share counts); pass one in to scrape several
+    services — or a service plus the device-telemetry bridge — from a
+    single exporter endpoint.
+    """
+
+    def __init__(self, registry: Optional[Registry] = None):
+        self.registry = registry if registry is not None else Registry()
+        r = self.registry
+        self.latency_ms = r.histogram(
+            "phnsw_request_latency_ms",
+            "per-query serving latency (ms)")
+        self._queries = r.counter("phnsw_queries_total", "queries served")
+        self._upserts = r.counter("phnsw_upserts_total",
+                                  "vectors upserted")
+        self._deletes = r.counter("phnsw_deletes_total", "ids tombstoned")
+        self._degraded = r.counter("phnsw_degraded_requests_total",
+                                   "requests completed degraded")
+        self._coverage = r.gauge("phnsw_request_coverage",
+                                 "live-vector coverage of the last "
+                                 "request")
+        self._coverage.set(1.0)
+        self.started = time.monotonic()
+
+    # -- recording (the service's write surface) ---------------------------
+
+    def record_request(self, n: int, latency_ms: float) -> None:
+        """One served batch of ``n`` real queries: each counts toward
+        QPS and each experienced the batch's latency."""
+        self._queries.inc(n)
+        for _ in range(n):
+            self.latency_ms.observe(latency_ms)
+
+    def record_degraded(self, coverage: float) -> None:
+        self._degraded.inc()
+        self._coverage.set(coverage)
+
+    def record_upserts(self, n: int) -> None:
+        self._upserts.inc(n)
+
+    def record_deletes(self, n: int) -> None:
+        self._deletes.inc(n)
+
+    def reset(self) -> None:
+        """Zero every metric in place (scraper references stay valid)
+        and restart the QPS clock — the warmup-exclusion hook."""
+        self.registry.reset()
+        self._coverage.set(1.0)
+        self.started = time.monotonic()
+
+    # -- reading (backward-compatible with the pre-obs dataclass) ----------
+
+    @property
+    def queries(self) -> int:
+        return int(self._queries.value)
+
+    @property
+    def upserts(self) -> int:
+        return int(self._upserts.value)
+
+    @property
+    def deletes(self) -> int:
+        return int(self._deletes.value)
+
+    @property
+    def degraded_queries(self) -> int:
+        return int(self._degraded.value)
 
     @property
     def qps(self) -> float:
         return self.queries / max(time.monotonic() - self.started, 1e-9)
 
     def percentile(self, p: float) -> float:
-        if not self.latencies_ms:
+        if self.latency_ms.count == 0:
             return 0.0
-        return float(np.percentile(np.asarray(self.latencies_ms), p))
+        return self.latency_ms.percentile(p)
 
 
 class VectorSearchService:
@@ -96,7 +170,9 @@ class VectorSearchService:
                  ef0: Optional[int] = None,
                  filt: Optional[FilterSpec] = None, mesh=None,
                  nan_policy: str = "raise",
-                 fault_policy: Optional[FaultPolicy] = None):
+                 fault_policy: Optional[FaultPolicy] = None,
+                 tracer: Optional[Tracer] = None,
+                 registry: Optional[Registry] = None):
         """``filt`` (any ``core.filters.FilterSpec``) generalizes the
         seed's ``pca`` argument; mutable indexes bring their own filter.
         A frozen identity-filter db needs neither. Sharded backends
@@ -112,12 +188,18 @@ class VectorSearchService:
         ``fault_policy`` (sharded backends, host path) turns on the
         resilient per-shard query loop: retry/deadline/straggler
         handling plus degraded-mode completion — see the module
-        docstring."""
+        docstring.
+
+        ``tracer``: a ``repro.obs.Tracer`` to build per-request span
+        trees (default: disabled — zero allocations on the hot path).
+        ``registry``: the metrics registry ``ServiceStats`` records
+        into (default: a private one per service)."""
         self.index: Optional[MutableIndex] = None
         self.sindex: Optional[ShardedMutableIndex] = None
         self.sdb: Optional[ShardedDB] = None
         self.db: Optional[PackedDB] = None
         self.mesh = mesh
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         if nan_policy not in ("raise", "sanitize"):
             raise ValueError(f"nan_policy must be 'raise' or 'sanitize', "
                              f"got {nan_policy!r}")
@@ -167,12 +249,14 @@ class VectorSearchService:
         self.last_stats = {"coverage": 1.0, "degraded": False}
         self._refresh_pad_row()
         self._refresh_live_counts()
-        # warm the compiled program, then reset stats so compile time
-        # and the warmup batch never pollute QPS/latency percentiles
-        self.stats = ServiceStats()
+        # warm the compiled program, then reset stats IN PLACE so
+        # compile time and the warmup batch never pollute QPS/latency
+        # percentiles (tests/test_obs.py pins this); in-place reset
+        # keeps scrapers' references to the histogram valid
+        self.stats = ServiceStats(registry)
         dummy = np.zeros((batch_size, snap.high.shape[-1]), np.float32)
         self._run(dummy)
-        self.stats = ServiceStats()
+        self.stats.reset()
 
     def _refresh_pad_row(self):
         # pad row for underfull batches: the entry point's vector — its
@@ -236,24 +320,27 @@ class VectorSearchService:
     # mutation (MutableIndex-backed services only)
     # ------------------------------------------------------------------
 
-    def _swap(self):
+    def _swap(self, span=NULL_SPAN):
         """Atomically publish the index's current epoch to the serving
         path (attribute assignment of an immutable snapshot)."""
-        if self.sindex is not None:
-            self.sdb = self.sindex.sdb
-            self.epoch = self.sindex.epoch
-        else:
-            self.db = self.index.db
-            self.epoch = self.index.epoch
-        self._refresh_pad_row()
-        self._refresh_live_counts()
+        with span.child("epoch.swap", from_epoch=self.epoch) as sw:
+            if self.sindex is not None:
+                self.sdb = self.sindex.sdb
+                self.epoch = self.sindex.epoch
+            else:
+                self.db = self.index.db
+                self.epoch = self.index.epoch
+            self._refresh_pad_row()
+            self._refresh_live_counts()
+            sw.set(to_epoch=self.epoch)
 
     @property
     def _mut(self):
         return self.index if self.index is not None else self.sindex
 
     def upsert(self, vectors: np.ndarray,
-               ids: Optional[np.ndarray] = None) -> np.ndarray:
+               ids: Optional[np.ndarray] = None,
+               *, span=None) -> np.ndarray:
         """Insert (or, with ``ids``, replace) vectors; swaps the serving
         snapshot to the new epoch. Returns the new internal ids (GLOBAL
         ids on a sharded backend)."""
@@ -269,56 +356,79 @@ class VectorSearchService:
             if len(ids) != len(vectors):
                 raise ValueError(f"{len(ids)} ids for {len(vectors)} "
                                  f"vectors")
-        new_ids = self._mut.upsert(vectors, ids=ids)
-        self.stats.upserts += len(new_ids)
-        self._swap()
+        root = (span.child("serve.upsert") if span is not None and
+                span.enabled else self.tracer.span("serve.upsert"))
+        root.set(n=len(vectors))
+        with root:
+            if self.sindex is not None:
+                new_ids = self.sindex.upsert(vectors, ids=ids, span=root)
+            else:
+                new_ids = self.index.upsert(vectors, ids=ids)
+            self.stats.record_upserts(len(new_ids))
+            self._swap(span=root)
         return new_ids
 
-    def delete(self, ids: np.ndarray) -> int:
+    def delete(self, ids: np.ndarray, *, span=None) -> int:
         """Tombstone ids; deleted ids never appear in results from the
         swapped epoch onward. Returns the number newly deleted."""
         if self._mut is None:
             raise RuntimeError("delete() needs a mutable-index-backed "
                                "service (got a frozen snapshot)")
-        n = self._mut.delete(ids)
-        self.stats.deletes += n
-        self._swap()
+        root = (span.child("serve.delete") if span is not None and
+                span.enabled else self.tracer.span("serve.delete"))
+        with root:
+            if self.sindex is not None:
+                n = self.sindex.delete(ids, span=root)
+            else:
+                n = self.index.delete(ids)
+            root.set(n=n)
+            self.stats.record_deletes(n)
+            self._swap(span=root)
         return n
 
     # ------------------------------------------------------------------
     # query path
     # ------------------------------------------------------------------
 
-    def _run(self, q: np.ndarray):
+    def _run(self, q: np.ndarray, span=NULL_SPAN):
         if self.health is not None:
-            return self._run_resilient(q)
+            return self._run_resilient(q, span=span)
         qprep = self.filt.prepare(q)
         if self.sdb is not None:
             if self.mesh is not None:
-                fd, fi = distributed_search(self.mesh, self.sdb,
-                                            jnp.asarray(q),
-                                            jnp.asarray(qprep),
-                                            ef0=self.ef0)
+                with span.child("search", path="mesh"):
+                    fd, fi = distributed_search(self.mesh, self.sdb,
+                                                jnp.asarray(q),
+                                                jnp.asarray(qprep),
+                                                ef0=self.ef0)
             else:
-                fd, fi = shard_search_host(self.sdb, jnp.asarray(q),
-                                           jnp.asarray(qprep),
-                                           ef0=self.ef0)
+                with span.child("search", path="host-sharded"):
+                    fd, fi = shard_search_host(self.sdb, jnp.asarray(q),
+                                               jnp.asarray(qprep),
+                                               ef0=self.ef0)
         else:
-            fd, fi = search_batched(self.db, jnp.asarray(q),
-                                    jnp.asarray(qprep), ef0=self.ef0)
+            with span.child("search", path="single"):
+                fd, fi = search_batched(self.db, jnp.asarray(q),
+                                        jnp.asarray(qprep), ef0=self.ef0)
         return np.asarray(fd), np.asarray(fi)
 
     def _coverage(self, answered: np.ndarray) -> float:
         lc = self._live_counts
         return int(lc[answered].sum()) / max(int(lc.sum()), 1)
 
-    def _run_resilient(self, q: np.ndarray):
+    def _run_resilient(self, q: np.ndarray, span=NULL_SPAN):
         """The fault-tolerant sharded query loop: probe every non-dead
         shard individually (bounded retry + exponential backoff inside
         the per-request deadline budget), validate each answer at the
         merge boundary, feed wall times to the per-shard straggler
         monitor, then complete the request from whichever shards
-        answered (degraded when any didn't)."""
+        answered (degraded when any didn't).
+
+        Every decision the loop takes lands in the trace: a
+        ``shard.probe`` child per probed shard carries fault /
+        quarantine / backoff / straggler / dead_mark events in the
+        order they happened; skipped-dead shards and the final merge
+        (with exact coverage) are recorded on the request span."""
         pol = self.fault_policy
         sdb = self.sdb
         Pn = sdb.n_shards
@@ -335,46 +445,74 @@ class VectorSearchService:
         deadline = time.monotonic() + pol.deadline_ms / 1e3
         for s in range(Pn):
             if self.health.dead[s]:
+                span.event("skip_dead_shard", shard=s)
                 continue
-            for attempt in range(pol.max_retries + 1):
-                if attempt and time.monotonic() >= deadline:
-                    break     # retry budget spent: serve degraded
-                try:
-                    fd, gi, wall = probe_shard(sdb, s, qd, qp,
-                                               ef0=self.ef0)
-                    if not check_shard_result(
-                            fd, gi, int(self._offsets_np[s]),
-                            int(self._counts_np[s])):
-                        raise ShardCorruptError(
-                            f"shard {s} failed the merge-boundary "
-                            f"integrity check")
-                    self.health.heartbeat(s, wall)
-                    fd_all[s], gi_all[s] = fd, gi
-                    answered[s] = True
-                    break
-                except ShardFaultError as e:
-                    if self.health.failure(s, e):
-                        break   # marked dead: stop retrying it
-                    pause = min(pol.backoff_ms * (2 ** attempt) / 1e3,
-                                max(deadline - time.monotonic(), 0.0))
-                    if pause > 0:
-                        time.sleep(pause)
+            ps = span.child("shard.probe", shard=s)
+            with ps:
+                for attempt in range(pol.max_retries + 1):
+                    if attempt and time.monotonic() >= deadline:
+                        # retry budget spent: serve degraded
+                        ps.event("deadline_exhausted", attempt=attempt)
+                        break
+                    try:
+                        fd, gi, wall = probe_shard(sdb, s, qd, qp,
+                                                   ef0=self.ef0,
+                                                   span=ps)
+                        if not check_shard_result(
+                                fd, gi, int(self._offsets_np[s]),
+                                int(self._counts_np[s])):
+                            raise ShardCorruptError(
+                                f"shard {s} failed the merge-boundary "
+                                f"integrity check")
+                        ev = self.health.heartbeat(s, wall)
+                        if ev.kind == "straggler":
+                            ps.event("straggler", shard=s,
+                                     detail=ev.detail)
+                        fd_all[s], gi_all[s] = fd, gi
+                        answered[s] = True
+                        ps.set(answered=True, attempts=attempt + 1,
+                               wall_ms=wall * 1e3)
+                        break
+                    except ShardFaultError as e:
+                        kind = ("quarantine"
+                                if isinstance(e, ShardCorruptError)
+                                else "fault")
+                        ps.event(kind, shard=s, attempt=attempt,
+                                 error=repr(e))
+                        if self.health.failure(s, e):
+                            ps.event("dead_mark", shard=s,
+                                     failures=int(
+                                         self.health.failures[s]))
+                            break   # marked dead: stop retrying it
+                        pause = min(pol.backoff_ms * (2 ** attempt) / 1e3,
+                                    max(deadline - time.monotonic(), 0.0))
+                        if pause > 0:
+                            ps.event("backoff", ms=pause * 1e3,
+                                     attempt=attempt)
+                            time.sleep(pause)
+                if not answered[s]:
+                    ps.set(answered=False)
         if not answered.any():
+            span.event("all_shards_dead")
             raise AllShardsDeadError(
                 f"no shard of {Pn} answered within the "
                 f"{pol.deadline_ms:.0f}ms budget")
-        fd, fi = merge_surviving(sdb, fd_all, gi_all, answered, qd,
-                                 ef0=self.ef0)
-        degraded = bool(~answered.all())
+        with span.child("merge", live_shards=int(answered.sum()),
+                        n_shards=Pn) as ms:
+            fd, fi = merge_surviving(sdb, fd_all, gi_all, answered, qd,
+                                     ef0=self.ef0)
+            degraded = bool(~answered.all())
+            cov = self._coverage(answered)
+            ms.set(coverage=cov, degraded=degraded, deferred=deferred)
         self.last_stats = {
-            "coverage": self._coverage(answered),
+            "coverage": cov,
             "degraded": degraded,
             "live_shards": int(answered.sum()),
             "n_shards": Pn,
             "answered": answered,
         }
         if degraded:
-            self.stats.degraded_queries += 1
+            self.stats.record_degraded(cov)
         return np.asarray(fd), np.asarray(fi)
 
     def recover_shard(self, s: int) -> None:
@@ -386,25 +524,33 @@ class VectorSearchService:
                                "enabled service")
         self.health.recover(s)
 
-    def query(self, q: np.ndarray, *, return_stats: bool = False
-              ) -> Tuple[np.ndarray, ...]:
+    def query(self, q: np.ndarray, *, return_stats: bool = False,
+              span=None) -> Tuple[np.ndarray, ...]:
         """q: [n, D] with n <= batch_size; underfull batches are padded
         with the entry point. Returns (dists, indices) for the n real
         queries; only those count toward stats. With ``return_stats``
         a third element reports this request's serving health:
         ``coverage`` (fraction of live vectors reachable — exact),
-        ``degraded``, and ``latency_ms``."""
+        ``degraded``, and ``latency_ms``. ``span`` (optional) parents
+        this request's trace under a caller span (e.g. a ReplicaSet
+        failover loop) instead of opening a new root."""
         q = self._validate_queries(q)
         n = len(q)
         t0 = time.monotonic()
-        if n < self.batch:
-            pad = np.broadcast_to(self._pad_row,
-                                  (self.batch - n, q.shape[1]))
-            q = np.concatenate([q, pad], axis=0)
-        fd, fi = self._run(q)
-        dt = (time.monotonic() - t0) * 1000.0
-        self.stats.queries += n
-        self.stats.latencies_ms.extend([dt] * n)
+        root = (span.child("serve.query") if span is not None and
+                span.enabled else self.tracer.span("serve.query"))
+        root.set(n=n, batch=self.batch, epoch=self.epoch)
+        with root:
+            if n < self.batch:
+                pad = np.broadcast_to(self._pad_row,
+                                      (self.batch - n, q.shape[1]))
+                q = np.concatenate([q, pad], axis=0)
+            fd, fi = self._run(q, span=root)
+            dt = (time.monotonic() - t0) * 1000.0
+            self.stats.record_request(n, dt)
+            root.set(latency_ms=dt,
+                     coverage=self.last_stats.get("coverage", 1.0),
+                     degraded=self.last_stats.get("degraded", False))
         if return_stats:
             return fd[:n], fi[:n], {**self.last_stats,
                                     "latency_ms": dt}
@@ -420,4 +566,5 @@ class VectorSearchService:
             "qps": self.stats.qps,
             "p50_ms": self.stats.percentile(50),
             "p99_ms": self.stats.percentile(99),
+            "p999_ms": self.stats.percentile(99.9),
         }

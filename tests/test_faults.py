@@ -499,14 +499,24 @@ def test_service_ctor_guards(small_dataset, small_graph, small_pca):
                             fault_policy=FaultPolicy())
 
 
-def test_service_stats_bounded_window():
-    from repro.serve.vector_service import LATENCY_WINDOW, ServiceStats
+def test_service_stats_bounded_memory():
+    """The histogram-backed ServiceStats holds constant memory no
+    matter how many requests it absorbs (the old LATENCY_WINDOW deque
+    is gone): bucket storage never grows, percentiles stay exact at
+    the extremes (min/max tracked exactly) and within one log-bucket
+    width elsewhere."""
+    from repro.serve.vector_service import ServiceStats
     st = ServiceStats()
-    st.latencies_ms.extend(float(i) for i in range(LATENCY_WINDOW + 500))
-    assert len(st.latencies_ms) == LATENCY_WINDOW
-    assert st.latencies_ms[0] == 500.0           # oldest evicted
-    assert st.percentile(100) == LATENCY_WINDOW + 499
-    assert st.percentile(0) == 500.0
+    n_buckets = len(st.latency_ms.counts)
+    for i in range(5_000):
+        st.record_request(1, float(i + 1))
+    assert len(st.latency_ms.counts) == n_buckets    # no growth, ever
+    assert st.latency_ms.count == 5_000
+    assert st.percentile(0) == 1.0                   # exact min
+    assert st.percentile(100) == 5_000.0             # exact max
+    g = st.latency_ms.growth
+    assert abs(st.percentile(50) - 2_500) / 2_500 < g - 1
+    assert st.queries == 5_000
 
 
 # --------------------------------------------------------------------------

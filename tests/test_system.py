@@ -141,7 +141,7 @@ def test_vector_service(small_dataset, small_graph, small_pca, small_xlow):
     # pad lanes never leak into results or stats
     assert idx.shape[0] == len(q)
     assert svc.stats.queries == len(q)
-    assert len(svc.stats.latencies_ms) == len(q)
+    assert svc.stats.latency_ms.count == len(q)
 
 
 def test_mutable_index_churn_vs_rebuild_and_zero_recompile():
