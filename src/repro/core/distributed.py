@@ -143,6 +143,21 @@ jax.tree_util.register_dataclass(
     meta_fields=["cfg", "filter_kind"])
 
 
+def stacked_db_view(sdb: ShardedDB) -> PackedDB:
+    """The STACKED PackedDB view of a ShardedDB: every leaf keeps its
+    leading shard dim P (``shard_db`` strips it for one shard; this
+    keeps all of them). Not searchable directly — it is the vmap
+    operand of the slotted sharded programs
+    (``search_jax._slot_step_sharded_jit`` / ``_slot_admit_sharded_jit``),
+    which map the per-shard program over axis 0 of every leaf
+    (``entries`` [P] becomes each lane's scalar ``entry``)."""
+    return PackedDB(
+        layers=[PackedLayer(adj=a, packed_low=p)
+                for a, p in zip(sdb.adj, sdb.packed_low)],
+        low=sdb.low, high=sdb.high, entry=sdb.entries, cfg=sdb.cfg,
+        deleted=sdb.deleted, filter_kind=sdb.filter_kind)
+
+
 def _pad_rows(a: np.ndarray, n: int, fill) -> np.ndarray:
     """Pad axis 0 of ``a`` to ``n`` rows with ``fill``."""
     if a.shape[0] == n:

@@ -193,66 +193,14 @@ def _rank_sort_with_payload(d, p):
     return sd, sp
 
 
-def search_layer_batched(db: PackedDB, layer: int, q_high, qprep,
-                         start_d, start_i, *, ef: int, k: int,
-                         max_steps: Optional[int] = None,
-                         expand_width: Optional[int] = None,
-                         filter_deleted: bool = False,
-                         deferred: bool = False):
-    """One layer of Algorithm 1 for a batch of queries.
-
-    ``qprep`` is the active filter's per-query data (PCA-projected
-    query [B, dl] for "pca", ADC lookup tables [B, S, 256] for "pq",
-    a zero-width dummy for "none" — see core/filters.py); the filter
-    kind itself is static on ``db.filter_kind`` and selects the expand
-    pipeline: the fused Dist.L kernel, the fused PQ ADC kernel, or the
-    filter bypass (every valid neighbor goes straight to Dist.H and the
-    C_pca threshold stage disappears from the compiled program).
-
-    start_d/start_i: [B, E] entry candidates ASCENDING (high-dim dists
-    normally; FILTER-space dists when ``deferred``) — the previous
-    layer's output already is.
-
-    Each loop iteration pops the W = expand_width nearest frontier
-    candidates (slots 0..W-1 of the sorted C) and expands them jointly —
-    exact w.r.t. the per-candidate rule, since a popped candidate with
-    d > F.max can never re-qualify (F.max only shrinks). W-fold fewer
-    while_loop trips; each trip's gathers/kernels widen instead.
-
-    ``filter_deleted`` (static; requires ``db.deleted``) applies the
-    tombstone semantics: deleted nodes enter the candidate frontier C
-    (and the C_pca threshold heap) and are expanded like any node, but
-    are excluded from the result list F — so F.max, the acceptance
-    bound, is computed over LIVE nodes only and the traversal keeps
-    digging until ef live results converge.
-
-    ``deferred`` (static) traverses purely on filter distances: no
-    high-dim gathers or Dist.H inside the loop — C, F and the
-    acceptance bound all live in filter space, and the caller re-ranks
-    the final F list in high dim once. A no-op for the identity filter
-    (its filter distance IS the high-dim distance).
-
-    Returns (F_dist [B, ef], F_idx [B, ef] ascending, steps [B] int32 =
-    per-query expansion count before that query froze, dist_h [B]
-    int32 = per-query Dist.H evaluations inside this layer)."""
-    B = q_high.shape[0]
-    lay = db.layers[layer]
+def _layer_init(db: PackedDB, start_d, start_i, *, ef: int, k: int,
+                CAP: int, filter_deleted: bool):
+    """The fixed-capacity SORTED layer state seeded from a start set:
+    (C_d, C_i, F_d, F_i, V, Cp). Shared by ``search_layer_batched``
+    (fresh per layer) and the slotted admission path (fresh per
+    admitted query, scattered into a live ``SlotState``)."""
+    B = start_d.shape[0]
     N = db.high.shape[0]
-    M = lay.adj.shape[1]
-    W = expand_width or db.cfg.expand_width
-    fkind = db.filter_kind
-    if fkind == "none":
-        kk = W * M          # filter bypass: every neighbor is a candidate
-        deferred = False    # filter space == high-dim space
-    else:
-        kk = W * k                               # survivors per iteration
-    CAP = max(ef + kk, 8)
-    steps = max_steps or db.cfg.max_steps_for_layer(layer)
-    iters = -(-steps // W)                       # expansion budget / W
-    if filter_deleted:
-        assert db.deleted is not None, "filter_deleted needs db.deleted"
-
-    # --- fixed-capacity SORTED state ---
     pad = CAP - start_d.shape[1]
     C_d = jnp.pad(start_d, ((0, 0), (0, pad)), constant_values=INF)
     C_i = jnp.pad(start_i, ((0, 0), (0, pad)), constant_values=-1)
@@ -284,17 +232,50 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, qprep,
     # The identity filter has no threshold stage — Cp stays a constant
     # INF row and its merge is elided from the compiled program.
     Cp = jnp.full((B, k), INF)
-    done = jnp.zeros((B,), bool)
-    nsteps = jnp.zeros((B,), jnp.int32)
-    dhe = jnp.zeros((B,), jnp.int32)
-    state = (jnp.int32(0), C_d, C_i, F_d, F_i, V, Cp, done, nsteps, dhe)
+    return C_d, C_i, F_d, F_i, V, Cp
 
-    def cond(state):
-        t, *_, done, _ns, _de = state
-        return (t < iters) & ~done.all()
+
+def _layer_body(db: PackedDB, layer: int, q_high, qprep, *, ef: int,
+                k: int, W: int, steps, filter_deleted: bool,
+                deferred: bool, ef_eff=None, budget=None):
+    """Build the ONE-expansion-iteration body over the layer state
+    tuple ``(t, C_d, C_i, F_d, F_i, V, Cp, done, nsteps, dhe)``.
+
+    ``search_layer_batched`` drives it inside a ``lax.while_loop`` with
+    a static per-layer ``steps`` budget; the slotted stepper
+    (``_slot_step_jit``) drives the SAME body with two per-slot DATA
+    generalizations, both exactly the static program when absent:
+
+    * ``ef_eff`` [B] int32 — the per-slot effective ef: the acceptance
+      /termination bound reads ``F_d[i, ef_eff[i]-1]`` instead of
+      ``F_d[i, -1]``, so a slot converges once its top-``ef_eff``
+      results are stable even though the compiled buffers are ``ef``
+      wide (the adaptive-ef and mixed-k hook);
+    * ``budget`` [B] int32 — the per-slot expansion-step budget
+      replacing the static ``steps`` limit (the adaptive step-budget
+      hook: a stalled slot freezes without latching ``done`` and
+      resumes when the scheduler raises its budget)."""
+    B = q_high.shape[0]
+    lay = db.layers[layer]
+    M = lay.adj.shape[1]
+    fkind = db.filter_kind
+    if fkind == "none":
+        kk = W * M          # filter bypass: every neighbor is a candidate
+        deferred = False    # filter space == high-dim space
+    else:
+        kk = W * k                               # survivors per iteration
 
     def body(state):
         t, C_d, C_i, F_d, F_i, V, Cp, done, nsteps, dhe = state
+        # the acceptance/termination bound: F.max over the slot's
+        # effective result width (the full compiled width when no
+        # per-slot ef is active — bit-identical to the original)
+        if ef_eff is None:
+            bnd = F_d[:, -1:]
+        else:
+            bnd = jnp.take_along_axis(
+                F_d, jnp.maximum(ef_eff, 1)[:, None] - 1, axis=1)
+        lim = steps if budget is None else budget[:, None]
         # -- pop the W nearest candidates: slots 0..W-1 of sorted C --
         d_w, c_w = C_d[:, :W], C_i[:, :W]
         # termination is monotone (F.max only shrinks, the popped min
@@ -306,16 +287,27 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, qprep,
         # query on a sparse/empty layer spins through the whole step
         # budget doing masked work (the construction probe publishes
         # not-yet-populated top layers, where that spin dominates)
-        done = done | (C_d[:, 0] > F_d[:, -1]) \
+        done = done | (C_d[:, 0] > bnd[:, 0]) \
             | (C_i[:, 0] < 0)                           # lines 7-8
         # per-slot expansion gate: a popped candidate past F.max is
         # dead forever, so dropping it unexpanded is exact; the budget
         # term keeps total expansions <= steps even when W ∤ steps
-        exp = (d_w <= F_d[:, -1:]) & ~done[:, None] \
-            & (nsteps[:, None] + jnp.arange(W)[None, :] < steps)
-        C_d = jnp.concatenate([C_d[:, W:], jnp.full((B, W), INF)], 1)
-        C_i = jnp.concatenate([C_i[:, W:],
-                               jnp.full((B, W), -1, jnp.int32)], 1)
+        exp = (d_w <= bnd) & ~done[:, None] \
+            & (nsteps[:, None] + jnp.arange(W)[None, :] < lim)
+        sh_d = jnp.concatenate([C_d[:, W:], jnp.full((B, W), INF)], 1)
+        sh_i = jnp.concatenate([C_i[:, W:],
+                                jnp.full((B, W), -1, jnp.int32)], 1)
+        if budget is None:
+            # static budget == the loop's iteration bound: every body
+            # application is a real pop (the original program, verbatim)
+            C_d, C_i = sh_d, sh_i
+        else:
+            # slotted: a budget-frozen (or done) slot must NOT pop — it
+            # keeps its frontier intact and resumes exactly where it
+            # froze when the scheduler raises its budget
+            alive = (~done & (nsteps < budget))[:, None]
+            C_d = jnp.where(alive, sh_d, C_d)
+            C_i = jnp.where(alive, sh_i, C_i)
         # gated-off slots gather row 0 (cheap, discarded via the mask)
         c_safe = jnp.where(exp, jnp.maximum(c_w, 0), 0)
         # -- step 2: W row gathers = paper layout (3) bursts --
@@ -366,7 +358,7 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, qprep,
         V = jax.vmap(lambda v, w, m: v.at[w].add(m))(
             V, cw, jnp.where(valid, (1 << cb).astype(jnp.int32), 0))
         # -- accept: d < F.max or F not full (F starts padded with INF) --
-        accept = dh < F_d[:, -1:]
+        accept = dh < bnd
         # one stacked stable sort orders the acceptees for every
         # frontier feed; which rows exist depends on the static mode:
         #   * okF row (tombstoned masked out) only under filter_deleted
@@ -395,7 +387,8 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, qprep,
         #    each right-sized (element work, not op count, is what the
         #    CPU/TPU vector units pay for) --
         F_d, F_i = ops.merge_topk_sorted(F_d, F_i, fd_n, fi_n, ef)
-        C_d, C_i = ops.merge_topk_sorted(C_d, C_i, sd, si, CAP)
+        C_d, C_i = ops.merge_topk_sorted(C_d, C_i, sd, si,
+                                         C_d.shape[1])
         if fkind != "none":
             # C_pca feed: the accepted candidates' filter dists — their
             # own sort row per-step, the dh row itself when deferred
@@ -406,6 +399,77 @@ def search_layer_batched(db: PackedDB, layer: int, q_high, qprep,
         nsteps = nsteps + exp.sum(axis=1, dtype=jnp.int32)
         return (t + 1, C_d, C_i, F_d, F_i, V, Cp, done, nsteps, dhe)
 
+    return body
+
+
+def search_layer_batched(db: PackedDB, layer: int, q_high, qprep,
+                         start_d, start_i, *, ef: int, k: int,
+                         max_steps: Optional[int] = None,
+                         expand_width: Optional[int] = None,
+                         filter_deleted: bool = False,
+                         deferred: bool = False):
+    """One layer of Algorithm 1 for a batch of queries.
+
+    ``qprep`` is the active filter's per-query data (PCA-projected
+    query [B, dl] for "pca", ADC lookup tables [B, S, 256] for "pq",
+    a zero-width dummy for "none" — see core/filters.py); the filter
+    kind itself is static on ``db.filter_kind`` and selects the expand
+    pipeline: the fused Dist.L kernel, the fused PQ ADC kernel, or the
+    filter bypass (every valid neighbor goes straight to Dist.H and the
+    C_pca threshold stage disappears from the compiled program).
+
+    start_d/start_i: [B, E] entry candidates ASCENDING (high-dim dists
+    normally; FILTER-space dists when ``deferred``) — the previous
+    layer's output already is.
+
+    Each loop iteration pops the W = expand_width nearest frontier
+    candidates (slots 0..W-1 of the sorted C) and expands them jointly —
+    exact w.r.t. the per-candidate rule, since a popped candidate with
+    d > F.max can never re-qualify (F.max only shrinks). W-fold fewer
+    while_loop trips; each trip's gathers/kernels widen instead.
+
+    ``filter_deleted`` (static; requires ``db.deleted``) applies the
+    tombstone semantics: deleted nodes enter the candidate frontier C
+    (and the C_pca threshold heap) and are expanded like any node, but
+    are excluded from the result list F — so F.max, the acceptance
+    bound, is computed over LIVE nodes only and the traversal keeps
+    digging until ef live results converge.
+
+    ``deferred`` (static) traverses purely on filter distances: no
+    high-dim gathers or Dist.H inside the loop — C, F and the
+    acceptance bound all live in filter space, and the caller re-ranks
+    the final F list in high dim once. A no-op for the identity filter
+    (its filter distance IS the high-dim distance).
+
+    Returns (F_dist [B, ef], F_idx [B, ef] ascending, steps [B] int32 =
+    per-query expansion count before that query froze, dist_h [B]
+    int32 = per-query Dist.H evaluations inside this layer)."""
+    B = q_high.shape[0]
+    M = db.layers[layer].adj.shape[1]
+    W = expand_width or db.cfg.expand_width
+    kk = W * M if db.filter_kind == "none" else W * k
+    CAP = max(ef + kk, 8)
+    steps = max_steps or db.cfg.max_steps_for_layer(layer)
+    iters = -(-steps // W)                       # expansion budget / W
+    if filter_deleted:
+        assert db.deleted is not None, "filter_deleted needs db.deleted"
+
+    # --- fixed-capacity SORTED state ---
+    C_d, C_i, F_d, F_i, V, Cp = _layer_init(
+        db, start_d, start_i, ef=ef, k=k, CAP=CAP,
+        filter_deleted=filter_deleted)
+    done = jnp.zeros((B,), bool)
+    nsteps = jnp.zeros((B,), jnp.int32)
+    dhe = jnp.zeros((B,), jnp.int32)
+    state = (jnp.int32(0), C_d, C_i, F_d, F_i, V, Cp, done, nsteps, dhe)
+
+    def cond(state):
+        t, *_, done, _ns, _de = state
+        return (t < iters) & ~done.all()
+
+    body = _layer_body(db, layer, q_high, qprep, ef=ef, k=k, W=W,
+                       steps=steps, filter_deleted=filter_deleted,
+                       deferred=deferred)
     out = jax.lax.while_loop(cond, body, state)
     _, _, _, F_d, F_i, _, _, _, nsteps, dhe = out
     return F_d, F_i, nsteps, dhe
@@ -603,3 +667,294 @@ def _search_batched_impl(db: PackedDB, queries, qprep, *,
         rd, ri = _rank_sort_with_payload(dh, jnp.where(ok, fi, -1))
         fd, fi = rd[:, :ef_out], ri[:, :ef_out]
     return fd, fi, jnp.stack(steps), dhe
+
+
+# ---------------------------------------------------------------------------
+# slotted resumable search state — the continuous-batching substrate
+# (serve/scheduler.py; DESIGN.md § Serving front-end).
+#
+# The synchronous path runs descent + layer 0 to completion for one
+# batch and returns; a slot whose ``done`` mask latched early then idles
+# until the SLOWEST query in the batch converges (the convoy). Here the
+# layer-0 traversal state is instead a long-lived pytree of S slots:
+#
+#   * ``_slot_step_jit`` advances EVERY live slot by up to ``quantum``
+#     expansion iterations of the SAME ``_layer_body`` program the
+#     synchronous search compiles, and returns — the host can now
+#     retire slots whose ``done`` latched and refill them;
+#   * ``_slot_admit_jit`` swaps freshly-descended queries into chosen
+#     slots as PURE DATA (a fixed-width scatter; unused admission rows
+#     carry an out-of-range slot id and are dropped) — the same
+#     zero-recompile discipline as entry/tombstone swaps;
+#   * per-slot ``ef_eff`` (mixed-k / adaptive-ef) and ``budget``
+#     (adaptive step budgets) ride in the state as data — see
+#     ``_layer_body``.
+#
+# Sharded twins vmap the identical per-shard program over the stacked
+# ShardedDB leaves; the host merges per-shard lists at retirement
+# (shards are disjoint, so the merge is a host-side sorted concat).
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SlotState:
+    """The resumable layer-0 traversal state of S slots — every field
+    is pytree DATA (leading dim S; the sharded twin prepends the shard
+    dim P), so admission, budget escalation, and epoch swaps never
+    recompile. Geometry (CAP/ef/k widths) is fixed at
+    ``make_slot_state`` time and keys the compiled programs via shapes.
+
+    An EMPTY slot is ``done=True`` with ``budget=0`` and a ``-1``/INF
+    frontier: it latches immediately, gates no loop iteration, and its
+    masked lanes cost only vector width."""
+    C_d: jax.Array      # [S, CAP] sorted candidate frontier dists
+    C_i: jax.Array      # [S, CAP] candidate ids (-1 pad)
+    F_d: jax.Array      # [S, EF] sorted result dists
+    F_i: jax.Array      # [S, EF] result ids (-1 pad)
+    V: jax.Array        # [S, ceil(N/32)] visited bitmap words
+    Cp: jax.Array       # [S, k] C_pca threshold heap
+    done: jax.Array     # [S] bool, latched per slot
+    nsteps: jax.Array   # [S] int32 expansion steps so far
+    dhe: jax.Array      # [S] int32 Dist.H evaluations so far
+    q_high: jax.Array   # [S, D] the resident queries
+    qprep: jax.Array    # [S, ...] per-query filter prep (payload space)
+    ef_eff: jax.Array   # [S] int32 per-slot effective ef (<= EF)
+    budget: jax.Array   # [S] int32 per-slot expansion-step budget
+
+
+jax.tree_util.register_dataclass(
+    SlotState,
+    data_fields=["C_d", "C_i", "F_d", "F_i", "V", "Cp", "done", "nsteps",
+                 "dhe", "q_high", "qprep", "ef_eff", "budget"],
+    meta_fields=[])
+
+
+def _slot_geometry(db: PackedDB, ef: int) -> Tuple[int, int, int]:
+    """(k, W, CAP) of the slotted layer-0 program — derived exactly the
+    way ``search_layer_batched`` derives them, so the slotted body is
+    the same compiled shape family as the synchronous one."""
+    cfg = db.cfg
+    k = cfg.k_schedule[0]
+    W = cfg.expand_width
+    M = db.layers[0].adj.shape[-1]
+    kk = W * M if db.filter_kind == "none" else W * k
+    return k, W, max(ef + kk, 8)
+
+
+def make_slot_state(db: PackedDB, n_slots: int, qprep_example, *,
+                    ef: int, n_shards: Optional[int] = None) -> SlotState:
+    """An all-empty slot bank. ``ef`` is the COMPILED result width (the
+    per-slot ``ef_eff`` can only narrow it — size it to the largest k /
+    ef any request may ask for). ``qprep_example`` is any [b, ...]
+    filter-prep array, used only for its trailing shape/dtype.
+    ``n_shards`` (sharded serving) prepends the shard dim to every
+    leaf — the stacked per-shard states the vmapped twins advance."""
+    _, _, CAP = _slot_geometry(db, ef)
+    k = db.cfg.k_schedule[0]
+    N = db.high.shape[-2]
+    D = db.high.shape[-1]
+    nw = -(-N // 32)
+    lead = () if n_shards is None else (n_shards,)
+    shp = lambda *s: lead + (n_slots,) + s
+    qp_trail = tuple(np.asarray(qprep_example).shape[1:])
+    return SlotState(
+        C_d=jnp.full(shp(CAP), INF),
+        C_i=jnp.full(shp(CAP), -1, jnp.int32),
+        F_d=jnp.full(shp(ef), INF),
+        F_i=jnp.full(shp(ef), -1, jnp.int32),
+        V=jnp.zeros(shp(nw), jnp.int32),
+        Cp=jnp.full(shp(k), INF),
+        done=jnp.ones(shp(), bool),
+        nsteps=jnp.zeros(shp(), jnp.int32),
+        dhe=jnp.zeros(shp(), jnp.int32),
+        q_high=jnp.zeros(shp(D), jnp.float32),
+        qprep=jnp.zeros(shp(*qp_trail), jnp.float32),
+        ef_eff=jnp.full(shp(), ef, jnp.int32),
+        budget=jnp.zeros(shp(), jnp.int32),
+    )
+
+
+def _slot_admit_impl(db: PackedDB, state: SlotState, q_new, qprep_new,
+                     slot_ids, ef_eff_new, budget_new) -> SlotState:
+    """Descend the admission batch through the routing layers (the same
+    per-layer programs as ``_search_batched_impl``) and scatter the
+    fresh layer-0 state into the chosen slots. The admission width is
+    FIXED (pad rows carry slot id >= S and are dropped by the scatter),
+    so every admission reuses one compiled program regardless of how
+    many slots actually refill."""
+    cfg = db.cfg
+    ef = state.F_d.shape[-1]
+    k, _, CAP = _slot_geometry(db, ef)
+    ks = cfg.k_schedule
+    k_of = lambda l: ks[min(l, len(ks) - 1)]
+    A = q_new.shape[0]
+    ep = jnp.broadcast_to(
+        jnp.asarray(db.entry, jnp.int32).reshape(()), (A, 1))
+    ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), q_new)
+    dhe = jnp.ones((A,), jnp.int32)
+    for layer in range(len(db.layers) - 1, 0, -1):
+        ep_d, ep, _, de = search_layer_batched(
+            db, layer, q_new, qprep_new, ep_d, ep,
+            ef=cfg.ef_for_layer(layer), k=k_of(layer))
+        dhe = dhe + de
+    C_d, C_i, F_d, F_i, V, Cp = _layer_init(
+        db, ep_d, ep, ef=ef, k=k, CAP=CAP,
+        filter_deleted=db.deleted is not None)
+    ids = slot_ids
+    sc = lambda dst, rows: dst.at[ids].set(rows, mode="drop")
+    return dataclasses.replace(
+        state,
+        C_d=sc(state.C_d, C_d), C_i=sc(state.C_i, C_i),
+        F_d=sc(state.F_d, F_d), F_i=sc(state.F_i, F_i),
+        V=sc(state.V, V), Cp=sc(state.Cp, Cp),
+        done=sc(state.done, jnp.zeros((A,), bool)),
+        nsteps=sc(state.nsteps, jnp.zeros((A,), jnp.int32)),
+        dhe=sc(state.dhe, dhe),
+        q_high=sc(state.q_high, q_new),
+        qprep=sc(state.qprep, qprep_new),
+        ef_eff=sc(state.ef_eff, ef_eff_new),
+        budget=sc(state.budget, budget_new))
+
+
+def _slot_step_impl(db: PackedDB, state: SlotState, *, quantum: int,
+                    expand_width: int) -> SlotState:
+    """Advance every live slot by up to ``quantum`` iterations of the
+    layer-0 body — the SAME ``_layer_body`` the synchronous search
+    compiles, with the per-slot ``ef_eff``/``budget`` data
+    generalizations active. The loop exits early once no slot can make
+    progress (all done or budget-frozen), so a sparse bank costs what
+    its live slots cost."""
+    ef = state.F_d.shape[-1]
+    k = state.Cp.shape[-1]
+    body = _layer_body(db, 0, state.q_high, state.qprep, ef=ef, k=k,
+                       W=expand_width, steps=0,
+                       filter_deleted=db.deleted is not None,
+                       deferred=False, ef_eff=state.ef_eff,
+                       budget=state.budget)
+    st = (jnp.int32(0), state.C_d, state.C_i, state.F_d, state.F_i,
+          state.V, state.Cp, state.done, state.nsteps, state.dhe)
+
+    def cond(s):
+        t, *_, done, ns, _de = s
+        return (t < quantum) & (~done & (ns < state.budget)).any()
+
+    out = jax.lax.while_loop(cond, body, st)
+    _, C_d, C_i, F_d, F_i, V, Cp, done, nsteps, dhe = out
+    return dataclasses.replace(
+        state, C_d=C_d, C_i=C_i, F_d=F_d, F_i=F_i, V=V, Cp=Cp,
+        done=done, nsteps=nsteps, dhe=dhe)
+
+
+_slot_admit_jit = jax.jit(_slot_admit_impl)
+
+
+@functools.partial(jax.jit, static_argnames=("quantum", "expand_width"))
+def _slot_step_jit(db, state, quantum, expand_width):
+    return _slot_step_impl(db, state, quantum=quantum,
+                           expand_width=expand_width)
+
+
+@jax.jit
+def _slot_admit_sharded_jit(db_stack, state, q_new, qprep_new, slot_ids,
+                            ef_eff_new, budget_new):
+    """Admission over a stacked-leaf PackedDB view of a ShardedDB
+    ([P, ...] leaves; ``core.distributed.stacked_db_view``): each shard
+    descends its own graph for the SAME queries into the SAME slots."""
+    return jax.vmap(
+        lambda d, s: _slot_admit_impl(d, s, q_new, qprep_new, slot_ids,
+                                      ef_eff_new, budget_new)
+    )(db_stack, state)
+
+
+@functools.partial(jax.jit, static_argnames=("quantum", "expand_width"))
+def _slot_step_sharded_jit(db_stack, state, quantum, expand_width):
+    return jax.vmap(
+        lambda d, s: _slot_step_impl(d, s, quantum=quantum,
+                                     expand_width=expand_width)
+    )(db_stack, state)
+
+
+def _slot_step_prefix_impl(db, state, *, width, quantum, expand_width):
+    """Step only the first ``width`` slots of the bank — the WIDTH
+    LADDER. Slots are allocated low-first, so at partial occupancy the
+    scheduler steps the smallest compiled prefix covering the highest
+    live slot instead of paying full-bank prices (each ladder rung is
+    one compile, warmed at construction — steady state stays
+    zero-recompile)."""
+    part = jax.tree_util.tree_map(lambda a: a[:width], state)
+    part = _slot_step_impl(db, part, quantum=quantum,
+                           expand_width=expand_width)
+    return jax.tree_util.tree_map(lambda f, p: f.at[:width].set(p),
+                                  state, part)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("width", "quantum", "expand_width"))
+def _slot_step_prefix_jit(db, state, width, quantum, expand_width):
+    return _slot_step_prefix_impl(db, state, width=width,
+                                  quantum=quantum,
+                                  expand_width=expand_width)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("width", "quantum", "expand_width"))
+def _slot_step_prefix_sharded_jit(db_stack, state, width, quantum,
+                                  expand_width):
+    return jax.vmap(
+        lambda d, s: _slot_step_prefix_impl(d, s, width=width,
+                                            quantum=quantum,
+                                            expand_width=expand_width)
+    )(db_stack, state)
+
+
+def _slot_admit_step_impl(db, state, q_new, qprep_new, slot_ids,
+                          ef_eff_new, budget_new, *, width, quantum,
+                          expand_width):
+    """One FUSED tick program: admission scatter + prefix step in a
+    single compiled call — the same content as the synchronous search
+    (upper-layer descent, then the layer-0 loop), so a tick with
+    arrivals costs one dispatch and never materializes the
+    intermediate post-admission state."""
+    state = _slot_admit_impl(db, state, q_new, qprep_new, slot_ids,
+                             ef_eff_new, budget_new)
+    return _slot_step_prefix_impl(db, state, width=width,
+                                  quantum=quantum,
+                                  expand_width=expand_width)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("width", "quantum", "expand_width"))
+def _slot_admit_step_jit(db, state, q_new, qprep_new, slot_ids,
+                         ef_eff_new, budget_new, width, quantum,
+                         expand_width):
+    return _slot_admit_step_impl(db, state, q_new, qprep_new, slot_ids,
+                                 ef_eff_new, budget_new, width=width,
+                                 quantum=quantum,
+                                 expand_width=expand_width)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("width", "quantum", "expand_width"))
+def _slot_admit_step_sharded_jit(db_stack, state, q_new, qprep_new,
+                                 slot_ids, ef_eff_new, budget_new,
+                                 width, quantum, expand_width):
+    return jax.vmap(
+        lambda d, s: _slot_admit_step_impl(
+            d, s, q_new, qprep_new, slot_ids, ef_eff_new, budget_new,
+            width=width, quantum=quantum, expand_width=expand_width)
+    )(db_stack, state)
+
+
+def slot_cache_sizes() -> Tuple[int, ...]:
+    """(step, admit, step_sharded, admit_sharded, step_prefix,
+    step_prefix_sharded, admit_step, admit_step_sharded)
+    compiled-program cache sizes — the scheduler's
+    zero-recompile-under-churn assertions read these (same pattern as
+    ``core.distributed.search_cache_sizes``)."""
+    return (_slot_step_jit._cache_size(),
+            _slot_admit_jit._cache_size(),
+            _slot_step_sharded_jit._cache_size(),
+            _slot_admit_sharded_jit._cache_size(),
+            _slot_step_prefix_jit._cache_size(),
+            _slot_step_prefix_sharded_jit._cache_size(),
+            _slot_admit_step_jit._cache_size(),
+            _slot_admit_step_sharded_jit._cache_size())

@@ -1,4 +1,19 @@
-"""Fault tolerance & elasticity at 1000+ node scale.
+"""Fault tolerance & elasticity for the TRAINING plane.
+
+NOT to be confused with the similarly-named ``repro.distributed.faults``
+(plural), which is the SERVING plane's deterministic fault-INJECTION
+harness (FaultPlan scripts, ShardHealth, typed ShardFaultError surface).
+The split, so the right module is imported on purpose:
+
+* ``fault.py`` (this module) — mechanisms that keep a TRAINING job
+  healthy: step-time straggler detection (``StepMonitor``, which the
+  serving plane also reuses for per-shard wall-time monitoring),
+  deadline-skipped microbatches (``GradSkipPolicy``), and elastic
+  re-meshing after permanent device loss (``remesh``).
+* ``faults.py`` — tools that BREAK the serving plane on purpose:
+  seeded, logically-timed failure scripts consumed by hooks in the
+  sharded query/mutation/snapshot paths, plus the shard-health state
+  machine the resilient query loop drives.
 
 Three mechanisms, each testable without real hardware failures:
 

@@ -1,5 +1,13 @@
-"""Deterministic fault injection for the serving plane (DESIGN.md
+"""Deterministic fault injection for the SERVING plane (DESIGN.md
 § Fault tolerance).
+
+NOT to be confused with the similarly-named
+``repro.distributed.fault`` (singular), the TRAINING plane's
+fault-tolerance module (StepMonitor / GradSkipPolicy / remesh). This
+module *injects* failures into the serving path on a seeded logical
+clock so the resilient machinery can be tested; ``fault.py`` provides
+*recovery* mechanisms for the train loop (its ``StepMonitor`` is
+reused here by ``ShardHealth`` for per-shard straggler detection).
 
 A ``FaultPlan`` is a seedable script of failure events — kill/stall/
 corrupt a shard, kill a replica, delay a snapshot swap, truncate an npz

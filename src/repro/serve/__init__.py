@@ -1,5 +1,9 @@
 from repro.serve.engine import GenerationEngine
 from repro.serve.replica import ReplicaSet
+from repro.serve.scheduler import (Completion, SchedulerUnsupported,
+                                   StreamScheduler)
 from repro.serve.vector_service import VectorSearchService
 
-__all__ = ["GenerationEngine", "ReplicaSet", "VectorSearchService"]
+__all__ = ["Completion", "GenerationEngine", "ReplicaSet",
+           "SchedulerUnsupported", "StreamScheduler",
+           "VectorSearchService"]

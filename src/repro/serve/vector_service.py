@@ -556,15 +556,78 @@ class VectorSearchService:
                                     "latency_ms": dt}
         return fd[:n], fi[:n]
 
-    def run_stream(self, queries: np.ndarray) -> Tuple[np.ndarray, dict]:
-        """Serve a stream in service batches; returns (all indices, stats)."""
-        outs = []
-        for i in range(0, len(queries), self.batch):
-            _, fi = self.query(queries[i:i + self.batch])
-            outs.append(fi)
-        return np.concatenate(outs, axis=0), {
+    @property
+    def scheduler_supported(self) -> bool:
+        """Whether the continuous-batching scheduler can serve this
+        configuration (host paths, per-step re-rank modes)."""
+        snap = self.sdb if self.sdb is not None else self.db
+        return self.mesh is None and not (snap.cfg.deferred_rerank
+                                          and snap.filter_kind != "none")
+
+    def scheduler(self, **kw):
+        """The service's continuous-batching front-end
+        (``serve.scheduler.StreamScheduler``). With no arguments the
+        one default instance is cached and reused (its slot state and
+        step telemetry persist across ``run_stream`` calls); keyword
+        arguments build a fresh scheduler (e.g. ``ef=128`` for
+        mixed-k traffic, ``slo_ms=`` for deadline shedding)."""
+        from repro.serve.scheduler import StreamScheduler
+        if kw:
+            return StreamScheduler(self, **kw)
+        if getattr(self, "_sched", None) is None:
+            self._sched = StreamScheduler(self)
+        return self._sched
+
+    def _stream_stats(self, extra: Optional[dict] = None) -> dict:
+        st = {
             "qps": self.stats.qps,
             "p50_ms": self.stats.percentile(50),
             "p99_ms": self.stats.percentile(99),
             "p999_ms": self.stats.percentile(99.9),
         }
+        if extra:
+            st.update(extra)
+        return st
+
+    def run_stream_sync(self, queries: np.ndarray
+                        ) -> Tuple[np.ndarray, dict]:
+        """The synchronous batch-at-a-time stream path (the seed
+        behavior, kept as the scheduler's A/B baseline): serve in
+        service batches, every query waiting for its batch's slowest
+        traverser."""
+        outs = []
+        for i in range(0, len(queries), self.batch):
+            _, fi = self.query(queries[i:i + self.batch])
+            outs.append(fi)
+        return np.concatenate(outs, axis=0), \
+            self._stream_stats({"path": "sync"})
+
+    def run_stream(self, queries: np.ndarray, *,
+                   scheduler: Optional[bool] = None
+                   ) -> Tuple[np.ndarray, dict]:
+        """Serve a stream of queries; returns (all indices [n, ef0],
+        stats). By default the continuous-batching scheduler serves any
+        supported configuration (queries retire individually as they
+        converge — no convoy, no pad lanes) and the synchronous batch
+        path serves the rest; force either with ``scheduler=``.
+        Results come back in SUBMISSION order regardless of retirement
+        order, exactly once per query."""
+        if scheduler is None:
+            scheduler = self.scheduler_supported
+        if not scheduler:
+            return self.run_stream_sync(queries)
+        q = self._validate_vectors(queries, "queries")
+        sched = self.scheduler()
+        k = min(self.ef0, sched.EF)
+        n = len(q)
+        out = np.full((n, k), -1, np.int64)
+        i = got = 0
+        while got < n:
+            while i < n and sched.has_capacity():
+                sched.submit(q[i], k=k, rid=i)
+                i += 1
+            ticked = sched.tick()
+            for c in ticked:
+                out[c.rid] = c.ids
+                got += 1
+        return out, self._stream_stats({"path": "scheduler"})

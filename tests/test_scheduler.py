@@ -1,0 +1,178 @@
+"""Continuous-batching scheduler tests (DESIGN.md § Serving front-end):
+delivery semantics under out-of-order retirement, SLO admission-control
+accounting, adaptive-ef recall parity, and the zero-recompile
+churn-under-load regression."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="module")
+def stream_setup(small_dataset, small_graph, small_pca):
+    from repro.core.filters import PCAFilter
+    from repro.core.search_jax import build_packed
+    from repro.data.vectors import brute_force_topk, make_queries
+    from repro.serve.vector_service import VectorSearchService
+    x, _, _ = small_dataset
+    cfg = small_graph.cfg
+    filt = PCAFilter(small_pca, low_dtype=cfg.low_dtype)
+    db = build_packed(small_graph, filt.encode(x), filt=filt)
+    q = make_queries(x, 200, seed=7)
+    gt = brute_force_topk(x, q, 10)
+    svc = VectorSearchService(db, small_pca)
+    return svc, db, q, gt
+
+
+def _recall10(idx, gt):
+    return np.mean([len(set(idx[i, :10]) & set(gt[i])) / 10
+                    for i in range(len(gt))])
+
+
+def test_run_stream_matches_sync_bitwise(stream_setup):
+    """The scheduler path returns the SAME ids as the synchronous
+    batch path, in submission order — continuous batching changes
+    when a query's work runs, never what it computes."""
+    svc, _, q, _ = stream_setup
+    idx_sync, st_sync = svc.run_stream_sync(q)
+    idx_sched, st_sched = svc.run_stream(q, scheduler=True)
+    assert st_sync["path"] == "sync"
+    assert st_sched["path"] == "scheduler"
+    assert np.array_equal(idx_sync.astype(np.int64), idx_sched)
+
+
+def test_exactly_once_out_of_order(stream_setup):
+    """Mixed-k traffic retires out of submission order (a k=24 query
+    runs a deeper beam than a k=4 one); every rid is delivered exactly
+    once, and each answer matches the synchronous program run at that
+    request's effective ef."""
+    from repro.core.search_jax import search_batched
+    import jax.numpy as jnp
+    svc, db, q, _ = stream_setup
+    sched = svc.scheduler(ef=24)
+    n = 96
+    ks = [4 if i % 2 == 0 else 24 for i in range(n)]
+    for i in range(n):
+        assert sched.submit(q[i], k=ks[i], rid=i) == i
+    got = {}
+    order = []
+    for c in sched.drain():
+        assert c.rid not in got, "duplicate delivery"
+        got[c.rid] = c
+        order.append(c.rid)
+    assert sorted(got) == list(range(n))
+    assert order != sorted(order), "expected out-of-order retirement"
+    # per-request parity: ef_eff = max(k, ef_policy=10)
+    qj = jnp.asarray(q[:n])
+    qp = svc.filt.prepare_jnp(qj)
+    ref = {}
+    for ef_eff in (10, 24):
+        _, fi = search_batched(db, qj, qp, ef0=ef_eff)
+        ref[ef_eff] = np.asarray(fi)
+    for i in range(n):
+        ef_eff = max(ks[i], 10)
+        assert np.array_equal(got[i].ids, ref[ef_eff][i, :ks[i]])
+
+
+def test_shed_accounting(stream_setup):
+    """Bounded-queue overflow and expired deadlines shed with
+    per-reason counters; shed + delivered == submitted."""
+    svc, _, q, _ = stream_setup
+    sched = svc.scheduler(n_slots=8, max_queue=4)
+    fam = svc.stats.registry.get("phnsw_sched_shed_total")
+    base_full = fam.labels(reason="queue_full").value
+    base_dl = fam.labels(reason="deadline").value
+    # overflow: 4 queue places, no ticks -> submissions 5.. shed
+    rids = [sched.submit(q[i], k=10) for i in range(6)]
+    assert rids[4] is None and rids[5] is None
+    assert fam.labels(reason="queue_full").value == base_full + 2
+    # expired deadline: scheduled far in the past
+    import time
+    late = sched.submit(q[6], k=10,
+                        t_sched=time.monotonic() - 10.0,
+                        deadline_ms=1.0)
+    assert late is None
+    assert fam.labels(reason="deadline").value == base_dl + 1
+    delivered = sched.drain()
+    assert len(delivered) == 4
+    assert {c.rid for c in delivered} == {r for r in rids
+                                          if r is not None}
+
+
+def test_adaptive_ef_recall_parity(stream_setup):
+    """Adaptive step budgets (p50 start + escalation) must not cost
+    recall: >= the fixed-budget path's recall - 0.005. (They are in
+    fact bit-equal — escalation re-runs the same monotone program.)"""
+    svc, _, q, gt = stream_setup
+    fixed = svc.scheduler(adaptive_budget=False)
+    adaptive = svc.scheduler(adaptive_budget=True)
+    esc = svc.stats.registry.get("phnsw_sched_escalations_total")
+
+    def run(s):
+        for i in range(len(q)):
+            s.submit(q[i], k=10, rid=i)
+        out = np.full((len(q), 10), -1, np.int64)
+        for c in s.drain():
+            out[c.rid] = c.ids
+        return out
+
+    idx_fixed = run(fixed)
+    # two passes: the first fills the step histogram, the second runs
+    # with p50 initial budgets (escalations must fire for deep queries)
+    run(adaptive)
+    before = esc.value
+    idx_adaptive = run(adaptive)
+    assert esc.value > before, "p50 budgets should force escalations"
+    r_fixed = _recall10(idx_fixed, gt)
+    r_adaptive = _recall10(idx_adaptive, gt)
+    assert r_adaptive >= r_fixed - 0.005
+    assert np.array_equal(idx_fixed, idx_adaptive)
+
+
+def test_zero_recompile_under_churn(stream_setup):
+    """Steady-state serving — admission churn, mixed k, adaptive
+    escalation, repeated waves — reuses the warm compiled programs:
+    the jit cache counters must not move."""
+    from repro.core.search_jax import slot_cache_sizes
+    svc, _, q, _ = stream_setup
+    sched = svc.scheduler()          # cached default, already warm
+    svc.run_stream(q[:64], scheduler=True)
+    warm = slot_cache_sizes()
+    for wave in range(3):
+        for i in range(50):
+            sched.submit(q[(wave * 50 + i) % len(q)],
+                         k=(i % 10) + 1)
+        sched.drain()
+    svc.run_stream(q[64:128], scheduler=True)
+    assert slot_cache_sizes() == warm
+
+
+def test_sharded_degraded_scheduler(small_dataset, small_pca):
+    """The sharded slotted path serves GLOBAL ids; with a dead shard
+    the done gate and the merge exclude it (answers never contain its
+    ids) and completions carry degraded/coverage accounting."""
+    from repro.core.distributed import build_sharded
+    from repro.core.filters import PCAFilter
+    from repro.data.vectors import make_queries
+    from repro.serve.vector_service import VectorSearchService
+    x, _, _ = small_dataset
+    from repro.configs.base import PHNSWConfig
+    cfg = PHNSWConfig(name="test4k", n_points=len(x),
+                      ef_construction=50)
+    filt = PCAFilter(small_pca, low_dtype=cfg.low_dtype)
+    sdb = build_sharded(x, cfg, filt, 3, seed=0)
+    svc = VectorSearchService(sdb, small_pca)
+    q = make_queries(x, 60, seed=11)
+    idx_all, _ = svc.run_stream(q, scheduler=True)
+    idx_sync, _ = svc.run_stream_sync(q)
+    assert np.array_equal(idx_sync.astype(np.int64), idx_all)
+    sched = svc.scheduler()
+    sched.set_live([True, False, True])
+    for i in range(40):
+        sched.submit(q[i], k=10, rid=i)
+    comps = sched.drain()
+    assert sorted(c.rid for c in comps) == list(range(40))
+    offs = np.asarray(sdb.offsets)
+    cnts = np.asarray(sdb.counts)
+    lo, hi = offs[1], offs[1] + cnts[1]
+    for c in comps:
+        assert c.degraded and c.coverage < 1.0
+        assert not ((c.ids >= lo) & (c.ids < hi)).any()
