@@ -10,13 +10,21 @@ the pluggable filter stage (core/filters.py) swaps:
                    question this ablation exists to answer,
   none           — filter bypass (HNSW-Std: every neighbor re-ranked),
   pca-deferred   — PCA filter + deferred re-ranking (traversal in
-                   filter space, ONE batched Dist.H per query).
+                   filter space, ONE batched Dist.H per query),
+  cascade-deferred — the multi-stage cascade: PQ-code traversal (16
+                   B/vec inline), a PCA promote pass over the wide
+                   layer-0 exit list (60 B/vec side-car, touched once
+                   per query instead of every step), ONE batched
+                   Dist.H — PQ-class hot-stream bytes at
+                   PCA-deferred-class recall.
 
 Reported per mode: measured QPS, recall@10, mean Dist.H evaluations
 per query (the high-dim traffic the filter exists to shrink), and the
-payload bytes/vec (the memory cost it pays). This replaces the old
-synthetic frontier protocol with end-to-end numbers where traversal
-effects (threshold feedback, frontier ordering) are included.
+payload bytes/vec (the memory cost it pays — inline hot-stream bytes,
+plus the cascade's off-stream side-car reported separately). This
+replaces the old synthetic frontier protocol with end-to-end numbers
+where traversal effects (threshold feedback, frontier ordering) are
+included.
 """
 from __future__ import annotations
 
@@ -31,14 +39,17 @@ def main(n_points: int = 50_000, n_queries: int = 64):
                            batch=min(64, len(q)),
                            modes=[("pca", False), ("pq", False),
                                   ("pq64", False), ("none", False),
-                                  ("pca", True)])
+                                  ("pca", True), ("cascade", True)])
     rows = []
     for m in ab:
         rows.append((f"pq_ablation/{m['name']}", m["us_per_query"],
                      f"qps={m['qps']:.0f};recall@10={m['recall']:.3f};"
                      f"dist_h_mean={m['dist_h_mean']:.1f};"
                      f"bytes_per_vec={m['bytes_per_vec']};"
-                     f"rerank_mult={m['rerank_mult']}"))
+                     f"sidecar_bytes_per_vec="
+                     f"{m['sidecar_bytes_per_vec']};"
+                     f"rerank_mult={m['rerank_mult']};"
+                     f"promote_mult={m['promote_mult']}"))
     return emit(rows)
 
 

@@ -106,7 +106,8 @@ def main(n_points: int = 50_000, n_queries: int = 200,
                                             distributed_search,
                                             shard_search_host)
         from repro.core.search_ref import recall_at
-        filt = make_bench_filter(filter_kind, cfg, x, pca)
+        filt = make_bench_filter(filter_kind, cfg, x, pca,
+                                 levels=g.levels)
         sdb = build_sharded(x, cfg, filt, n_shards)
         qd = jnp.asarray(q[:B])
         qprep = filt.prepare_jnp(qd)
@@ -147,7 +148,9 @@ def main(n_points: int = 50_000, n_queries: int = 200,
                      a["us_per_query"],
                      f"qps={a['qps']:.0f};recall@10={a['recall']:.3f};"
                      f"dist_h_mean={a['dist_h_mean']:.1f};"
-                     f"bytes_per_vec={a['bytes_per_vec']}")
+                     f"bytes_per_vec={a['bytes_per_vec']};"
+                     f"sidecar_bytes_per_vec="
+                     f"{a['sidecar_bytes_per_vec']}")
                     for a in ab)
         entry = {
             "bench": "table3_qps",
@@ -162,7 +165,9 @@ def main(n_points: int = 50_000, n_queries: int = 200,
             "dist_h_mean": m["dist_h_mean"],
             "filters": {a["name"]: {k: a[k] for k in
                                     ("qps", "recall", "dist_h_mean",
-                                     "bytes_per_vec", "rerank_mult")}
+                                     "bytes_per_vec",
+                                     "sidecar_bytes_per_vec",
+                                     "rerank_mult", "promote_mult")}
                         for a in ab},
         }
         # append-only perf trajectory: latest entry at top level (the

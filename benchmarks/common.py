@@ -37,12 +37,14 @@ def load_bench_db(n_points: int = 50_000, n_queries: int = 200):
     return cfg, x, g, pca, x_low, q, gt
 
 
-def make_bench_filter(kind: str, cfg, x, pca):
+def make_bench_filter(kind: str, cfg, x, pca, levels=None):
     """The filter used by the batched benchmarks: adopt the cached PCA
-    for "pca", fit PQ/identity from cfg (smoke-speed training: 4 Lloyd
-    iterations is recall-equivalent on the 8-50k benches). "pq<N>"
-    (e.g. "pq64") overrides cfg.pq_n_sub — the matched-byte-budget
-    arms of the ablation."""
+    for "pca"/"cascade", fit PQ/identity from cfg (smoke-speed
+    training: 4 Lloyd iterations is recall-equivalent on the 8-50k
+    benches). "pq<N>" (e.g. "pq64") overrides cfg.pq_n_sub — the
+    matched-byte-budget arms of the ablation. ``levels`` (the graph's
+    per-point layer assignment) trains cascade/PQ codebooks
+    density-aware."""
     import dataclasses
     from repro.core.filters import PCAFilter, make_filter
     if kind == "pca":
@@ -50,9 +52,14 @@ def make_bench_filter(kind: str, cfg, x, pca):
     n_sub = cfg.pq_n_sub
     if kind.startswith("pq") and kind != "pq":
         kind, n_sub = "pq", int(kind[2:])
+    # the cascade rides its codes through the whole traversal before
+    # the promote stage can help, so it gets the config's full Lloyd
+    # schedule; the plain-PQ arms are recall-equivalent at 4
+    iters = cfg.pq_train_iters if kind == "cascade" else 4
     return make_filter(dataclasses.replace(cfg, filter_kind=kind,
                                            pq_n_sub=n_sub,
-                                           pq_train_iters=4), x)
+                                           pq_train_iters=iters), x,
+                       pca=pca, levels=levels)
 
 
 def batched_filter_ab(cfg, x, g, pca, q, gt, *, batch: int = 64,
@@ -69,18 +76,23 @@ def batched_filter_ab(cfg, x, g, pca, q, gt, *, batch: int = 64,
     from repro.core.search_ref import recall_at
 
     modes = modes or [("pca", False), ("pq", False), ("none", False),
-                      ("pca", True)]
+                      ("pca", True), ("cascade", True)]
     B = min(batch, len(q))
     qd = jnp.asarray(q[:B])
     filt_cache, db_cache = {}, {}       # payload depends only on kind
     out = []
     for kind, deferred in modes:
         if kind not in filt_cache:
-            filt_cache[kind] = make_bench_filter(kind, cfg, x, pca)
+            filt_cache[kind] = make_bench_filter(kind, cfg, x, pca,
+                                                 levels=g.levels)
             db_cache[kind] = build_packed(g, filt_cache[kind].encode(x),
                                           filt=filt_cache[kind])
         filt, db = filt_cache[kind], db_cache[kind]
-        rm = int(rerank_mult or cfg.rerank_mult)
+        # the cascade's promote stage hands the re-rank a PCA-ordered
+        # pool, so its Dist.H budget is capped at rerank_mult=2 —
+        # strictly below the pca-deferred row's high-dim traffic
+        rm = int(rerank_mult or
+                 (2 if kind == "cascade" else cfg.rerank_mult))
         kw = dict(filt=filt, deferred=deferred, rerank_mult=rm)
         search_batched(db, qd, **kw)[1].block_until_ready()   # compile
         t0 = _time.perf_counter()
@@ -102,7 +114,11 @@ def batched_filter_ab(cfg, x, g, pca, q, gt, *, batch: int = 64,
             "steps_p99": float(_np.percentile(steps, 99)),
             "steps_max": int(steps.max()),
             "bytes_per_vec": filt.bytes_per_vec,
+            "sidecar_bytes_per_vec": getattr(filt, "mid_bytes_per_vec",
+                                             0),
             "rerank_mult": rm if deferred else 1,
+            "promote_mult": cfg.promote_mult
+            if (deferred and filt.kind == "cascade") else 1,
         })
     return out
 

@@ -55,7 +55,7 @@ def main() -> None:
                     help="with --load: dump the Prometheus text "
                          "exposition of the run's metrics registry to "
                          "this path (the CI obs-smoke parse gate)")
-    ap.add_argument("--filter", choices=("pca", "pq", "none"),
+    ap.add_argument("--filter", choices=("pca", "pq", "cascade", "none"),
                     default="pca", dest="filter_kind",
                     help="filter stage for the measured batched row "
                          "(core/filters.py); the tracked "

@@ -243,13 +243,21 @@ class PHNSWConfig:
     # which low-cost filter ranks candidates before (or instead of)
     # high-dim re-ranking: "pca" (the paper's dense low-dim projection),
     # "pq" (Flash-style product quantization, scored via an on-device
-    # ADC gather-accumulate kernel), or "none" (filter bypass: every
-    # neighbor goes straight to Dist.H — the HNSW-Std behavior, kept as
-    # a first-class measured baseline)
+    # ADC gather-accumulate kernel), "cascade" (PQ-traverse →
+    # PCA-promote → one deferred Dist.H pass: PQ-class inline bytes at
+    # PCA-class recall; requires deferred_rerank), or "none" (filter
+    # bypass: every neighbor goes straight to Dist.H — the HNSW-Std
+    # behavior, kept as a first-class measured baseline)
     filter_kind: str = "pca"
     # PQ filter shape: n_sub subspaces x 256 centroids = n_sub bytes/vec
     pq_n_sub: int = 16
     pq_train_iters: int = 8
+    # cascade promote stage: the layer-0 traversal keeps
+    # promote_mult * ef0 PQ-space candidates, the PCA mid-stage score
+    # (batched, once per layer-0 exit) trims them to rerank_mult * ef0
+    # for the single final Dist.H pass. The PQ-recall recovery knob:
+    # widen it until the promote pool covers what PQ ranking misses.
+    promote_mult: int = 6
     # ---- re-ranking mode ----
     # "deferred" traverses purely on filter distances and re-ranks only
     # the final list in high dim: ONE batched Dist.H call per query
@@ -293,6 +301,23 @@ class PHNSWConfig:
 
     def k_for_layer(self, layer: int) -> int:
         return self.k_schedule[min(layer, len(self.k_schedule) - 1)]
+
+    def k_schedule_for(self, filter_kind: str,
+                       deferred: bool) -> Tuple[int, ...]:
+        """Effective default per-layer expansion k for a filter kind.
+        The deferred CASCADE keeps ALL M0 neighbors at layer 0 (no
+        kSort.L pruning): its in-loop distances are ~free ADC lookups,
+        but 256-way sub-codebooks rank too coarsely for a tight
+        per-step top-k — pruned edges are exactly how true neighbors
+        become unreachable, and no promote/re-rank width can recover a
+        node the traversal never visited. In per-step mode k also
+        bounds the per-expansion Dist.H count, so the configured
+        schedule stands there. An explicit ``k_schedule=`` argument to
+        any search entry point overrides this default verbatim."""
+        if deferred and filter_kind == "cascade":
+            return (max(self.k_schedule[0], self.M0),) \
+                + tuple(self.k_schedule[1:])
+        return tuple(self.k_schedule)
 
     def ef_for_layer(self, layer: int) -> int:
         return self.ef0 if layer == 0 else self.ef_upper

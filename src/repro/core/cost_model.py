@@ -75,14 +75,21 @@ class ProcessorConfig:
     dyn_power_w: float = 0.150
     static_power_w: float = 0.050
 
-    def compute_cycles(self, st: SearchStats, dim: int, d_low: int) -> Dict:
+    def compute_cycles(self, st: SearchStats, dim: int, d_low: int,
+                       d_mid: int = 0) -> Dict:
         """``d_low`` is the per-point filter pipeline depth: d_low dims
         for the PCA filter, n_sub table lookups for PQ, the full dim
         for the identity bypass — pass ``FilterSpec.cost_dims`` (or use
         ``query_cost(..., filt=...)``) so the modeled compute stays
-        honest across filters."""
+        honest across filters. ``d_mid`` prices the cascade's promote
+        stage (``SearchStats.dist_mid`` evals, PCA-row depth =
+        ``CascadeFilter.mid_cost_dims``) on the same 16-lane Dist.L
+        unit — a separate term because the two stages run at different
+        pipeline depths (ADC table lookups vs f32 dims)."""
         c = {}
         c["dist_l"] = math.ceil(st.dist_low / self.dist_lanes) * d_low
+        if st.dist_mid:
+            c["dist_m"] = math.ceil(st.dist_mid / self.dist_lanes) * d_mid
         c["ksort_l"] = st.ksort_calls * self.ksort_cycles
         c["dist_h"] = st.dist_high * math.ceil(dim / self.disth_macs_per_cycle)
         c["min_h"] = st.minh_calls * self.minh_cycles
@@ -129,8 +136,8 @@ class QueryCost:
 
 def query_cost(st: SearchStats, *, n_queries: int, dim: int,
                d_low: Optional[int] = None, dram: DramConfig,
-               proc: ProcessorConfig = PROCESSOR, filt=None
-               ) -> QueryCost:
+               proc: ProcessorConfig = PROCESSOR, filt=None,
+               d_mid: Optional[int] = None) -> QueryCost:
     """Cost of ONE query given aggregate stats over ``n_queries``.
 
     The filter payload is priced generically: DRAM traffic arrives in
@@ -138,13 +145,20 @@ def query_cost(st: SearchStats, *, n_queries: int, dim: int,
     (``FilterSpec.bytes_per_vec`` — e.g. ``PQCodebook.bytes_per_vec``
     for PQ codes), and the filter-distance compute depth comes from
     ``filt.cost_dims`` when ``filt`` is given (``d_low`` is the
-    PCA-era spelling, kept for the seed callers)."""
+    PCA-era spelling, kept for the seed callers). Cascade stats carry
+    a second stage (``dist_mid``, the PCA promote pass) priced at
+    ``d_mid`` — taken from ``filt.mid_cost_dims`` when available,
+    falling back to ``d_low`` so two-stage stats are never silently
+    priced at depth zero."""
     if filt is not None:
         d_low = filt.cost_dims
+        d_mid = getattr(filt, "mid_cost_dims", d_mid)
     if d_low is None:
         raise ValueError("query_cost needs d_low or filt")
+    if d_mid is None:
+        d_mid = d_low
     per = SearchStats(**{k: v / n_queries for k, v in st.as_dict().items()})
-    cyc = proc.compute_cycles(per, dim, d_low)
+    cyc = proc.compute_cycles(per, dim, d_low, d_mid)
     compute_ns = sum(cyc.values()) / proc.freq_ghz
     dram_ns = dram.time_ns(per)
     total_s = (compute_ns + dram_ns) * 1e-9

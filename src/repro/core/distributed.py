@@ -26,12 +26,21 @@ Scheme (scale-out ANN as deployed in practice):
     batched Dist.H re-ranks the merged list — each shard scores only
     the merged candidates it owns and a psum assembles the row
     (total Dist.H evals per query = rerank_mult * ef0 across the whole
-    mesh, same as single-shard deferred).
+    mesh, same as single-shard deferred);
+  * the deferred CASCADE widens the per-shard lists further to
+    ``promote_mult * ef0`` PQ-space candidates, merges on PQ
+    distances, and inserts a GLOBAL promote stage before the Dist.H
+    pass: each shard scores the merged candidates it owns against its
+    PCA side-car (``low2``) rows, a psum assembles the mid-stage row,
+    and the list is trimmed to ``rerank_mult * ef0`` — so the whole
+    mesh still pays exactly one batched Dist.H of the single-shard
+    deferred width.
 
 Collective cost per query batch: one all-gather of [P, B_local, E]
-(dist, idx) pairs (E = ef0, or rerank_mult*ef0 when deferred) plus,
-when deferred, one [B_local, E] psum — a few KB; the traversal itself
-is communication-free.
+(dist, idx) pairs (E = ef0, or rerank_mult*ef0 when deferred,
+promote_mult*ef0 for the cascade) plus, when deferred, one
+[B_local, E] psum (two for the cascade) — a few KB; the traversal
+itself is communication-free.
 
 ``shard_search_host`` runs the IDENTICAL program without a mesh (a
 python loop over shards + the same merge/re-rank) — bit-equal to
@@ -100,6 +109,7 @@ class ShardedDB:
     counts: jax.Array             # [P] int32 rows owned per shard
     cfg: PHNSWConfig
     deleted: Optional[jax.Array] = None   # [P, ceil(N/32)] int32
+    low2: Optional[jax.Array] = None      # [P, N, d_low] f32 side-car
     filter_kind: str = "pca"
 
     @property
@@ -116,6 +126,7 @@ class ShardedDB:
                         entry=self.entries[s], cfg=self.cfg,
                         deleted=None if self.deleted is None
                         else self.deleted[s],
+                        low2=None if self.low2 is None else self.low2[s],
                         filter_kind=self.filter_kind)
 
     def select(self, keep) -> "ShardedDB":
@@ -133,13 +144,14 @@ class ShardedDB:
             low=self.low[k], high=self.high[k],
             entries=self.entries[k], offsets=self.offsets[k],
             counts=self.counts[k],
-            deleted=None if self.deleted is None else self.deleted[k])
+            deleted=None if self.deleted is None else self.deleted[k],
+            low2=None if self.low2 is None else self.low2[k])
 
 
 jax.tree_util.register_dataclass(
     ShardedDB,
     data_fields=["adj", "packed_low", "low", "high", "entries",
-                 "offsets", "counts", "deleted"],
+                 "offsets", "counts", "deleted", "low2"],
     meta_fields=["cfg", "filter_kind"])
 
 
@@ -155,7 +167,7 @@ def stacked_db_view(sdb: ShardedDB) -> PackedDB:
         layers=[PackedLayer(adj=a, packed_low=p)
                 for a, p in zip(sdb.adj, sdb.packed_low)],
         low=sdb.low, high=sdb.high, entry=sdb.entries, cfg=sdb.cfg,
-        deleted=sdb.deleted, filter_kind=sdb.filter_kind)
+        deleted=sdb.deleted, low2=sdb.low2, filter_kind=sdb.filter_kind)
 
 
 def _pad_rows(a: np.ndarray, n: int, fill) -> np.ndarray:
@@ -223,6 +235,8 @@ def build_sharded(x: np.ndarray, cfg: PHNSWConfig, filt, n_shards: int,
         counts=jnp.asarray(cnts, jnp.int32),
         cfg=cfg,
         deleted=None if deleted is None else stack(dels),
+        low2=None if dbs[0].low2 is None else
+        stack([_pad_rows(np.asarray(db.low2), n_max, 0) for db in dbs]),
         filter_kind=filt.kind,
     )
 
@@ -233,14 +247,16 @@ def build_sharded(x: np.ndarray, cfg: PHNSWConfig, filt, n_shards: int,
 # ---------------------------------------------------------------------------
 
 def _shard_lists(db: PackedDB, offset, queries, qprep, *, ef0, ks,
-                 deferred, rerank_mult):
+                 deferred, rerank_mult, promote_mult=1):
     """One shard's pre-merge candidate lists: ([B, E] dists ascending,
     [B, E] GLOBAL ids). High-dim dists normally; the WIDE
-    (rerank_mult * ef0) filter-space list when deferred (the global
-    re-rank happens after the cross-shard merge)."""
+    (rerank_mult * ef0 — promote_mult * ef0 for the cascade)
+    filter-space list when deferred (the global promote/re-rank happens
+    after the cross-shard merge)."""
     fd, fi, _, _ = _search_batched_impl(
         db, queries, qprep, ef0=ef0, k_schedule=ks, deferred=deferred,
-        rerank_mult=rerank_mult, final_rerank=False)
+        rerank_mult=rerank_mult, promote_mult=promote_mult,
+        final_rerank=False)
     return fd, jnp.where(fi >= 0, fi + offset, -1)
 
 
@@ -266,6 +282,27 @@ def _owned_dist_h(high, offset, count, gids, queries):
     return jnp.where(own, ops.dist_h(xh, queries), 0.0)
 
 
+def _owned_dist_mid(low2, offset, count, gids, qpca):
+    """One shard's contribution to the global cascade promote: PCA
+    mid-stage dists (against the ``low2`` side-car) for the merged
+    candidates THIS shard owns, zeros elsewhere — assembled by the same
+    cross-shard sum as ``_owned_dist_h``."""
+    own = (gids >= offset) & (gids < offset + count)
+    loc = jnp.where(own, gids - offset, 0)
+    mid = jnp.take(low2, loc, axis=0)                    # [B, E, d_low]
+    return jnp.where(own, ops.dist_l(mid, qpca), 0.0)
+
+
+def _global_promote(mi, dm, n_keep: int):
+    """Sort the merged PQ-space list by the assembled mid-stage dists
+    (stable — merge-order ties preserved, matching the host oracle's
+    stable argsort) and trim to ``n_keep = rerank_mult * ef0``, the
+    width the global Dist.H pass then pays."""
+    dm = jnp.where(mi >= 0, dm, INF)
+    pd, pi = _rank_sort_with_payload(dm, jnp.where(mi >= 0, mi, -1))
+    return pd[:, :n_keep], pi[:, :n_keep]
+
+
 def _global_rerank(md, mi, dh, ef0: int):
     """Sort the merged list by the assembled high-dim dists (stable on
     ties — same ``_rank_sort_with_payload`` as the single-shard deferred
@@ -275,44 +312,57 @@ def _global_rerank(md, mi, dh, ef0: int):
     return rd[:, :ef0], ri[:, :ef0]
 
 
-def _normalize(sdb: ShardedDB, ef0, k_schedule, deferred, rerank_mult):
+def _normalize(sdb: ShardedDB, ef0, k_schedule, deferred, rerank_mult,
+               promote_mult=None):
     """Default + no-op normalization, mirroring ``search_batched`` so a
     caller varying a dead knob never recompiles a bit-identical
     program."""
     cfg = sdb.cfg
     ef0 = int(ef0 or cfg.ef0)
-    ks = tuple(k_schedule or cfg.k_schedule)
     if deferred is None:
         deferred = cfg.deferred_rerank
+    ks = tuple(k_schedule
+               or cfg.k_schedule_for(sdb.filter_kind, bool(deferred)))
     if rerank_mult is None:
         rerank_mult = cfg.rerank_mult
+    if promote_mult is None:
+        promote_mult = cfg.promote_mult
     if sdb.filter_kind == "none":
         deferred = False
     if not deferred:
         rerank_mult = 1
-    return ef0, ks, bool(deferred), int(rerank_mult)
+    if not (deferred and sdb.filter_kind == "cascade"):
+        promote_mult = 1          # dead knob outside the cascade
+    else:
+        # the promote pool is never narrower than the re-rank pool
+        promote_mult = max(int(promote_mult), int(rerank_mult))
+    return ef0, ks, bool(deferred), int(rerank_mult), int(promote_mult)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "ef0", "k_schedule",
-                                             "deferred", "rerank_mult"))
+                                             "deferred", "rerank_mult",
+                                             "promote_mult"))
 def _mesh_search_jit(mesh, sdb, queries, qprep, live, ef0, k_schedule,
-                     deferred, rerank_mult):
+                     deferred, rerank_mult, promote_mult):
     b_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     m_ax = "model"
     has_del = sdb.deleted is not None
+    cascade = deferred and sdb.filter_kind == "cascade"
 
     def local_search(adj, packed_low, low, high, entry, offset, count,
-                     dele, lv, q, qp):
+                     dele, lo2, lv, q, qp):
         # leaves arrive with the leading shard dim = 1: squeeze it
         db = PackedDB(
             layers=[PackedLayer(adj=a[0], packed_low=p[0])
                     for a, p in zip(adj, packed_low)],
             low=low[0], high=high[0], entry=entry[0], cfg=sdb.cfg,
             deleted=dele[0] if has_del else None,
+            low2=lo2[0] if cascade else None,
             filter_kind=sdb.filter_kind)
         fd, gi = _shard_lists(db, offset[0], q, qp, ef0=ef0,
                               ks=k_schedule, deferred=deferred,
-                              rerank_mult=rerank_mult)
+                              rerank_mult=rerank_mult,
+                              promote_mult=promote_mult)
         # degraded mode: a dead shard's lists are masked to (INF, -1)
         # — pure DATA, shapes unchanged, so kill/recover cycles reuse
         # the compiled program (zero recompiles)
@@ -322,6 +372,15 @@ def _mesh_search_jit(mesh, sdb, queries, qprep, live, ef0, k_schedule,
         gi_all = jax.lax.all_gather(gi, m_ax, axis=0)
         E = fd.shape[1]
         md, mi = _merge_lists(fd_all, gi_all, E)
+        if cascade:
+            # the GLOBAL promote trim: psum-assembled PCA mid-stage
+            # scores over the merged PQ-space list
+            qpca = qp[:, low.shape[-1] * 256:]
+            dm = jax.lax.psum(
+                jnp.where(lv[0],
+                          _owned_dist_mid(lo2[0], offset[0], count[0],
+                                          mi, qpca), 0.0), m_ax)
+            md, mi = _global_promote(mi, dm, ef0 * rerank_mult)
         if deferred:
             dh = jax.lax.psum(
                 jnp.where(lv[0],
@@ -339,6 +398,7 @@ def _mesh_search_jit(mesh, sdb, queries, qprep, live, ef0, k_schedule,
         P(m_ax, None, None), P(m_ax, None, None),
         P(m_ax), P(m_ax), P(m_ax),
         P(m_ax, None) if has_del else P(),
+        P(m_ax, None, None) if cascade else P(),
         P(m_ax),                              # live
         q_spec, qp_spec,
     )
@@ -346,30 +406,44 @@ def _mesh_search_jit(mesh, sdb, queries, qprep, live, ef0, k_schedule,
     fn = shard_map(local_search, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_rep=False)
     dele = sdb.deleted if has_del else jnp.zeros((), jnp.int32)
+    lo2 = sdb.low2 if cascade else jnp.zeros((), jnp.float32)
     return fn(sdb.adj, sdb.packed_low, sdb.low, sdb.high, sdb.entries,
-              sdb.offsets, sdb.counts, dele, live, queries, qprep)
+              sdb.offsets, sdb.counts, dele, lo2, live, queries, qprep)
 
 
 @functools.partial(jax.jit, static_argnames=("ef0", "k_schedule",
-                                             "deferred", "rerank_mult"))
+                                             "deferred", "rerank_mult",
+                                             "promote_mult"))
 def _host_search_jit(sdb, queries, qprep, live, ef0, k_schedule,
-                     deferred, rerank_mult):
+                     deferred, rerank_mult, promote_mult):
     """The meshless twin of ``_mesh_search_jit``: an unrolled loop over
-    shards + the same merge and global re-rank. all_gather == stack,
-    psum == sum of the per-shard owned contributions (exactly one
-    non-zero term per slot, so the float result is bit-equal).
-    ``live`` [P] bool masks dead shards to (INF, -1) — data, not shape,
-    so degraded mode never recompiles."""
+    shards + the same merge, global promote (cascade), and global
+    re-rank. all_gather == stack, psum == sum of the per-shard owned
+    contributions (exactly one non-zero term per slot, so the float
+    result is bit-equal). ``live`` [P] bool masks dead shards to
+    (INF, -1) — data, not shape, so degraded mode never recompiles."""
     Pn = sdb.n_shards
+    cascade = deferred and sdb.filter_kind == "cascade"
     fds, gis = [], []
     for s in range(Pn):
         fd, gi = _shard_lists(sdb.shard_db(s), sdb.offsets[s], queries,
                               qprep, ef0=ef0, ks=k_schedule,
-                              deferred=deferred, rerank_mult=rerank_mult)
+                              deferred=deferred, rerank_mult=rerank_mult,
+                              promote_mult=promote_mult)
         fds.append(jnp.where(live[s], fd, INF))
         gis.append(jnp.where(live[s], gi, -1))
     E = fds[0].shape[1]
     md, mi = _merge_lists(jnp.stack(fds), jnp.stack(gis), E)
+    if cascade:
+        qpca = qprep[:, sdb.low.shape[-1] * 256:]
+        dm = jnp.zeros_like(md)
+        for s in range(Pn):
+            dm = dm + jnp.where(live[s],
+                                _owned_dist_mid(sdb.low2[s],
+                                                sdb.offsets[s],
+                                                sdb.counts[s], mi, qpca),
+                                0.0)
+        md, mi = _global_promote(mi, dm, ef0 * rerank_mult)
     if deferred:
         dh = jnp.zeros_like(md)
         for s in range(Pn):
@@ -445,6 +519,7 @@ def distributed_search(mesh: Mesh, sdb: ShardedDB, queries, q_low=None,
                        *, filt=None, ef0: int = 0, k_schedule=None,
                        deferred: Optional[bool] = None,
                        rerank_mult: Optional[int] = None,
+                       promote_mult: Optional[int] = None,
                        live=None, return_stats: bool = False):
     """Sharded batched search over ``mesh``. queries: [B, D] global;
     ``q_low`` is the active filter's per-query prep (or pass ``filt``
@@ -455,11 +530,12 @@ def distributed_search(mesh: Mesh, sdb: ShardedDB, queries, q_low=None,
     from the surviving shards only; with ``return_stats`` a third
     element carries the ``coverage`` accounting."""
     qprep = _prepare_qprep(sdb, queries, q_low, filt)
-    ef0, ks, deferred, rm = _normalize(sdb, ef0, k_schedule, deferred,
-                                       rerank_mult)
+    ef0, ks, deferred, rm, pm = _normalize(sdb, ef0, k_schedule,
+                                           deferred, rerank_mult,
+                                           promote_mult)
     fd, fi = _mesh_search_jit(mesh, sdb, queries, qprep,
                               _norm_live(sdb, live), ef0, ks,
-                              deferred, rm)
+                              deferred, rm, pm)
     if return_stats:
         return fd, fi, coverage_stats(sdb, live)
     return fd, fi
@@ -469,6 +545,7 @@ def shard_search_host(sdb: ShardedDB, queries, q_low=None, *, filt=None,
                       ef0: int = 0, k_schedule=None,
                       deferred: Optional[bool] = None,
                       rerank_mult: Optional[int] = None,
+                      promote_mult: Optional[int] = None,
                       live=None, return_stats: bool = False):
     """``distributed_search`` without a mesh: the same per-shard
     programs and the same merge, on however many devices exist (one is
@@ -477,11 +554,12 @@ def shard_search_host(sdb: ShardedDB, queries, q_low=None, *, filt=None,
     default when no mesh is configured. ``live`` / ``return_stats``:
     see ``distributed_search``."""
     qprep = _prepare_qprep(sdb, queries, q_low, filt)
-    ef0, ks, deferred, rm = _normalize(sdb, ef0, k_schedule, deferred,
-                                       rerank_mult)
+    ef0, ks, deferred, rm, pm = _normalize(sdb, ef0, k_schedule,
+                                           deferred, rerank_mult,
+                                           promote_mult)
     fd, fi = _host_search_jit(sdb, queries, qprep,
                               _norm_live(sdb, live), ef0, ks,
-                              deferred, rm)
+                              deferred, rm, pm)
     if return_stats:
         return fd, fi, coverage_stats(sdb, live)
     return fd, fi
@@ -504,17 +582,20 @@ def search_cache_sizes() -> Tuple[int, int]:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("ef0", "k_schedule",
-                                             "deferred", "rerank_mult"))
+                                             "deferred", "rerank_mult",
+                                             "promote_mult"))
 def _shard_probe_jit(sdb, s, queries, qprep, ef0, k_schedule, deferred,
-                     rerank_mult):
+                     rerank_mult, promote_mult):
     return _shard_lists(sdb.shard_db(s), sdb.offsets[s], queries, qprep,
                         ef0=ef0, ks=k_schedule, deferred=deferred,
-                        rerank_mult=rerank_mult)
+                        rerank_mult=rerank_mult,
+                        promote_mult=promote_mult)
 
 
 def probe_shard(sdb: ShardedDB, s: int, queries, qprep, *, ef0: int = 0,
                 k_schedule=None, deferred: Optional[bool] = None,
-                rerank_mult: Optional[int] = None, span=None
+                rerank_mult: Optional[int] = None,
+                promote_mult: Optional[int] = None, span=None
                 ) -> Tuple[np.ndarray, np.ndarray, float]:
     """ONE shard's pre-merge candidate lists, timed and
     fault-injectable: the per-shard half of the resilient serving path
@@ -525,8 +606,9 @@ def probe_shard(sdb: ShardedDB, s: int, queries, qprep, *, ef0: int = 0,
     trace span, optional) receives a ``probe`` event with the measured
     wall time."""
     from repro.distributed import faults as _faults
-    ef0, ks, deferred, rm = _normalize(sdb, ef0, k_schedule, deferred,
-                                       rerank_mult)
+    ef0, ks, deferred, rm, pm = _normalize(sdb, ef0, k_schedule,
+                                           deferred, rerank_mult,
+                                           promote_mult)
     plan = _faults.active()
     # the wall clock starts BEFORE the fault hook: an injected stall is
     # latency the coordinator actually observed, so it must feed the
@@ -535,7 +617,7 @@ def probe_shard(sdb: ShardedDB, s: int, queries, qprep, *, ef0: int = 0,
     if plan is not None:
         plan.shard_query_hook(s)
     fd, gi = _shard_probe_jit(sdb, jnp.int32(s), queries, qprep, ef0,
-                              ks, deferred, rm)
+                              ks, deferred, rm, pm)
     gi.block_until_ready()
     wall = time.monotonic() - t0
     fd, gi = np.asarray(fd), np.asarray(gi)
@@ -563,18 +645,28 @@ def check_shard_result(fd: np.ndarray, gi: np.ndarray, offset: int,
     return bool(ok.all())
 
 
-@functools.partial(jax.jit, static_argnames=("ef0", "deferred"))
+@functools.partial(jax.jit, static_argnames=("ef0", "deferred",
+                                             "cascade", "rerank_mult"))
 def _merge_surviving_jit(fd_all, gi_all, live, high, offsets, counts,
-                         queries, ef0, deferred):
+                         low2, queries, qpca, ef0, deferred, cascade,
+                         rerank_mult):
     """Merge the [P, B, E] per-shard stacks from ``probe_shard`` under
-    an answered-mask: the same masking, merge, and deferred global
-    re-rank as ``_host_search_jit`` — bit-equal to searching the
-    survivor subset."""
+    an answered-mask: the same masking, merge, global promote
+    (cascade), and deferred global re-rank as ``_host_search_jit`` —
+    bit-equal to searching the survivor subset."""
     Pn = fd_all.shape[0]
     fd_all = jnp.where(live[:, None, None], fd_all, INF)
     gi_all = jnp.where(live[:, None, None], gi_all, -1)
     E = fd_all.shape[2]
     md, mi = _merge_lists(fd_all, gi_all, E)
+    if cascade:
+        dm = jnp.zeros_like(md)
+        for s in range(Pn):
+            dm = dm + jnp.where(live[s],
+                                _owned_dist_mid(low2[s], offsets[s],
+                                                counts[s], mi, qpca),
+                                0.0)
+        md, mi = _global_promote(mi, dm, ef0 * rerank_mult)
     if deferred:
         dh = jnp.zeros_like(md)
         for s in range(Pn):
@@ -587,21 +679,30 @@ def _merge_surviving_jit(fd_all, gi_all, live, high, offsets, counts,
 
 
 def merge_surviving(sdb: ShardedDB, fd_all, gi_all, live, queries, *,
-                    ef0: int = 0, k_schedule=None,
+                    qprep=None, ef0: int = 0, k_schedule=None,
                     deferred: Optional[bool] = None,
-                    rerank_mult: Optional[int] = None):
+                    rerank_mult: Optional[int] = None,
+                    promote_mult: Optional[int] = None):
     """Complete a request from the shards that answered: merge the
     stacked per-shard lists (dead/unanswered rows may hold anything —
-    they are masked to (INF, -1) first) and run the deferred global
-    re-rank over the survivors. Returns ([B, ef0] dists, [B, ef0]
-    GLOBAL ids)."""
-    ef0, ks, deferred, rm = _normalize(sdb, ef0, k_schedule, deferred,
-                                       rerank_mult)
+    they are masked to (INF, -1) first) and run the global promote
+    (cascade; needs ``qprep``, the same per-query prep handed to
+    ``probe_shard``) plus the deferred global re-rank over the
+    survivors. Returns ([B, ef0] dists, [B, ef0] GLOBAL ids)."""
+    ef0, ks, deferred, rm, pm = _normalize(sdb, ef0, k_schedule,
+                                           deferred, rerank_mult,
+                                           promote_mult)
+    cascade = deferred and sdb.filter_kind == "cascade"
+    if cascade and qprep is None:
+        raise ValueError("the deferred cascade merge needs qprep")
+    low2 = sdb.low2 if cascade else jnp.zeros((), jnp.float32)
+    qpca = (jnp.asarray(qprep)[:, sdb.low.shape[-1] * 256:] if cascade
+            else jnp.zeros((queries.shape[0], 0), jnp.float32))
     return _merge_surviving_jit(jnp.asarray(np.asarray(fd_all)),
                                 jnp.asarray(np.asarray(gi_all)),
                                 _norm_live(sdb, live), sdb.high,
-                                sdb.offsets, sdb.counts, queries, ef0,
-                                deferred)
+                                sdb.offsets, sdb.counts, low2, queries,
+                                qpca, ef0, deferred, cascade, rm)
 
 
 def resilient_cache_sizes() -> Tuple[int, int]:

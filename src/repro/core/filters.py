@@ -40,7 +40,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import PHNSWConfig
 from repro.core.pca import PCA, fit_pca
-from repro.core.pq import (PQCodebook, adc_table_batch, encode_pq,
+from repro.core.pq import (PQCodebook, adc_table_batch,
+                           adc_tables_from_centroids, encode_pq,
                            train_pq)
 from repro.kernels import ops
 
@@ -164,10 +165,7 @@ class PQFilter(FilterSpec):
         # codebook uploaded once (same caching story as PCA.transform_jnp)
         if self._cents_jnp is None:
             self._cents_jnp = jnp.asarray(self.cb.centroids)
-        B = q.shape[0]
-        qs = q.astype(jnp.float32).reshape(B, self.cb.n_sub, 1,
-                                           self.cb.dsub)
-        return jnp.sum((qs - self._cents_jnp[None]) ** 2, axis=-1)
+        return adc_tables_from_centroids(self._cents_jnp, q, jnp)
 
     def dists(self, qprep_row, payload):
         S = qprep_row.shape[0]
@@ -176,6 +174,97 @@ class PQFilter(FilterSpec):
 
     def expand(self, nb_payload, qprep, valid, th, k):
         return ops.pq_adc_expand(nb_payload, qprep, valid, th, k)
+
+
+@dataclass
+class CascadeFilter(FilterSpec):
+    """Multi-stage cascade (AQR-HNSW-style, see PAPERS.md): traverse on
+    cheap PQ codes, promote the surviving ``promote_mult * ef``
+    candidates through a PCA mid-stage score once per layer-0 exit (not
+    per step), and defer Dist.H to ONE final batched pass of
+    ``rerank_mult * k`` survivors — PQ-class bytes/vec on the hot
+    stream at PCA-class recall.
+
+    Two build-time payloads:
+
+      * **inline** (``encode``): uint8 PQ codes — the layout-(3)
+        per-neighbor stream the traversal touches every step;
+      * **side-car** (``encode_mid``): f32 PCA rows, stored OFF the hot
+        stream (``PackedDB.low2``) and gathered once per query at the
+        promote stage.
+
+    Per-query prep is ONE flat f32 row ``[n_sub*256 + d_low]`` — the
+    ADC tables flattened, then the PCA-projected query. The engine
+    slices it statically on ``n_sub`` (= the inline payload width); a
+    single array keeps the slot-state scatter and the shard_map specs
+    rank-generic.
+    """
+    cb: PQCodebook
+    pca: PCA
+    _cents_jnp: Optional[jnp.ndarray] = field(
+        default=None, init=False, repr=False, compare=False)
+
+    kind = "cascade"
+
+    # --- inline payload: PQ codes (what the traversal streams) --------------
+    def encode(self, x):
+        return encode_pq(self.cb, x)
+
+    @property
+    def payload_dtype(self):
+        return np.dtype(np.uint8)
+
+    @property
+    def bytes_per_vec(self):
+        return self.cb.bytes_per_vec       # inline codes only
+
+    @property
+    def cost_dims(self):
+        return self.cb.n_sub               # in-loop ADC depth
+
+    # --- side-car payload: PCA rows (the promote stage) ---------------------
+    def encode_mid(self, x):
+        return self.pca.transform(x).astype(np.float32)
+
+    @property
+    def mid_bytes_per_vec(self):
+        return self.pca.d_low * 4          # f32 side-car rows
+
+    @property
+    def mid_cost_dims(self):
+        return self.pca.d_low
+
+    # --- per-query preparation: flat concat (luts | projected query) --------
+    def prepare(self, q):
+        luts = adc_table_batch(self.cb, q)
+        qp = self.pca.transform(q).astype(np.float32)
+        return np.concatenate([luts.reshape(len(q), -1), qp], axis=1)
+
+    def prepare_jnp(self, q):
+        if self._cents_jnp is None:
+            self._cents_jnp = jnp.asarray(self.cb.centroids)
+        luts = adc_tables_from_centroids(self._cents_jnp, q, jnp)
+        qp = self.pca.transform_jnp(q).astype(jnp.float32)
+        return jnp.concatenate([luts.reshape(q.shape[0], -1), qp],
+                               axis=1)
+
+    # --- host oracles --------------------------------------------------------
+    def dists(self, qprep_row, payload):
+        S = self.cb.n_sub
+        lut = qprep_row[:S * 256].reshape(S, 256)
+        return lut[np.arange(S)[None, :],
+                   payload.astype(np.int64)].sum(1)
+
+    def mid_dists(self, qprep_row, payload_mid):
+        """Promote-stage distances: PCA rows vs the projected query."""
+        qp = qprep_row[self.cb.n_sub * 256:]
+        d = payload_mid.astype(np.float32) - qp
+        return np.einsum("ij,ij->i", d, d)
+
+    def expand(self, nb_payload, qprep, valid, th, k):
+        S = self.cb.n_sub
+        lut = qprep[:, :S * 256].reshape(qprep.shape[0], S, 256)
+        return ops.pq_adc_expand(nb_payload, lut, valid, th, k)
 
 
 @dataclass
@@ -219,24 +308,40 @@ class IdentityFilter(FilterSpec):
 
 
 def make_filter(cfg: PHNSWConfig, x: np.ndarray, *,
-                pca: Optional[PCA] = None, seed: int = 0) -> FilterSpec:
+                pca: Optional[PCA] = None, seed: int = 0,
+                levels: Optional[np.ndarray] = None) -> FilterSpec:
     """Fit the filter selected by ``cfg.filter_kind`` on the dataset.
     A pre-fit ``pca`` is adopted (avoids double fits when callers
-    already hold one)."""
-    if cfg.filter_kind == "pca":
-        return PCAFilter(pca or fit_pca(x, cfg.d_low),
-                         low_dtype=cfg.low_dtype)
-    if cfg.filter_kind == "pq":
+    already hold one). ``levels`` (optional, [n] per-point HNSW level
+    assignment) trains PQ codebooks density-aware: points are weighted
+    by graph-layer occupancy (``level + 1`` — the number of layers the
+    node appears on, hence how often the traversal streams its codes)."""
+
+    def _train_cb():
         # seeded RANDOM subsample, not a prefix: the sharded build
         # shares one codebook across shards partitioned contiguously
         # from x, so a prefix sample would train on the first shard(s)
         # only and skew cross-shard ADC comparability
+        weights = None if levels is None else \
+            np.asarray(levels, np.float64) + 1.0
         n_train = min(len(x), 20_000)
-        xt = x if n_train == len(x) else \
-            x[np.random.default_rng(seed).permutation(len(x))[:n_train]]
-        cb = train_pq(xt, cfg.pq_n_sub,
-                      iters=cfg.pq_train_iters, seed=seed)
-        return PQFilter(cb)
+        if n_train == len(x):
+            xt, wt = x, weights
+        else:
+            perm = np.random.default_rng(seed).permutation(
+                len(x))[:n_train]
+            xt = x[perm]
+            wt = None if weights is None else weights[perm]
+        return train_pq(xt, cfg.pq_n_sub,
+                        iters=cfg.pq_train_iters, seed=seed, weights=wt)
+
+    if cfg.filter_kind == "pca":
+        return PCAFilter(pca or fit_pca(x, cfg.d_low),
+                         low_dtype=cfg.low_dtype)
+    if cfg.filter_kind == "pq":
+        return PQFilter(_train_cb())
+    if cfg.filter_kind == "cascade":
+        return CascadeFilter(_train_cb(), pca or fit_pca(x, cfg.d_low))
     if cfg.filter_kind == "none":
         return IdentityFilter(dim=x.shape[1])
     raise ValueError(f"unknown filter kind {cfg.filter_kind!r}")

@@ -34,17 +34,50 @@ class PQCodebook:
         return self.n_sub            # one uint8 code per subspace
 
 
+def _init_centroids(xs: np.ndarray, rng: np.random.Generator,
+                    p: np.ndarray = None) -> np.ndarray:
+    """256 initial centroids from ``xs`` (optionally ``p``-weighted).
+    When the training set (or the weighted support) is smaller than the
+    code count, sample WITH replacement and jitter the duplicates apart
+    — ``replace=False`` raises for n < 256, which the small sharded
+    build path hits."""
+    n = len(xs)
+    support = n if p is None else int(np.count_nonzero(p))
+    if support >= 256:
+        return xs[rng.choice(n, 256, replace=False, p=p)].copy()
+    idx = rng.choice(n, 256, replace=True, p=p)
+    c = xs[idx].copy()
+    scale = float(xs.std(0).mean()) if n > 1 else 1.0
+    c += rng.normal(0.0, max(scale, 1e-6) * 1e-3,
+                    c.shape).astype(np.float32)
+    return c
+
+
 def train_pq(x: np.ndarray, n_sub: int, *, iters: int = 8,
-             seed: int = 0) -> PQCodebook:
-    """Lloyd k-means (k=256) per subspace."""
+             seed: int = 0, weights: np.ndarray = None) -> PQCodebook:
+    """Lloyd k-means (k=256) per subspace.
+
+    ``weights`` (optional, [n] non-negative): per-point training
+    weights — density-aware codebooks weight points by graph-layer
+    occupancy so regions the traversal actually visits get more code
+    resolution. Weighted init sampling + weighted cluster means;
+    assignment stays nearest-centroid.
+    """
     n, d = x.shape
     assert d % n_sub == 0, (d, n_sub)
     dsub = d // n_sub
     rng = np.random.default_rng(seed)
+    p = None
+    w = None
+    if weights is not None:
+        w = np.asarray(weights, np.float64)
+        assert w.shape == (n,) and (w >= 0).all() and w.sum() > 0, \
+            "weights must be [n] non-negative with positive sum"
+        p = w / w.sum()
     cents = np.empty((n_sub, 256, dsub), np.float32)
     for m in range(n_sub):
         xs = x[:, m * dsub:(m + 1) * dsub].astype(np.float32)
-        c = xs[rng.choice(n, 256, replace=False)].copy()
+        c = _init_centroids(xs, rng, p)
         for _ in range(iters):
             d2 = ((xs[:, None, :] - c[None]) ** 2).sum(-1) \
                 if n <= 20000 else None
@@ -57,10 +90,26 @@ def train_pq(x: np.ndarray, n_sub: int, *, iters: int = 8,
                     assign[i:i + 8192] = d2b.argmin(1)
             else:
                 assign = d2.argmin(1)
+            empty = []
             for k in range(256):
                 sel = assign == k
-                if sel.any():
+                if not sel.any():
+                    empty.append(k)
+                elif w is None:
                     c[k] = xs[sel].mean(0)
+                else:
+                    ws = w[sel]
+                    tot = ws.sum()
+                    c[k] = ((ws[:, None] * xs[sel]).sum(0) / tot
+                            if tot > 0 else xs[sel].mean(0))
+            if empty:
+                # reseed empty clusters to the farthest-assigned points
+                # — a stale initial centroid would otherwise survive as
+                # a duplicate dead code (recall loss at scale)
+                d_assigned = ((xs - c[assign]) ** 2).sum(-1)
+                far = np.argsort(-d_assigned)
+                for k, i in zip(empty, far):
+                    c[k] = xs[i]
         cents[m] = c
     return PQCodebook(centroids=cents)
 
@@ -89,13 +138,22 @@ def adc_table(cb: PQCodebook, q: np.ndarray) -> np.ndarray:
     return tabs
 
 
+def adc_tables_from_centroids(centroids, q, xp):
+    """Backend-generic batched ADC tables: centroids [M, 256, dsub],
+    q [B, D] -> [B, M, 256] f32. ONE implementation shared by the host
+    oracle (``adc_table_batch``, xp=numpy) and the device prep
+    (``PQFilter.prepare_jnp``, xp=jax.numpy) so the two cannot drift."""
+    B = q.shape[0]
+    M, _, dsub = centroids.shape
+    qs = q.astype(xp.float32).reshape(B, M, 1, dsub)
+    return ((qs - centroids[None]) ** 2).sum(-1)
+
+
 def adc_table_batch(cb: PQCodebook, q: np.ndarray) -> np.ndarray:
     """Batched ADC tables: q [B, D] -> [B, n_sub, 256] f32 — the
     per-query preparation of the PQ filter (the PQ analogue of the PCA
     projection)."""
-    B, d = q.shape
-    qs = q.astype(np.float32).reshape(B, cb.n_sub, 1, cb.dsub)
-    return ((qs - cb.centroids[None]) ** 2).sum(-1)
+    return adc_tables_from_centroids(cb.centroids, q, np)
 
 
 def adc_distances(tabs: np.ndarray, codes: np.ndarray) -> np.ndarray:

@@ -75,15 +75,23 @@ class PackedDB:
 
     ``filter_kind`` is METADATA (static): which filter stage the
     payload in ``low`` / ``packed_low`` belongs to — "pca" (dense
-    low-dim rows), "pq" (uint8 ADC codes) or "none" (zero-width bypass
-    payload). Each kind compiles a different expand pipeline, so it is
-    structural by design (core/filters.py owns the payload contract)."""
+    low-dim rows), "pq" (uint8 ADC codes), "cascade" (uint8 ADC codes
+    inline + a PCA side-car) or "none" (zero-width bypass payload).
+    Each kind compiles a different expand pipeline, so it is structural
+    by design (core/filters.py owns the payload contract).
+
+    ``low2`` is the cascade's SIDE-CAR payload: f32 PCA rows
+    ``[N, d_low]``, stored OFF the layout-(3) hot stream (never inlined
+    per neighbor) and gathered once per query at the promote stage.
+    ``None`` (every non-cascade kind) is structurally static, like
+    ``deleted``."""
     layers: List[PackedLayer]
     low: jax.Array          # [N, P] filter payload rows (P may be 0)
     high: jax.Array         # [N, D]
     entry: int
     cfg: PHNSWConfig
     deleted: Optional[jax.Array] = None   # [ceil(N/32)] int32 or None
+    low2: Optional[jax.Array] = None      # [N, dl] promote side-car
     filter_kind: str = "pca"
 
     @property
@@ -102,6 +110,15 @@ class PackedDB:
         return extra + int(self.high.size) * 4
 
     @property
+    def bytes_sidecar(self) -> int:
+        """Stored bytes of the cascade's promote side-car (0 without
+        one) — NOT part of the layout-(3) inline stream the traversal
+        bursts; reported separately by the byte accounting."""
+        if self.low2 is None:
+            return 0
+        return int(self.low2.size) * jnp.dtype(self.low2.dtype).itemsize
+
+    @property
     def bytes_layout4(self) -> int:
         idx = sum(int((l.adj >= 0).sum()) * 4 for l in self.layers)
         low_bytes = jnp.dtype(self.low.dtype).itemsize
@@ -113,7 +130,8 @@ class PackedDB:
 jax.tree_util.register_dataclass(
     PackedLayer, data_fields=["adj", "packed_low"], meta_fields=[])
 jax.tree_util.register_dataclass(
-    PackedDB, data_fields=["layers", "low", "high", "entry", "deleted"],
+    PackedDB, data_fields=["layers", "low", "high", "entry", "deleted",
+                           "low2"],
     meta_fields=["cfg", "filter_kind"])
 
 
@@ -169,9 +187,13 @@ def build_packed(g: HNSWGraph, x_low: Optional[np.ndarray] = None,
         packed[adj < 0] = 0
         layers.append(PackedLayer(adj=jnp.asarray(adj),
                                   packed_low=jnp.asarray(packed, dt)))
+    low2 = None
+    if filt is not None and hasattr(filt, "encode_mid"):
+        # the cascade's promote side-car: PCA rows off the hot stream
+        low2 = jnp.asarray(filt.encode_mid(g.x))
     return PackedDB(layers=layers, low=jnp.asarray(x_low, dt),
                     high=jnp.asarray(g.x), entry=g.entry, cfg=g.cfg,
-                    filter_kind=fkind)
+                    low2=low2, filter_kind=fkind)
 
 
 def _rank_sort_with_payload(d, p):
@@ -191,6 +213,20 @@ def _rank_sort_with_payload(d, p):
     sd = jnp.sum(jnp.where(hot, d[:, :, None], 0.0), axis=1)
     sp = jnp.sum(jnp.where(hot, p[:, :, None], 0), axis=1).astype(p.dtype)
     return sd, sp
+
+
+def _cascade_lut(qprep, S: int):
+    """ADC tables out of the cascade's flat per-query prep:
+    [B, S*256 + d_low] -> [B, S, 256]. ``S`` is static — the inline
+    payload width (``db.low.shape[-1]``), so the slice never depends on
+    traced values."""
+    return qprep[:, :S * 256].reshape(qprep.shape[0], S, 256)
+
+
+def _cascade_qpca(qprep, S: int):
+    """The PCA-projected query out of the cascade's flat prep:
+    [B, S*256 + d_low] -> [B, d_low] (the promote-stage operand)."""
+    return qprep[:, S * 256:]
 
 
 def _layer_init(db: PackedDB, start_d, start_i, *, ef: int, k: int,
@@ -328,7 +364,11 @@ def _layer_body(db: PackedDB, layer: int, q_high, qprep, *, ef: int,
             if fkind == "pca":
                 kv, ki = ops.fused_expand(nb_pay, qprep, nb_mask, th, kk)
             else:
-                kv, ki = ops.pq_adc_expand(nb_pay, qprep, nb_mask, th, kk)
+                # pq and cascade both traverse on ADC codes; the
+                # cascade's luts are sliced out of its flat prep row
+                lut = _cascade_lut(qprep, nb_pay.shape[-1]) \
+                    if fkind == "cascade" else qprep
+                kv, ki = ops.pq_adc_expand(nb_pay, lut, nb_mask, th, kk)
             cand = jnp.take_along_axis(nb_i, ki, axis=1)    # [B, W*k]
             valid = (kv < VALID_MAX) & (cand >= 0)
         # -- visited check: one bit gather per candidate --
@@ -525,12 +565,14 @@ def probe_neighborhoods(db, queries, qprep, ef, k,
 
 
 @functools.partial(jax.jit, static_argnames=("ef0", "k_schedule",
-                                             "deferred", "rerank_mult"))
+                                             "deferred", "rerank_mult",
+                                             "promote_mult"))
 def _search_batched_jit(db, queries, qprep, ef0, k_schedule, deferred,
-                        rerank_mult):
+                        rerank_mult, promote_mult):
     return _search_batched_impl(db, queries, qprep, ef0=ef0,
                                 k_schedule=k_schedule, deferred=deferred,
-                                rerank_mult=rerank_mult)
+                                rerank_mult=rerank_mult,
+                                promote_mult=promote_mult)
 
 
 def search_batched(db: PackedDB, queries, qprep=None, *, pca=None,
@@ -540,7 +582,8 @@ def search_batched(db: PackedDB, queries, qprep=None, *, pca=None,
                    entry: Optional[int] = None,
                    return_stats: bool = False,
                    deferred: Optional[bool] = None,
-                   rerank_mult: Optional[int] = None):
+                   rerank_mult: Optional[int] = None,
+                   promote_mult: Optional[int] = None):
     """Full multi-layer pHNSW search for a batch (jit'd).
     queries: [B, D] (device). Returns (dists [B, ef0], idx [B, ef0]);
     with ``return_stats=True`` also a dict with per-query telemetry:
@@ -559,7 +602,11 @@ def search_batched(db: PackedDB, queries, qprep=None, *, pca=None,
     from ``db.cfg.deferred_rerank`` / ``db.cfg.rerank_mult``): deferred
     traverses on filter distances only and re-ranks the final
     ``rerank_mult * ef0`` candidates in high dim with ONE batched
-    Dist.H call per query.
+    Dist.H call per query. ``promote_mult`` (cascade + deferred only;
+    default ``db.cfg.promote_mult``) widens the layer-0 traversal to
+    ``promote_mult * ef0`` PQ-space candidates that the PCA promote
+    stage trims back to ``rerank_mult * ef0`` before that single
+    Dist.H pass.
 
     ``entry`` overrides the descent entry point (``db.entry`` by
     default). Both the entry and the tombstone bitmap ``db.deleted`` are
@@ -585,17 +632,27 @@ def search_batched(db: PackedDB, queries, qprep=None, *, pca=None,
         deferred = db.cfg.deferred_rerank
     if rerank_mult is None:
         rerank_mult = db.cfg.rerank_mult
+    if promote_mult is None:
+        promote_mult = db.cfg.promote_mult
     # normalize the no-op combinations BEFORE they key the jit cache:
-    # deferred is defined as a no-op for the identity filter, and
-    # rerank_mult only exists inside deferred mode — without this a
-    # caller varying either knob recompiles a bit-identical program
+    # deferred is defined as a no-op for the identity filter,
+    # rerank_mult only exists inside deferred mode, and promote_mult
+    # only exists for the deferred cascade — without this a caller
+    # varying any knob recompiles a bit-identical program
     if db.filter_kind == "none":
         deferred = False
     if not deferred:
         rerank_mult = 1
+    if not (deferred and db.filter_kind == "cascade"):
+        promote_mult = 1
+    else:
+        # the promote pool can never be narrower than the rerank pool
+        promote_mult = max(int(promote_mult), int(rerank_mult))
     fd, fi, steps, dhe = _search_batched_jit(
         db, queries, qprep, ef0 or db.cfg.ef0,
-        k_schedule or db.cfg.k_schedule, bool(deferred), int(rerank_mult))
+        k_schedule or db.cfg.k_schedule_for(db.filter_kind,
+                                            bool(deferred)),
+        bool(deferred), int(rerank_mult), int(promote_mult))
     if return_stats:
         # coverage/degraded ride along so the stats contract is uniform
         # with the sharded degraded-mode path (core/distributed.py):
@@ -611,6 +668,7 @@ def _search_batched_impl(db: PackedDB, queries, qprep, *,
                          ef0: Optional[int] = None,
                          k_schedule: Optional[Tuple[int, ...]] = None,
                          deferred: bool = False, rerank_mult: int = 1,
+                         promote_mult: int = 1,
                          final_rerank: bool = True):
     """The traced body (also called directly inside shard_map by
     ``core/distributed.py``). The upper routing layers never filter
@@ -620,22 +678,30 @@ def _search_batched_impl(db: PackedDB, queries, qprep, *,
     Deferred mode runs the whole descent in filter space (the entry is
     scored against the payload, every layer traverses on filter
     distances, layer 0 keeps ``rerank_mult * ef0`` candidates) and
-    finishes with a single batched Dist.H over the final list.
-    ``final_rerank=False`` (deferred only) skips that last step and
-    returns the WIDE ``rerank_mult * ef0`` filter-space list instead —
-    the sharded path merges per-shard lists on filter distances first
-    and re-ranks ONCE globally after the cross-shard merge."""
+    finishes with a single batched Dist.H over the final list. The
+    deferred CASCADE widens layer 0 further to ``promote_mult * ef0``
+    PQ-space candidates and inserts the PCA promote stage (one batched
+    ``dist_l`` over side-car rows, once per query — never per step)
+    that trims them back to ``rerank_mult * ef0`` before the Dist.H
+    pass. ``final_rerank=False`` (deferred only) skips promote AND
+    re-rank and returns the WIDE filter-space list instead — the
+    sharded path merges per-shard lists on filter distances first and
+    runs promote + re-rank ONCE globally after the cross-shard merge."""
     cfg = db.cfg
     B = queries.shape[0]
-    ks = k_schedule or cfg.k_schedule
+    ks = k_schedule or cfg.k_schedule_for(db.filter_kind,
+                                          bool(deferred))
     k_of = lambda l: ks[min(l, len(ks) - 1)]
     ep = jnp.broadcast_to(
         jnp.asarray(db.entry, jnp.int32).reshape(()), (B, 1))
     deferred = deferred and db.filter_kind != "none"
+    cascade = deferred and db.filter_kind == "cascade"
     if deferred:
         pay = jnp.take(db.low, ep, axis=0)              # [B, 1, P]
         if db.filter_kind == "pca":
             ep_d = ops.dist_l(pay, qprep)
+        elif db.filter_kind == "cascade":
+            ep_d = ops.pq_adc(pay, _cascade_lut(qprep, pay.shape[-1]))
         else:
             ep_d = ops.pq_adc(pay, qprep)
         dhe = jnp.zeros((B,), jnp.int32)
@@ -651,13 +717,24 @@ def _search_batched_impl(db: PackedDB, queries, qprep, *,
         steps.append(st)
         dhe = dhe + de
     ef_out = ef0 or cfg.ef0
-    ef_run = ef_out * rerank_mult if deferred else ef_out
+    wide_mult = promote_mult if cascade else rerank_mult
+    ef_run = ef_out * wide_mult if deferred else ef_out
     fd, fi, st, de = search_layer_batched(
         db, 0, queries, qprep, ep_d, ep, ef=ef_run, k=k_of(0),
         filter_deleted=db.deleted is not None, deferred=deferred)
     steps.append(st)
     dhe = dhe + de
     if deferred and final_rerank:
+        if cascade:
+            # promote stage: ONE batched PCA score over side-car rows
+            # trims the PQ-space pool to the Dist.H rerank pool
+            ok = fi >= 0
+            mid = jnp.take(db.low2, jnp.maximum(fi, 0), axis=0)
+            qpca = _cascade_qpca(qprep, db.low.shape[-1])
+            dm = jnp.where(ok, ops.dist_l(mid, qpca), INF)
+            pd, pi = _rank_sort_with_payload(dm, jnp.where(ok, fi, -1))
+            fd, fi = pd[:, :ef_out * rerank_mult], \
+                pi[:, :ef_out * rerank_mult]
         # the deferred high-dim re-rank: ONE batched Dist.H over the
         # final filter-space list, then a single sort back to ef0
         ok = fi >= 0
@@ -728,12 +805,15 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
-def _slot_geometry(db: PackedDB, ef: int) -> Tuple[int, int, int]:
+def _slot_geometry(db: PackedDB, ef: int,
+                   deferred: bool = False) -> Tuple[int, int, int]:
     """(k, W, CAP) of the slotted layer-0 program — derived exactly the
     way ``search_layer_batched`` derives them, so the slotted body is
-    the same compiled shape family as the synchronous one."""
+    the same compiled shape family as the synchronous one.
+    ``deferred`` selects the same effective layer-0 k the synchronous
+    default does (the deferred cascade runs unpruned at M0)."""
     cfg = db.cfg
-    k = cfg.k_schedule[0]
+    k = cfg.k_schedule_for(db.filter_kind, deferred)[0]
     W = cfg.expand_width
     M = db.layers[0].adj.shape[-1]
     kk = W * M if db.filter_kind == "none" else W * k
@@ -741,15 +821,18 @@ def _slot_geometry(db: PackedDB, ef: int) -> Tuple[int, int, int]:
 
 
 def make_slot_state(db: PackedDB, n_slots: int, qprep_example, *,
-                    ef: int, n_shards: Optional[int] = None) -> SlotState:
+                    ef: int, n_shards: Optional[int] = None,
+                    deferred: bool = False) -> SlotState:
     """An all-empty slot bank. ``ef`` is the COMPILED result width (the
     per-slot ``ef_eff`` can only narrow it — size it to the largest k /
     ef any request may ask for). ``qprep_example`` is any [b, ...]
     filter-prep array, used only for its trailing shape/dtype.
     ``n_shards`` (sharded serving) prepends the shard dim to every
-    leaf — the stacked per-shard states the vmapped twins advance."""
-    _, _, CAP = _slot_geometry(db, ef)
-    k = db.cfg.k_schedule[0]
+    leaf — the stacked per-shard states the vmapped twins advance.
+    ``deferred`` must match the mode the slots will step in — it sizes
+    the Cp register (the per-expansion keep width) to the same
+    effective k the synchronous program uses."""
+    k, _, CAP = _slot_geometry(db, ef, deferred)
     N = db.high.shape[-2]
     D = db.high.shape[-1]
     nw = -(-N // 32)
@@ -774,27 +857,47 @@ def make_slot_state(db: PackedDB, n_slots: int, qprep_example, *,
 
 
 def _slot_admit_impl(db: PackedDB, state: SlotState, q_new, qprep_new,
-                     slot_ids, ef_eff_new, budget_new) -> SlotState:
+                     slot_ids, ef_eff_new, budget_new, *,
+                     deferred: bool = False) -> SlotState:
     """Descend the admission batch through the routing layers (the same
     per-layer programs as ``_search_batched_impl``) and scatter the
     fresh layer-0 state into the chosen slots. The admission width is
     FIXED (pad rows carry slot id >= S and are dropped by the scatter),
     so every admission reuses one compiled program regardless of how
-    many slots actually refill."""
+    many slots actually refill.
+
+    ``deferred`` (static) admits in FILTER space exactly the way the
+    synchronous deferred path does: the entry is scored against the
+    payload and the routing descent traverses on filter distances, so
+    the scattered layer-0 state is bit-identical to the synchronous
+    program's."""
     cfg = db.cfg
     ef = state.F_d.shape[-1]
-    k, _, CAP = _slot_geometry(db, ef)
-    ks = cfg.k_schedule
+    k, _, CAP = _slot_geometry(db, ef, deferred)
+    ks = cfg.k_schedule_for(db.filter_kind, deferred)
     k_of = lambda l: ks[min(l, len(ks) - 1)]
     A = q_new.shape[0]
     ep = jnp.broadcast_to(
         jnp.asarray(db.entry, jnp.int32).reshape(()), (A, 1))
-    ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), q_new)
-    dhe = jnp.ones((A,), jnp.int32)
+    deferred = deferred and db.filter_kind != "none"
+    if deferred:
+        pay = jnp.take(db.low, ep, axis=0)
+        if db.filter_kind == "pca":
+            ep_d = ops.dist_l(pay, qprep_new)
+        elif db.filter_kind == "cascade":
+            ep_d = ops.pq_adc(pay, _cascade_lut(qprep_new,
+                                                pay.shape[-1]))
+        else:
+            ep_d = ops.pq_adc(pay, qprep_new)
+        dhe = jnp.zeros((A,), jnp.int32)
+    else:
+        ep_d = ops.dist_h(jnp.take(db.high, ep, axis=0), q_new)
+        dhe = jnp.ones((A,), jnp.int32)
     for layer in range(len(db.layers) - 1, 0, -1):
         ep_d, ep, _, de = search_layer_batched(
             db, layer, q_new, qprep_new, ep_d, ep,
-            ef=cfg.ef_for_layer(layer), k=k_of(layer))
+            ef=cfg.ef_for_layer(layer), k=k_of(layer),
+            deferred=deferred)
         dhe = dhe + de
     C_d, C_i, F_d, F_i, V, Cp = _layer_init(
         db, ep_d, ep, ef=ef, k=k, CAP=CAP,
@@ -816,19 +919,24 @@ def _slot_admit_impl(db: PackedDB, state: SlotState, q_new, qprep_new,
 
 
 def _slot_step_impl(db: PackedDB, state: SlotState, *, quantum: int,
-                    expand_width: int) -> SlotState:
+                    expand_width: int,
+                    deferred: bool = False) -> SlotState:
     """Advance every live slot by up to ``quantum`` iterations of the
     layer-0 body — the SAME ``_layer_body`` the synchronous search
     compiles, with the per-slot ``ef_eff``/``budget`` data
     generalizations active. The loop exits early once no slot can make
     progress (all done or budget-frozen), so a sparse bank costs what
-    its live slots cost."""
+    its live slots cost. ``deferred`` (static) traverses on filter
+    distances — the slot's F list then holds FILTER-space candidates
+    and the scheduler runs the single batched Dist.H pass at
+    retirement."""
     ef = state.F_d.shape[-1]
     k = state.Cp.shape[-1]
     body = _layer_body(db, 0, state.q_high, state.qprep, ef=ef, k=k,
                        W=expand_width, steps=0,
                        filter_deleted=db.deleted is not None,
-                       deferred=False, ef_eff=state.ef_eff,
+                       deferred=deferred and db.filter_kind != "none",
+                       ef_eff=state.ef_eff,
                        budget=state.budget)
     st = (jnp.int32(0), state.C_d, state.C_i, state.F_d, state.F_i,
           state.V, state.Cp, state.done, state.nsteps, state.dhe)
@@ -844,36 +952,43 @@ def _slot_step_impl(db: PackedDB, state: SlotState, *, quantum: int,
         done=done, nsteps=nsteps, dhe=dhe)
 
 
-_slot_admit_jit = jax.jit(_slot_admit_impl)
+_slot_admit_jit = jax.jit(_slot_admit_impl,
+                          static_argnames=("deferred",))
 
 
-@functools.partial(jax.jit, static_argnames=("quantum", "expand_width"))
-def _slot_step_jit(db, state, quantum, expand_width):
+@functools.partial(jax.jit, static_argnames=("quantum", "expand_width",
+                                             "deferred"))
+def _slot_step_jit(db, state, quantum, expand_width, deferred=False):
     return _slot_step_impl(db, state, quantum=quantum,
-                           expand_width=expand_width)
+                           expand_width=expand_width, deferred=deferred)
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("deferred",))
 def _slot_admit_sharded_jit(db_stack, state, q_new, qprep_new, slot_ids,
-                            ef_eff_new, budget_new):
+                            ef_eff_new, budget_new, deferred=False):
     """Admission over a stacked-leaf PackedDB view of a ShardedDB
     ([P, ...] leaves; ``core.distributed.stacked_db_view``): each shard
     descends its own graph for the SAME queries into the SAME slots."""
     return jax.vmap(
         lambda d, s: _slot_admit_impl(d, s, q_new, qprep_new, slot_ids,
-                                      ef_eff_new, budget_new)
+                                      ef_eff_new, budget_new,
+                                      deferred=deferred)
     )(db_stack, state)
 
 
-@functools.partial(jax.jit, static_argnames=("quantum", "expand_width"))
-def _slot_step_sharded_jit(db_stack, state, quantum, expand_width):
+@functools.partial(jax.jit, static_argnames=("quantum", "expand_width",
+                                             "deferred"))
+def _slot_step_sharded_jit(db_stack, state, quantum, expand_width,
+                           deferred=False):
     return jax.vmap(
         lambda d, s: _slot_step_impl(d, s, quantum=quantum,
-                                     expand_width=expand_width)
+                                     expand_width=expand_width,
+                                     deferred=deferred)
     )(db_stack, state)
 
 
-def _slot_step_prefix_impl(db, state, *, width, quantum, expand_width):
+def _slot_step_prefix_impl(db, state, *, width, quantum, expand_width,
+                           deferred=False):
     """Step only the first ``width`` slots of the bank — the WIDTH
     LADDER. Slots are allocated low-first, so at partial occupancy the
     scheduler steps the smallest compiled prefix covering the highest
@@ -882,74 +997,115 @@ def _slot_step_prefix_impl(db, state, *, width, quantum, expand_width):
     zero-recompile)."""
     part = jax.tree_util.tree_map(lambda a: a[:width], state)
     part = _slot_step_impl(db, part, quantum=quantum,
-                           expand_width=expand_width)
+                           expand_width=expand_width, deferred=deferred)
     return jax.tree_util.tree_map(lambda f, p: f.at[:width].set(p),
                                   state, part)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("width", "quantum", "expand_width"))
-def _slot_step_prefix_jit(db, state, width, quantum, expand_width):
+                   static_argnames=("width", "quantum", "expand_width",
+                                    "deferred"))
+def _slot_step_prefix_jit(db, state, width, quantum, expand_width,
+                          deferred=False):
     return _slot_step_prefix_impl(db, state, width=width,
                                   quantum=quantum,
-                                  expand_width=expand_width)
+                                  expand_width=expand_width,
+                                  deferred=deferred)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("width", "quantum", "expand_width"))
+                   static_argnames=("width", "quantum", "expand_width",
+                                    "deferred"))
 def _slot_step_prefix_sharded_jit(db_stack, state, width, quantum,
-                                  expand_width):
+                                  expand_width, deferred=False):
     return jax.vmap(
         lambda d, s: _slot_step_prefix_impl(d, s, width=width,
                                             quantum=quantum,
-                                            expand_width=expand_width)
+                                            expand_width=expand_width,
+                                            deferred=deferred)
     )(db_stack, state)
 
 
 def _slot_admit_step_impl(db, state, q_new, qprep_new, slot_ids,
                           ef_eff_new, budget_new, *, width, quantum,
-                          expand_width):
+                          expand_width, deferred=False):
     """One FUSED tick program: admission scatter + prefix step in a
     single compiled call — the same content as the synchronous search
     (upper-layer descent, then the layer-0 loop), so a tick with
     arrivals costs one dispatch and never materializes the
     intermediate post-admission state."""
     state = _slot_admit_impl(db, state, q_new, qprep_new, slot_ids,
-                             ef_eff_new, budget_new)
+                             ef_eff_new, budget_new, deferred=deferred)
     return _slot_step_prefix_impl(db, state, width=width,
                                   quantum=quantum,
-                                  expand_width=expand_width)
+                                  expand_width=expand_width,
+                                  deferred=deferred)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("width", "quantum", "expand_width"))
+                   static_argnames=("width", "quantum", "expand_width",
+                                    "deferred"))
 def _slot_admit_step_jit(db, state, q_new, qprep_new, slot_ids,
                          ef_eff_new, budget_new, width, quantum,
-                         expand_width):
+                         expand_width, deferred=False):
     return _slot_admit_step_impl(db, state, q_new, qprep_new, slot_ids,
                                  ef_eff_new, budget_new, width=width,
                                  quantum=quantum,
-                                 expand_width=expand_width)
+                                 expand_width=expand_width,
+                                 deferred=deferred)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("width", "quantum", "expand_width"))
+                   static_argnames=("width", "quantum", "expand_width",
+                                    "deferred"))
 def _slot_admit_step_sharded_jit(db_stack, state, q_new, qprep_new,
                                  slot_ids, ef_eff_new, budget_new,
-                                 width, quantum, expand_width):
+                                 width, quantum, expand_width,
+                                 deferred=False):
     return jax.vmap(
         lambda d, s: _slot_admit_step_impl(
             d, s, q_new, qprep_new, slot_ids, ef_eff_new, budget_new,
-            width=width, quantum=quantum, expand_width=expand_width)
+            width=width, quantum=quantum, expand_width=expand_width,
+            deferred=deferred)
     )(db_stack, state)
+
+
+@jax.jit
+def _retire_rerank_jit(db, queries, fi):
+    """The scheduler's deferred Dist.H retirement pass: the EXACT final
+    block of the synchronous deferred program (one batched Dist.H over
+    the filter-space list, then the same stable rank sort) applied to a
+    fixed-width batch of retiring slots — non-retiring pad rows carry
+    ``fi = -1`` everywhere and cost only masked lanes. Bit-parity with
+    ``run_stream_sync`` depends on this being the same op sequence."""
+    ok = fi >= 0
+    xh = jnp.take(db.high, jnp.maximum(fi, 0), axis=0)
+    dh = jnp.where(ok, ops.dist_h(xh, queries), INF)
+    rd, ri = _rank_sort_with_payload(dh, jnp.where(ok, fi, -1))
+    return rd, ri, ok.sum(axis=1, dtype=jnp.int32)
+
+
+@jax.jit
+def _retire_promote_jit(db, qprep, fi, n_keep):
+    """The scheduler's cascade promote pass at retirement: PCA-score
+    the side-car rows of the retiring slots' PQ-space lists and keep
+    each slot's best ``n_keep`` (data, per-slot) — the slotted twin of
+    the promote stage in ``_search_batched_impl``."""
+    ok = fi >= 0
+    mid = jnp.take(db.low2, jnp.maximum(fi, 0), axis=0)
+    qpca = _cascade_qpca(qprep, db.low.shape[-1])
+    dm = jnp.where(ok, ops.dist_l(mid, qpca), INF)
+    pd, pi = _rank_sort_with_payload(dm, jnp.where(ok, fi, -1))
+    keep = jnp.arange(pd.shape[1])[None, :] < n_keep[:, None]
+    return jnp.where(keep, pd, INF), jnp.where(keep, pi, -1)
 
 
 def slot_cache_sizes() -> Tuple[int, ...]:
     """(step, admit, step_sharded, admit_sharded, step_prefix,
-    step_prefix_sharded, admit_step, admit_step_sharded)
-    compiled-program cache sizes — the scheduler's
-    zero-recompile-under-churn assertions read these (same pattern as
-    ``core.distributed.search_cache_sizes``)."""
+    step_prefix_sharded, admit_step, admit_step_sharded,
+    retire_rerank, retire_promote) compiled-program cache sizes — the
+    scheduler's zero-recompile-under-churn assertions read these (same
+    pattern as ``core.distributed.search_cache_sizes``)."""
     return (_slot_step_jit._cache_size(),
             _slot_admit_jit._cache_size(),
             _slot_step_sharded_jit._cache_size(),
@@ -957,4 +1113,6 @@ def slot_cache_sizes() -> Tuple[int, ...]:
             _slot_step_prefix_jit._cache_size(),
             _slot_step_prefix_sharded_jit._cache_size(),
             _slot_admit_step_jit._cache_size(),
-            _slot_admit_step_sharded_jit._cache_size())
+            _slot_admit_step_sharded_jit._cache_size(),
+            _retire_rerank_jit._cache_size(),
+            _retire_promote_jit._cache_size())

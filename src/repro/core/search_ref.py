@@ -41,7 +41,8 @@ class SearchStats:
     """Algorithmic + memory-event counters for ONE query."""
     expansions: int = 0          # node expansions (step-2 loops)
     dist_high: int = 0           # high-dim distance computations
-    dist_low: int = 0            # low-dim distance computations
+    dist_low: int = 0            # low-dim (in-loop filter) distances
+    dist_mid: int = 0            # cascade promote-stage distances
     ksort_calls: int = 0         # kSort.L invocations
     minh_calls: int = 0          # Min.H invocations
     visit_checks: int = 0        # Visit&Raw SPM reads
@@ -261,6 +262,22 @@ def _filter_layer(g: HNSWGraph, filt, payload: np.ndarray, q: np.ndarray,
     return sorted([(-d, e) for d, e in F])
 
 
+def _promote_trim(filt, qprep, payload_mid, ids, n_keep: int,
+                  st: SearchStats) -> np.ndarray:
+    """The cascade's promote stage, host oracle: score the candidates'
+    side-car PCA rows against the projected query and keep the best
+    ``n_keep`` (stable sort — exact mid-score ties keep the incoming
+    PQ-space order, mirroring the batched engine's slot-order
+    tie-break). Accounts one irregular side-car fetch + one low-dim
+    distance per candidate."""
+    mids = payload_mid[ids]
+    dm = filt.mid_dists(qprep, mids)
+    st.dist_mid += len(ids)
+    st.rand_accesses += len(ids)
+    st.rand_bytes += len(ids) * filt.mid_bytes_per_vec
+    return ids[np.argsort(dm, kind="stable")][:n_keep]
+
+
 def search_filtered(g: HNSWGraph, filt, payload: Optional[np.ndarray],
                     q: np.ndarray, *,
                     layout: Literal["packed", "separate"] = "packed",
@@ -268,6 +285,8 @@ def search_filtered(g: HNSWGraph, filt, payload: Optional[np.ndarray],
                     ef0: Optional[int] = None,
                     deleted: Optional[np.ndarray] = None,
                     deferred: bool = False, rerank_mult: int = 1,
+                    promote_mult: int = 1,
+                    payload_mid: Optional[np.ndarray] = None,
                     final_rerank: bool = True
                     ) -> Tuple[np.ndarray, SearchStats]:
     """Reference search under any filter x rerank combination — the
@@ -281,13 +300,24 @@ def search_filtered(g: HNSWGraph, filt, payload: Optional[np.ndarray],
     re-ranks them with high-dim distances in one batch;
     ``final_rerank=False`` skips that re-rank and returns the WIDE
     filter-space list (ascending filter distance) — the sharded oracle
-    merges per-shard lists first and re-ranks once globally."""
+    merges per-shard lists first and re-ranks once globally.
+
+    The deferred CASCADE (``filt.kind == "cascade"``; needs
+    ``payload_mid = filt.encode_mid(x)``) widens layer 0 further to
+    ``promote_mult * ef0`` PQ-space candidates and trims them back to
+    ``rerank_mult * ef0`` with the PCA mid-stage score (ONE batch per
+    query) before the single Dist.H pass."""
     cfg = g.cfg
     if filt.kind == "none":
         return search_hnsw(g, q, ef0=ef0, deleted=deleted)
+    cascade = deferred and filt.kind == "cascade"
+    if cascade:
+        assert payload_mid is not None, \
+            "the deferred cascade oracle needs payload_mid"
+        promote_mult = max(int(promote_mult), int(rerank_mult))
     st = SearchStats()
     qprep = filt.prepare(q[None])[0]
-    ks = k_schedule or cfg.k_schedule
+    ks = k_schedule or cfg.k_schedule_for(filt.kind, deferred)
     k_of = lambda l: ks[min(l, len(ks) - 1)]
     ep = [g.entry]
     top = int(g.levels.max())
@@ -298,12 +328,16 @@ def search_filtered(g: HNSWGraph, filt, payload: Optional[np.ndarray],
         ep = [res[0][1]]
     # tombstones filter only at the output layer (upper layers route)
     ef_out = ef0 or cfg.ef0
-    ef_run = ef_out * rerank_mult if deferred else ef_out
+    wide_mult = promote_mult if cascade else rerank_mult
+    ef_run = ef_out * wide_mult if deferred else ef_out
     res = _filter_layer(g, filt, payload, q, qprep, ep, ef_run, k_of(0),
                         0, st, layout, deleted=deleted, deferred=deferred)
     ids = np.array([e for _, e in res], np.int64)
     if deferred and not final_rerank:
         return ids, st
+    if cascade and len(ids):
+        ids = _promote_trim(filt, qprep, payload_mid, ids,
+                            ef_out * rerank_mult, st)
     if deferred and len(ids):
         # the deferred high-dim re-rank: ONE batch of Dist.H over the
         # final filter-space list (stable sort keeps the filter order
@@ -342,14 +376,20 @@ def search_sharded(graphs, filt, payloads, q: np.ndarray, *,
                    k_schedule: Optional[Tuple[int, ...]] = None,
                    ef0: Optional[int] = None,
                    deleted=None,
-                   deferred: bool = False, rerank_mult: int = 1
+                   deferred: bool = False, rerank_mult: int = 1,
+                   promote_mult: int = 1, payload_mids=None
                    ) -> Tuple[np.ndarray, SearchStats]:
     """The sharded reference: ``search_filtered`` per shard + the
     host-side cross-shard merge, mirroring ``distributed_search``
     exactly — per-shard lists (high-dim keyed normally, WIDE
     filter-space keyed when deferred), a global merge with ties broken
     by (lower shard, lower slot), and when deferred ONE global high-dim
-    re-rank over the merged list.
+    re-rank over the merged list. The deferred cascade (needs
+    ``payload_mids``, per-shard ``filt.encode_mid`` rows) merges the
+    per-shard ``promote_mult * ef0`` lists on PQ distances, runs the
+    PCA promote trim ONCE globally over the merged list, then the
+    single global Dist.H pass — promote and re-rank both happen after
+    the cross-shard merge, exactly like the device path's psum stages.
 
     ``graphs``: per-shard ``HNSWGraph`` (independent builds over ONE
     shared ``filt``); ``payloads``: per-shard ``filt.encode`` rows;
@@ -358,7 +398,11 @@ def search_sharded(graphs, filt, payloads, q: np.ndarray, *,
     cfg = graphs[0].cfg
     ef_out = ef0 or cfg.ef0
     deferred = deferred and filt.kind != "none"
-    E = ef_out * rerank_mult if deferred else ef_out
+    cascade = deferred and filt.kind == "cascade"
+    if cascade:
+        promote_mult = max(int(promote_mult), int(rerank_mult))
+    wide_mult = promote_mult if cascade else rerank_mult
+    E = ef_out * wide_mult if deferred else ef_out
     qprep = filt.prepare(q[None])[0] if filt.kind != "none" else None
     tot = SearchStats()
     keys, shards, slots, gids, locs = [], [], [], [], []
@@ -369,6 +413,9 @@ def search_sharded(graphs, filt, payloads, q: np.ndarray, *,
                                   k_schedule=k_schedule, ef0=ef0,
                                   deleted=dele, deferred=deferred,
                                   rerank_mult=rerank_mult,
+                                  promote_mult=promote_mult,
+                                  payload_mid=None if payload_mids is
+                                  None else payload_mids[s],
                                   final_rerank=False)
         tot.add(st)
         if len(ids):
@@ -392,6 +439,16 @@ def search_sharded(graphs, filt, payloads, q: np.ndarray, *,
     gid = np.concatenate(gids)
     loc = np.concatenate(locs)
     order = np.lexsort((slot, shard, key))[:E]
+    if cascade:
+        # the GLOBAL promote trim: PCA mid-stage scores over the merged
+        # PQ-space list (stable — merge-order ties preserved)
+        mids = np.stack([payload_mids[shard[i]][loc[i]] for i in order])
+        dm = filt.mid_dists(qprep, mids)
+        tot.dist_mid += len(order)
+        tot.rand_accesses += len(order)
+        tot.rand_bytes += len(order) * filt.mid_bytes_per_vec
+        order = order[np.argsort(dm, kind="stable")][
+            :ef_out * rerank_mult]
     if deferred:
         # ONE global batched Dist.H over the merged filter-space list
         xh = np.stack([graphs[shard[i]].x[loc[i]] for i in order])
@@ -417,7 +474,8 @@ def run_queries(g: HNSWGraph, queries: np.ndarray, truth: np.ndarray,
                 layout="packed", k_schedule=None, hw_mode: bool = False,
                 deleted: Optional[np.ndarray] = None,
                 filt=None, payload=None, deferred: bool = False,
-                rerank_mult: int = 1):
+                rerank_mult: int = 1, promote_mult: int = 1,
+                payload_mid=None):
     """Run all queries; returns (mean recall@cfg.recall_at, total
     stats). ``algo="filtered"`` (with ``filt``/``payload``) runs the
     generalized filter x rerank oracle; "phnsw"/"hnsw" keep the seed
@@ -435,7 +493,9 @@ def run_queries(g: HNSWGraph, queries: np.ndarray, truth: np.ndarray,
                                         k_schedule=k_schedule,
                                         deleted=deleted,
                                         deferred=deferred,
-                                        rerank_mult=rerank_mult)
+                                        rerank_mult=rerank_mult,
+                                        promote_mult=promote_mult,
+                                        payload_mid=payload_mid)
         else:
             found, st = search_phnsw(g, x_low, pca, q, layout=layout,
                                      k_schedule=k_schedule,

@@ -55,8 +55,9 @@ from repro.configs.base import PHNSWConfig
 from repro.distributed.faults import SnapshotCorruptError
 from repro.constants import INF
 from repro.core.build import link_wave, pad_rows_pow2, pairwise_sq
-from repro.core.filters import (FilterSpec, IdentityFilter, PCAFilter,
-                                PQFilter, make_filter)
+from repro.core.filters import (CascadeFilter, FilterSpec,
+                                IdentityFilter, PCAFilter, PQFilter,
+                                make_filter)
 from repro.core.graph import (HNSWGraph, _select_heuristic, build_hnsw,
                               sample_levels)
 from repro.core.pca import PCA, fit_pca
@@ -199,10 +200,10 @@ class MutableIndex:
         cap = _next_pow2(n, cfg.min_capacity)
         self.cfg = cfg
         self.filt = _as_filter(pca, cfg)
-        # PCA-filter convenience (drift checks, seed callers); None for
-        # the other filter kinds
-        self.pca = self.filt.pca if isinstance(self.filt, PCAFilter) \
-            else None
+        # PCA convenience handle (drift checks, seed callers): the
+        # PCAFilter's projection, or the cascade's mid-stage projection;
+        # None for the other filter kinds
+        self.pca = getattr(self.filt, "pca", None)
         self.n, self.cap = n, cap
         self.entry = int(entry)
         self.epoch = epoch
@@ -215,6 +216,14 @@ class MutableIndex:
         # identity); the name survives from the PCA-only engine
         self.x_low = np.zeros((cap, dl), self.filt.payload_dtype)
         self.x_low[:n] = x_low
+        # the cascade's mid-stage side-car (PCA rows scored by the
+        # promote pass) — recomputed from x, so compaction/restore need
+        # no extra plumbing; None for single-stage filters
+        self.x_mid: Optional[np.ndarray] = None
+        if hasattr(self.filt, "encode_mid"):
+            xm = self.filt.encode_mid(x)
+            self.x_mid = np.zeros((cap, xm.shape[1]), np.float32)
+            self.x_mid[:n] = xm
         self.levels = np.full(cap, -1, np.int64)
         self.levels[:n] = levels
         # tombstones: real deletions in [:n]; pad slots are born deleted
@@ -310,6 +319,8 @@ class MutableIndex:
         self._dev_low = jnp.asarray(self.x_low, dt)
         self._dev_high = jnp.asarray(self.x)
         self._dev_deleted = jnp.asarray(_pack_bitmap(self.deleted))
+        self._dev_low2 = None if self.x_mid is None \
+            else jnp.asarray(self.x_mid)
         self._swap()
 
     def _publish_incremental(self, dirty: List[set], new_ids: np.ndarray,
@@ -328,6 +339,9 @@ class MutableIndex:
                 jnp.asarray(self.x[rows]))
             self._dev_low = self._dev_low.at[rows].set(
                 jnp.asarray(self.x_low[rows], dt))
+            if self._dev_low2 is not None:
+                self._dev_low2 = self._dev_low2.at[rows].set(
+                    jnp.asarray(self.x_mid[rows]))
         for l in range(self.top + 1):
             if not dirty[l]:
                 continue
@@ -359,6 +373,7 @@ class MutableIndex:
         self._db = PackedDB(layers=layers, low=self._dev_low,
                             high=self._dev_high, entry=self.entry,
                             cfg=self.cfg, deleted=self._dev_deleted,
+                            low2=self._dev_low2,
                             filter_kind=self.filt.kind)
 
     @property
@@ -420,6 +435,10 @@ class MutableIndex:
         self.x_low = np.concatenate(
             [self.x_low, np.zeros((pad, self.x_low.shape[1]),
                                   self.x_low.dtype)])
+        if self.x_mid is not None:
+            self.x_mid = np.concatenate(
+                [self.x_mid, np.zeros((pad, self.x_mid.shape[1]),
+                                      np.float32)])
         self.levels = np.concatenate(
             [self.levels, np.full(pad, -1, np.int64)])
         self.deleted = np.concatenate([self.deleted, np.ones(pad, bool)])
@@ -459,6 +478,8 @@ class MutableIndex:
         # peers are visible as candidates) ---
         self.x[ids] = xb
         self.x_low[ids] = xl
+        if self.x_mid is not None:
+            self.x_mid[ids] = self.filt.encode_mid(xb)
         self.levels[ids] = lvls
         self.deleted[ids] = False
         self.n += b
@@ -623,6 +644,13 @@ class MutableIndex:
                                pca_explained=self.pca.explained)
         elif fk == "pq":
             filt_arrays = dict(pq_centroids=self.filt.cb.centroids)
+        elif fk == "cascade":
+            # both stages' parameters: the PQ traversal codebook AND
+            # the PCA promote projection (x_mid is recomputed on load)
+            filt_arrays = dict(pq_centroids=self.filt.cb.centroids,
+                               pca_mean=self.pca.mean,
+                               pca_components=self.pca.components,
+                               pca_explained=self.pca.explained)
         return dict(
             n=np.int64(self.n), entry=np.int64(self.entry),
             epoch=np.int64(self.epoch),
@@ -651,6 +679,11 @@ class MutableIndex:
                 low_dtype=cfg.low_dtype)
         elif fk == "pq":
             filt = PQFilter(PQCodebook(centroids=z["pq_centroids"]))
+        elif fk == "cascade":
+            filt = CascadeFilter(
+                PQCodebook(centroids=z["pq_centroids"]),
+                PCA(mean=z["pca_mean"], components=z["pca_components"],
+                    explained=z["pca_explained"]))
         else:
             filt = IdentityFilter(dim=z["x"].shape[1])
         n_layers = int(z["n_layers"])

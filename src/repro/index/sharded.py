@@ -191,6 +191,8 @@ class ShardedMutableIndex:
             counts=jnp.asarray([stride] * Pn, jnp.int32),
             cfg=self.cfg,
             deleted=jnp.stack([s._dev_deleted for s in self.shards]),
+            low2=None if self.shards[0]._dev_low2 is None else
+            jnp.stack([s._dev_low2 for s in self.shards]),
             filter_kind=self.filt.kind,
         )
         pub.set(n_layers=n_pub)

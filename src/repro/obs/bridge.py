@@ -61,23 +61,34 @@ def predicted_query_ns(cfg, *, steps_mean: float, dist_h_mean: float,
     ew = max(cfg.expand_width, 1)
     steps = float(steps_mean)
     dist_h = float(dist_h_mean)
+    # cascade promote stage: one batched PCA pass over the wide
+    # PQ-space exit list (ef0 * promote_mult side-car gathers + mid
+    # distances), once per query
+    mid_evals = 0.0
+    mid_bytes = 0
+    if filt is not None and hasattr(filt, "mid_cost_dims"):
+        mid_evals = float(cfg.ef0 * max(cfg.promote_mult,
+                                        cfg.rerank_mult))
+        mid_bytes = filt.mid_bytes_per_vec
     # layout-(3) packed row: M neighbor ids + M inline payloads
     row_bytes = M * (4 + payload_bytes)
     st = SearchStats(
         expansions=steps * ew,
         dist_low=steps * ew * M,
+        dist_mid=mid_evals,
         dist_high=dist_h,
         ksort_calls=steps,
         minh_calls=steps,
         visit_checks=steps * ew * M,
         f_updates=steps * ew,
         evictions=steps,
-        rand_accesses=steps * ew + dist_h,
-        rand_bytes=steps * ew * row_bytes + dist_h * cfg.dim * 4,
+        rand_accesses=steps * ew + dist_h + mid_evals,
+        rand_bytes=steps * ew * row_bytes + dist_h * cfg.dim * 4
+        + mid_evals * mid_bytes,
         seq_bursts=0, seq_bytes=0,
     )
     return query_cost(st, n_queries=1, dim=cfg.dim, d_low=d_low,
-                      dram=dram).total_ns
+                      dram=dram, filt=filt).total_ns
 
 
 def record_search_stats(stats: dict, *, wall_s: Optional[float] = None,

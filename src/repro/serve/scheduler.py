@@ -69,8 +69,8 @@ from repro.core.distributed import stacked_db_view
 
 class SchedulerUnsupported(RuntimeError):
     """The service's configuration has no slotted program (mesh
-    collectives, deferred re-ranking): callers fall back to the
-    synchronous ``run_stream_sync``."""
+    collectives, sharded deferred re-ranking): callers fall back to
+    the synchronous ``run_stream_sync``."""
 
 
 @dataclass
@@ -124,14 +124,30 @@ class StreamScheduler:
                 "the mesh collective path has no slotted program; "
                 "serve via the host path or run_stream_sync")
         snap = svc.sdb if svc.sdb is not None else svc.db
-        if snap.cfg.deferred_rerank and snap.filter_kind != "none":
-            raise SchedulerUnsupported(
-                "deferred re-ranking re-ranks whole batches after "
-                "traversal; the slotted path serves per-step modes")
-        self.svc = svc
         self.sharded = svc.sdb is not None
+        # DEFERRED re-ranking (single-shard host path): slots traverse
+        # in filter space at the WIDE pool width and the promote
+        # (cascade) + Dist.H passes run batched over each tick's
+        # retiring slots — the exact final blocks of the synchronous
+        # deferred program, so run_stream stays bit-equal to
+        # run_stream_sync. The sharded deferred merge-then-rerank is
+        # not slotted yet.
+        self.deferred = bool(snap.cfg.deferred_rerank
+                             and snap.filter_kind != "none")
+        if self.deferred and self.sharded:
+            raise SchedulerUnsupported(
+                "sharded deferred re-ranking merges per-shard lists "
+                "before the global re-rank; serve via run_stream_sync")
+        self.cascade = self.deferred and snap.filter_kind == "cascade"
+        self.rm = int(snap.cfg.rerank_mult) if self.deferred else 1
+        # wide = the slot list's pool multiplier: the cascade's promote
+        # pool, else the re-rank pool (1 when not deferred)
+        self.wide = max(int(snap.cfg.promote_mult), self.rm) \
+            if self.cascade else self.rm
+        self.svc = svc
         self.cfg = snap.cfg
         self.EF = int(ef or svc.ef0)
+        self.EFW = self.EF * self.wide   # compiled slot list width
         self.ef_policy = int(min(ef_policy or svc.ef0, self.EF))
         self.S = int(n_slots or svc.batch)
         self.quantum = int(quantum)
@@ -163,6 +179,8 @@ class StreamScheduler:
         self._rid_of = np.full(self.S, -1, np.int64)
         self._budget = np.zeros(self.S, np.int32)
         self._cap = np.zeros(self.S, np.int32)
+        # per-slot promote-keep width (cascade: ef_eff * rerank_mult)
+        self._keep = np.zeros(self.S, np.int32)
         self._meta: Dict[int, _Pending] = {}
         self._queue: Deque[_Pending] = deque()
         self._next_rid = 0
@@ -173,8 +191,9 @@ class StreamScheduler:
         qp_ex = svc.filt.prepare(np.zeros((1, D), np.float32))
         dbv = self._db()
         self.state = sj.make_slot_state(
-            dbv, self.S, np.asarray(qp_ex), ef=self.EF,
-            n_shards=snap.n_shards if self.sharded else None)
+            dbv, self.S, np.asarray(qp_ex), ef=self.EFW,
+            n_shards=snap.n_shards if self.sharded else None,
+            deferred=self.deferred)
         if self.sharded:
             self._offsets = np.asarray(svc.sdb.offsets, np.int64)
         # WIDTH LADDER: slots are allocated low-first and each tick
@@ -191,9 +210,19 @@ class StreamScheduler:
             self.state = self._admit_step_call(
                 dbv, np.zeros((wd, D), np.float32),
                 np.full(wd, self.S, np.int32),
-                np.full(wd, self.EF, np.int32),
+                np.full(wd, self.EFW, np.int32),
                 np.zeros(wd, np.int32), wd)
             self.state = self._step_call(dbv, wd)
+        if self.deferred:
+            # warm the retirement passes too (all-pad rows): steady
+            # state then never compiles, even on the first real retire
+            pad_fi = jnp.full((self.S, self.EFW), -1, jnp.int32)
+            if self.cascade:
+                sj._retire_promote_jit(
+                    self.svc.db, self.state.qprep, pad_fi,
+                    jnp.zeros((self.S,), jnp.int32))
+            sj._retire_rerank_jit(self.svc.db, self.state.q_high,
+                                  pad_fi)
 
     # -- plumbing ----------------------------------------------------------
 
@@ -225,16 +254,19 @@ class StreamScheduler:
                 jnp.asarray(budget))
         fn = sj._slot_admit_step_sharded_jit if self.sharded \
             else sj._slot_admit_step_jit
-        return fn(dbv, self.state, *args, width, self.quantum, self.W)
+        return fn(dbv, self.state, *args, width, self.quantum, self.W,
+                  self.deferred)
 
     def _step_call(self, dbv, width):
         if width >= self.S:
             fn = sj._slot_step_sharded_jit if self.sharded \
                 else sj._slot_step_jit
-            return fn(dbv, self.state, self.quantum, self.W)
+            return fn(dbv, self.state, self.quantum, self.W,
+                      self.deferred)
         fn = sj._slot_step_prefix_sharded_jit if self.sharded \
             else sj._slot_step_prefix_jit
-        return fn(dbv, self.state, width, self.quantum, self.W)
+        return fn(dbv, self.state, width, self.quantum, self.W,
+                  self.deferred)
 
     def _push_budget(self) -> None:
         b = jnp.asarray(self._budget)
@@ -331,6 +363,7 @@ class StreamScheduler:
             self._rid_of[s] = p.rid
             self._budget[s] = self._initial_budget(p.ef_eff)
             self._cap[s] = self._static_cap(p.ef_eff)
+            self._keep[s] = p.ef_eff * self.rm
             self._meta[p.rid] = p
         occ = np.nonzero(self._rid_of >= 0)[0]
         if not len(occ):
@@ -340,13 +373,15 @@ class StreamScheduler:
         if take:
             q_new = np.zeros((wd, self._D), np.float32)
             slot_ids = np.full(wd, self.S, np.int32)
-            ef_eff = np.full(wd, self.EF, np.int32)
+            ef_eff = np.full(wd, self.EFW, np.int32)
             budget = np.zeros(wd, np.int32)
             for row, p in enumerate(take):
                 s = int(free[row])
                 q_new[row] = p.q
                 slot_ids[row] = s
-                ef_eff[row] = p.ef_eff
+                # deferred slots hold the WIDE filter-space pool, so
+                # the effective ef register scales with it
+                ef_eff[row] = p.ef_eff * self.wide
                 budget[row] = self._budget[s]
                 p.q = None
             self.state = self._admit_step_call(dbv, q_new, slot_ids,
@@ -400,6 +435,21 @@ class StreamScheduler:
             return []
         fd = np.asarray(self.state.F_d)
         fi = np.asarray(self.state.F_i)
+        if self.deferred:
+            # the deferred promote (cascade) + Dist.H passes, batched
+            # over THIS tick's retiring slots at the full bank width
+            # (non-retiring rows ride as fi = -1 pads — pure data, one
+            # compiled shape): the exact final blocks of the
+            # synchronous deferred program, so results are bit-equal
+            db = self.svc.db
+            fi_b = jnp.asarray(np.where(finished[:, None], fi, -1))
+            if self.cascade:
+                keep = np.where(finished, self._keep, 0).astype(np.int32)
+                _, fi_b = sj._retire_promote_jit(
+                    db, self.state.qprep, fi_b, jnp.asarray(keep))
+            rd, ri, _ = sj._retire_rerank_jit(db, self.state.q_high,
+                                              fi_b)
+            fd, fi = np.asarray(rd), np.asarray(ri)
         degraded = self.sharded and bool(~live.all())
         cov = self.svc._coverage(live) if degraded else 1.0
         now = time.monotonic()

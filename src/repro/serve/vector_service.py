@@ -437,8 +437,11 @@ class VectorSearchService:
             plan.tick()
         qd = jnp.asarray(q)
         qp = jnp.asarray(self.filt.prepare(q))
-        ef0, _, deferred, rm = _normalize(sdb, self.ef0, None, None, None)
-        E = ef0 * rm if deferred else ef0
+        ef0, _, deferred, rm, pm = _normalize(sdb, self.ef0, None, None,
+                                              None)
+        # per-shard list width: the cascade's promote pool when active
+        # (pm normalizes to 1 for every other config)
+        E = ef0 * max(rm, pm) if deferred else ef0
         fd_all = np.zeros((Pn, len(q), E), np.float32)
         gi_all = np.full((Pn, len(q), E), -1, np.int32)
         answered = np.zeros(Pn, bool)
@@ -500,7 +503,7 @@ class VectorSearchService:
         with span.child("merge", live_shards=int(answered.sum()),
                         n_shards=Pn) as ms:
             fd, fi = merge_surviving(sdb, fd_all, gi_all, answered, qd,
-                                     ef0=self.ef0)
+                                     qprep=qp, ef0=self.ef0)
             degraded = bool(~answered.all())
             cov = self._coverage(answered)
             ms.set(coverage=cov, degraded=degraded, deferred=deferred)
@@ -559,10 +562,14 @@ class VectorSearchService:
     @property
     def scheduler_supported(self) -> bool:
         """Whether the continuous-batching scheduler can serve this
-        configuration (host paths, per-step re-rank modes)."""
+        configuration: host paths, including single-shard deferred
+        re-ranking (the promote/re-rank passes run batched at
+        retirement); the sharded deferred merge-then-rerank is not
+        slotted."""
         snap = self.sdb if self.sdb is not None else self.db
-        return self.mesh is None and not (snap.cfg.deferred_rerank
-                                          and snap.filter_kind != "none")
+        deferred = snap.cfg.deferred_rerank and snap.filter_kind != "none"
+        return self.mesh is None and not (deferred
+                                          and self.sdb is not None)
 
     def scheduler(self, **kw):
         """The service's continuous-batching front-end

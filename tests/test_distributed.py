@@ -38,9 +38,13 @@ def shard_filters(small_dataset, small_graph, small_pca):
     x, _, _ = small_dataset
     cfg_pq = dataclasses.replace(small_graph.cfg, filter_kind="pq",
                                  pq_train_iters=3)
+    cfg_c = dataclasses.replace(cfg_pq, filter_kind="cascade",
+                                pq_train_iters=8)
     return {
         "pca": PCAFilter(small_pca),
         "pq": make_filter(cfg_pq, x, seed=0),
+        "cascade": make_filter(cfg_c, x, seed=0, pca=small_pca,
+                               levels=small_graph.levels),
         "none": IdentityFilter(dim=x.shape[1]),
     }
 
@@ -127,7 +131,7 @@ def test_compression_roundtrip():
     assert nbytes < orig / 3   # ~4x compression minus scale overhead
 
 
-@pytest.mark.parametrize("kind", ["pca", "pq", "none"])
+@pytest.mark.parametrize("kind", ["pca", "pq", "cascade", "none"])
 @pytest.mark.parametrize("deferred", [False, True])
 def test_distributed_single_shard_parity_bit_equal(
         small_dataset, small_graph, shard_filters, kind, deferred):
@@ -232,6 +236,35 @@ def test_cross_shard_merge_invariants(P, E, data):
         np.testing.assert_array_equal(mi, fi[0])
 
 
+@settings(deadline=None, max_examples=40)
+@given(E=st.integers(2, 12), data=st.data())
+def test_global_promote_invariants(E, data):
+    """_global_promote (the cascade's cross-shard mid-stage trim) is a
+    STABLE sort of the merged list by promote-stage distance with -1
+    pads pushed to INF, trimmed to n_keep — bit-equal to the host
+    oracle's np.argsort(kind="stable") spelling, including duplicate
+    distances, all-pad rows, and n_keep shorter than the valid set."""
+    from repro.constants import INF
+    from repro.core.distributed import _global_promote
+    pool = [0.0, 1.0, 1.0, 2.0, 3.5]
+    dm = np.asarray(data.draw(st.lists(st.sampled_from(pool),
+                                       min_size=E, max_size=E)),
+                    np.float32)
+    mask = np.asarray(data.draw(st.lists(st.booleans(),
+                                         min_size=E, max_size=E)))
+    ids = np.where(mask, np.arange(E, dtype=np.int32) + 100,
+                   np.int32(-1))
+    n_keep = data.draw(st.integers(1, E))
+    pd, pi = _global_promote(jnp.asarray(ids)[None],
+                             jnp.asarray(dm)[None], n_keep)
+    pd, pi = np.asarray(pd[0]), np.asarray(pi[0])
+    keyed = np.where(ids >= 0, dm, np.float32(INF))
+    order = np.argsort(keyed, kind="stable")
+    np.testing.assert_array_equal(pd, keyed[order][:n_keep])
+    np.testing.assert_array_equal(
+        pi, np.where(ids >= 0, ids, -1)[order][:n_keep])
+
+
 # --------- seeded stress: engine vs sharded oracle (ISSUE-4) ---------------
 
 def test_sharded_stress_vs_oracle(small_dataset, small_graph,
@@ -261,6 +294,8 @@ def test_sharded_stress_vs_oracle(small_dataset, small_graph,
     nq = 12
     for kind, filt in shard_filters.items():
         payloads = [filt.encode(x[a:b]) for a, b in bounds]
+        mids = ([filt.encode_mid(x[a:b]) for a, b in bounds]
+                if hasattr(filt, "encode_mid") else None)
         for tombs in (False, True):
             deleted = doomed if tombs else np.zeros(len(x), bool)
             dels = [deleted[a:b] for a, b in bounds]
@@ -270,9 +305,11 @@ def test_sharded_stress_vs_oracle(small_dataset, small_graph,
             qp = filt.prepare_jnp(qd)
             for deferred in ([False, True] if kind != "none"
                              else [False]):
+                pm = max(cfg.promote_mult, RERANK_MULT)
                 _, fi = shard_search_host(sdb, qd, qp,
                                           deferred=deferred,
-                                          rerank_mult=RERANK_MULT)
+                                          rerank_mult=RERANK_MULT,
+                                          promote_mult=pm)
                 fi = np.asarray(fi)
                 assert not deleted[fi.ravel()].any(), \
                     (kind, tombs, deferred)
@@ -280,7 +317,8 @@ def test_sharded_stress_vs_oracle(small_dataset, small_graph,
                 for i in range(nq):
                     ids, _ = search_sharded(
                         graphs, filt, payloads, q[i], deleted=dels,
-                        deferred=deferred, rerank_mult=RERANK_MULT)
+                        deferred=deferred, rerank_mult=RERANK_MULT,
+                        promote_mult=pm, payload_mids=mids)
                     assert not deleted[ids].any()
                     r_r.append(recall_at(ids, gt[i], 10))
                     r_b.append(recall_at(fi[i], gt[i], 10))
@@ -290,7 +328,7 @@ def test_sharded_stress_vs_oracle(small_dataset, small_graph,
                 tag = (kind, tombs, deferred)
                 assert abs(np.mean(r_b) - np.mean(r_r)) <= 0.02, \
                     (tag, np.mean(r_b), np.mean(r_r))
-                floor = 0.7 if kind == "pq" else 0.85
+                floor = 0.7 if kind in ("pq", "cascade") else 0.85
                 assert exact >= floor * nq, (tag, exact, nq)
 
 
@@ -390,6 +428,13 @@ GOLDEN_FLOORS = {
     ("pq", False): 0.87,
     ("pq", True): 0.87,
     ("none", False): 0.94,
+    # the ISSUE-9 acceptance bar: the deferred cascade hits PCA-class
+    # recall on PQ-class inline bytes. The P1 floor is the gate value
+    # itself (deterministic fixture, measured .9958 at
+    # pq_train_iters=16); the P4 twin (measured .9917 — the 2k shard
+    # graphs, not the cascade, are the limiter) gets the usual
+    # measured-minus-margin floor via the (P1, P4) tuple form.
+    ("cascade", True): (0.995, 0.985),
 }
 
 
@@ -418,6 +463,11 @@ def golden8k():
         "pca": PCAFilter(pca),
         "pq": make_filter(_dc.replace(cfg, filter_kind="pq",
                                       pq_train_iters=4), x, seed=0),
+        # the cascade traverses on its codes and only promotes at the
+        # exit, so code quality IS its recall ceiling: full training
+        "cascade": make_filter(_dc.replace(cfg, filter_kind="cascade",
+                                           pq_train_iters=16),
+                               x, seed=0, pca=pca, levels=g1.levels),
         "none": IdentityFilter(dim=x.shape[1]),
     }
     return dict(cfg=cfg, x=x, q=q, gt=gt, g1=g1, graphs4=graphs4,
@@ -447,8 +497,9 @@ def test_golden_recall_floors(golden8k, kind, deferred):
     r4 = float(np.mean([recall_at(fi4[i], d["gt"][i], 10)
                         for i in range(nq)]))
     floor = GOLDEN_FLOORS[(kind, deferred)]
-    assert r1 >= floor, (kind, deferred, "P1", r1)
-    assert r4 >= floor, (kind, deferred, "P4", r4)
+    f1, f4 = floor if isinstance(floor, tuple) else (floor, floor)
+    assert r1 >= f1, (kind, deferred, "P1", r1)
+    assert r4 >= f4, (kind, deferred, "P4", r4)
     assert r4 >= r1 - 0.01, (kind, deferred, r1, r4)
 
 

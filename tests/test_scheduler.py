@@ -145,6 +145,41 @@ def test_zero_recompile_under_churn(stream_setup):
     assert slot_cache_sizes() == warm
 
 
+@pytest.mark.parametrize("kind", ["pca", "cascade"])
+def test_scheduler_deferred_parity_bitwise(small_dataset, small_graph,
+                                           small_pca, kind):
+    """The ISSUE-9 acceptance bar: a deferred-rerank service (PCA and
+    the cascade — whose retire path additionally runs the promote
+    gather off the low2 side-car) serves through the continuous-batching
+    scheduler bit-equal to the synchronous batch path, at healthy
+    recall."""
+    import dataclasses
+    from repro.core.filters import PCAFilter, make_filter
+    from repro.core.search_jax import build_packed
+    from repro.data.vectors import brute_force_topk, make_queries
+    from repro.serve.vector_service import VectorSearchService
+    x, _, _ = small_dataset
+    cfg = dataclasses.replace(small_graph.cfg, deferred_rerank=True,
+                              filter_kind=kind, pq_train_iters=8)
+    if kind == "pca":
+        filt = PCAFilter(small_pca, low_dtype=cfg.low_dtype)
+    else:
+        filt = make_filter(cfg, x, seed=0, pca=small_pca,
+                           levels=small_graph.levels)
+    g = dataclasses.replace(small_graph, cfg=cfg)
+    db = build_packed(g, filt.encode(x), filt=filt)
+    assert db.cfg.deferred_rerank
+    svc = VectorSearchService(db, filt=filt)
+    assert svc.scheduler_supported
+    q = make_queries(x, 120, seed=7)
+    gt = brute_force_topk(x, q, 10)
+    idx_sync, st_sync = svc.run_stream_sync(q)
+    idx_sched, st_sched = svc.run_stream(q, scheduler=True)
+    assert st_sched["path"] == "scheduler"
+    assert np.array_equal(idx_sync.astype(np.int64), idx_sched)
+    assert _recall10(idx_sched, gt) >= 0.9
+
+
 def test_sharded_degraded_scheduler(small_dataset, small_pca):
     """The sharded slotted path serves GLOBAL ids; with a dead shard
     the done gate and the merge exclude it (answers never contain its
